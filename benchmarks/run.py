@@ -1,0 +1,105 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and writes
+full JSON results to experiments/bench/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench", "results")
+
+
+def _derived(name: str, res: dict) -> str:
+    try:
+        if name == "observations":
+            return (f"consistency_corr="
+                    f"{res['cross_input_similarity_consistency_corr']:.3f}")
+        if name == "accuracy":
+            ours = res["summary"]["Ours (SharePrefill)"]
+            return (f"ours_agree={ours['avg_top1_agreement']:.3f}"
+                    f";density={ours['avg_density']:.3f}")
+        if name == "ablation":
+            return (f"ours_kl={res['ours']['kl']:.4f}"
+                    f";wo_sharing_kl={res['ours_wo_sharing(tau=0)']['kl']:.4f}")
+        if name == "perplexity":
+            seq = max(res["perplexity"])
+            return (f"ours_ppl@{seq}="
+                    f"{res['perplexity'][seq]['Ours (SharePrefill)']:.2f}")
+        if name == "latency":
+            seq = max(res["latency"])
+            ours = res["latency"][seq]["Ours (SharePrefill)"]
+            return f"speedup@{seq}={ours['modeled_speedup_vs_dense']:.2f}x"
+        if name == "pattern_dist":
+            t = res["distribution"]["retrieval"]["totals"]
+            return (f"dense={t['dense']:.0f};shared={t['shared']:.0f}"
+                    f";vs={t['vertical_slash']:.0f}")
+        if name == "pooling":
+            return f"pooled_recall={res['pooled_critical_block_recall']:.3f}"
+        if name == "decode_sharing":
+            return (f"traffic={res['decode_traffic_fraction']:.3f}"
+                    f";agree={res['greedy_agreement_sparse_vs_dense_decode']:.2f}")
+        if name == "roofline":
+            return f"rows={res['num_single']};multi_ok={res['num_multi_ok']}"
+    except Exception:
+        pass
+    return "ok"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_ablation,
+        bench_accuracy,
+        bench_decode_sharing,
+        bench_latency,
+        bench_observations,
+        bench_pattern_dist,
+        bench_perplexity,
+        bench_pooling_estimation,
+        bench_roofline,
+    )
+    benches = {
+        "observations": bench_observations.run,      # Figure 2
+        "accuracy": bench_accuracy.run,              # Table 1
+        "ablation": bench_ablation.run,              # Table 2
+        "perplexity": bench_perplexity.run,          # Figure 4
+        "latency": bench_latency.run,                # Figure 5
+        "pattern_dist": bench_pattern_dist.run,      # Figure 6
+        "pooling": bench_pooling_estimation.run,     # §3 critique
+        "decode_sharing": bench_decode_sharing.run,  # beyond-paper (§8 f.w.)
+        "roofline": bench_roofline.run,              # deliverable (g)
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        t0 = time.time()
+        try:
+            res = fn()
+            us = (time.time() - t0) * 1e6
+            with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+                json.dump(res, f, indent=1, default=str)
+            print(f"{name},{us:.0f},{_derived(name, res)}")
+        except Exception as e:
+            failed += 1
+            print(f"{name},-1,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    raise SystemExit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: SharePrefill in 60 lines.
+
+Builds a small GQA model, runs a sparse prefill with pattern sharing, and
+prints the per-layer pattern statistics — the paper's mechanism visible
+end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+ARCH = "granite-3-2b"       # any of the 10 assigned ids works (--arch style)
+
+
+def main():
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # a long prompt (synthetic tokens); block-aligned for sparse prefill
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 512), 0,
+                                cfg.vocab_size)
+
+    # 1. the paper's technique: sparse prefill with pattern sharing
+    sp = model.default_share_prefill()
+    result = model.prefill(params, tokens, sp, method="share")
+    print(f"[share]  last-token logits: {result.last_logits.shape}")
+    print(f"         computed block fraction: "
+          f"{float(result.stats.block_density):.2%}")
+    print(f"         heads/layer — shared: {float(result.stats.num_shared):.1f}"
+          f"  dense: {float(result.stats.num_dense):.1f}"
+          f"  vertical-slash: {float(result.stats.num_vs):.1f}")
+
+    # 2. baseline for comparison: exact dense prefill (FlashAttention-2
+    #    semantics)
+    dense = model.prefill(params, tokens, sp, method="dense")
+    agree = bool(jnp.argmax(result.last_logits, -1)
+                 == jnp.argmax(dense.last_logits, -1))
+    print(f"[dense]  greedy next-token agreement with share: {agree}")
+
+    # 3. decode a few tokens from the sparse-prefill cache
+    from repro.serving.engine import ServingEngine
+    cache = ServingEngine.grow_cache(result.cache, 512, 8)
+    tok = jnp.argmax(result.last_logits, -1)[:, None]
+    out = [int(tok[0, 0])]
+    for t in range(4):
+        logits, cache = model.decode(params, tok, cache, jnp.int32(512 + t))
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(int(tok[0, 0]))
+    print(f"[decode] continuation tokens: {out}")
+
+
+if __name__ == "__main__":
+    main()

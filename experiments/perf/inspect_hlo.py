@@ -1,0 +1,21 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, jax
+from repro.launch.steps import build_step
+from repro.launch.mesh import make_production_mesh
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh()
+b = build_step(arch, shape, mesh)
+with mesh:
+    compiled = jax.jit(b.fn, in_shardings=b.in_shardings).lower(*b.args).compile()
+txt = compiled.as_text()
+out = f"experiments/perf/{arch}__{shape}.hlo"
+open(out, "w").write(txt)
+# print collective lines w/ shapes
+for line in txt.splitlines():
+    l = line.strip()
+    m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}/ ]+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", l)
+    if m:
+        print(m.group(2), m.group(1)[:120])
+print("saved", out)

@@ -1,0 +1,10 @@
+from repro.checkpoint.checkpointer import (
+    latest_step,
+    restore_like,
+    restore_step,
+    save,
+    save_step,
+)
+
+__all__ = ["latest_step", "restore_like", "restore_step", "save",
+           "save_step"]

@@ -1,0 +1,80 @@
+"""Checkpointing: flat-key npz snapshots of arbitrary pytrees.
+
+Works for params, optimizer state, and SharePrefill clustering artifacts.
+Multi-host note: each host saves its addressable shards under its own
+directory; restore re-shards via the caller's NamedSharding (device_put).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None,
+         extra_meta: Optional[Dict] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "keys": sorted(flat),
+            "treedef": str(jax.tree.structure(tree))}
+    if extra_meta:
+        meta.update(extra_meta)
+    mpath = re.sub(r"\.npz$", "", path) + ".meta.json"
+    with open(mpath, "w") as f:
+        json.dump(meta, f, indent=1, default=str)
+    return path
+
+
+def restore_like(path: str, template: Any) -> Any:
+    """Restore into the structure of ``template`` (shape/dtype checked)."""
+    f = np.load(path if path.endswith(".npz") else path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(
+            str(getattr(x, "key", getattr(x, "idx", x))) for x in p)
+        arr = f[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}")
+        leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.npz$", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any, **kw) -> str:
+    return save(os.path.join(ckpt_dir, f"step_{step:08d}.npz"), tree,
+                step=step, **kw)
+
+
+def restore_step(ckpt_dir: str, step: int, template: Any) -> Any:
+    return restore_like(os.path.join(ckpt_dir, f"step_{step:08d}.npz"),
+                        template)

@@ -1,0 +1,32 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    EncDecConfig,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    RGLRUConfig,
+    SharePrefillConfig,
+    SSMConfig,
+    VLMConfig,
+    reduced_config,
+)
+from repro.configs.registry import (
+    ASSIGNED,
+    PAPER_MODELS,
+    REGISTRY,
+    SKIP_PAIRS,
+    dryrun_pairs,
+    get_config,
+    get_shape,
+    get_smoke_config,
+    list_archs,
+)
+
+__all__ = [
+    "INPUT_SHAPES", "EncDecConfig", "InputShape", "MLAConfig", "MoEConfig",
+    "ModelConfig", "RGLRUConfig", "SharePrefillConfig", "SSMConfig",
+    "VLMConfig", "reduced_config", "ASSIGNED", "PAPER_MODELS", "REGISTRY",
+    "SKIP_PAIRS", "dryrun_pairs", "get_config", "get_shape",
+    "get_smoke_config", "list_archs",
+]

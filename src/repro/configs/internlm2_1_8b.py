@@ -1,0 +1,15 @@
+"""internlm2-1.8b — dense GQA [arXiv:2403.17297]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    citation="arXiv:2403.17297",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92544,
+    rope_theta=1000000.0,
+)

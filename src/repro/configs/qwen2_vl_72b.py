@@ -1,0 +1,22 @@
+"""qwen2-vl-72b — VLM backbone, M-RoPE + dynamic resolution [arXiv:2409.12191].
+
+Transformer backbone only; the ViT vision encoder + projector are a stub —
+``input_specs()`` provides pre-projected patch embeddings (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    citation="arXiv:2409.12191",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=29568,
+    vocab_size=152064,
+    rope_theta=1000000.0,
+    vlm=VLMConfig(mrope_sections=(16, 24, 24),  # head_dim=128 → t/h/w rope sections
+                  num_visual_tokens=1024,
+                  visual_embed_dim=1280),
+)

@@ -1,0 +1,25 @@
+"""SharePrefill core: the paper's primary contribution in JAX.
+
+Modules:
+  patterns         block-sparse pattern algebra (masks, cumulative-γ top-k)
+  jsd              Jensen-Shannon distance (d_sparse / d_sim)
+  vertical_slash   Algorithm 5 — cumulative-threshold vertical-slash search
+  determine        Algorithm 3 — per-head pattern decision
+  construct        Algorithm 2 — pivotal pattern construction
+  pattern_dict     the dynamic pivotal-pattern dictionary as a pytree
+  share_attention  Algorithm 1 — per-layer orchestration
+  clustering       offline head clustering (autoencoder + agglomerative)
+  api              SharePrefill — the packaged module models consume
+"""
+from repro.core.api import SharePrefill
+from repro.core.pattern_dict import PivotalState, init_pivotal_state
+from repro.core.share_attention import (
+    LayerStats,
+    batched_share_prefill_attention_layer,
+    share_prefill_attention_layer,
+)
+
+__all__ = [
+    "SharePrefill", "PivotalState", "init_pivotal_state", "LayerStats",
+    "share_prefill_attention_layer", "batched_share_prefill_attention_layer",
+]

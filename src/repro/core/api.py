@@ -1,0 +1,98 @@
+"""Public API of the SharePrefill core.
+
+Models consume the technique through :class:`SharePrefill`: built once from a
+config + offline clustering artifact, it provides (a) an initial pattern-dict
+state and (b) a per-layer attention callable suitable for use as the body of
+a ``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SharePrefillConfig
+from repro.core import share_attention as sa
+from repro.core.pattern_dict import PivotalState
+from repro.core.patterns import num_blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class SharePrefill:
+    """The paper's technique, packaged as a composable module.
+
+    Attributes:
+      cfg: thresholds (γ, τ, δ) and block size.
+      cluster_ids: (L, H) int32 head_dict from offline clustering (-1 noise).
+      num_clusters: number of non-noise clusters.
+    """
+
+    cfg: SharePrefillConfig
+    cluster_ids: np.ndarray
+    num_clusters: int
+
+    @staticmethod
+    def disabled() -> "SharePrefill":
+        return SharePrefill(SharePrefillConfig(enabled=False),
+                            np.zeros((0, 0), np.int32), 1)
+
+    @staticmethod
+    def from_clustering(cfg: SharePrefillConfig, cluster_ids: np.ndarray,
+                        num_clusters: int) -> "SharePrefill":
+        return SharePrefill(cfg, np.asarray(cluster_ids, np.int32),
+                            max(int(num_clusters), 1))
+
+    @staticmethod
+    def trivial(cfg: SharePrefillConfig, num_layers: int,
+                num_heads: int) -> "SharePrefill":
+        """Head-index-tied default clusters (head h of every layer shares a
+        cluster) — used before an offline clustering artifact exists.
+
+        C = num_heads keeps the pattern-dict state O(H·NB²) instead of
+        O(L·H·NB²): with one-cluster-per-(layer, head) the dictionary grew
+        to 2.7 GB/layer of all-reduced state for qwen2-vl-72b at 32k
+        (§Perf iteration 4).  The τ-similarity check still gates every
+        share, so a wrong prior degrades to vertical-slash, not to errors."""
+        ids = np.tile(np.arange(num_heads, dtype=np.int32),
+                      (num_layers, 1))
+        return SharePrefill(cfg, ids, num_heads)
+
+    # ------------------------------------------------------------------
+    def applicable(self, seq_len: int) -> bool:
+        if not self.cfg.enabled:
+            return False
+        nb = seq_len // self.cfg.block_size
+        return (seq_len % self.cfg.block_size == 0
+                and nb >= self.cfg.min_seq_blocks)
+
+    def init_state(self, batch: int, seq_len: int) -> PivotalState:
+        nb = num_blocks(seq_len, self.cfg.block_size)
+        return sa.init_batched_state(batch, self.num_clusters, nb)
+
+    def layer_attention(
+        self,
+        layer_idx_or_ids,
+        q: jnp.ndarray,                 # (B, H, N, D)
+        k: jnp.ndarray,                 # (B, Hkv, N, D)
+        v: jnp.ndarray,
+        state: PivotalState,
+        attention_fn: sa.AttentionFn,
+        extra_mask: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, PivotalState, sa.LayerStats]:
+        """Run one layer of SharePrefill attention.
+
+        ``layer_idx_or_ids`` is either a static int (cluster ids are looked up
+        host-side) or a traced (H,) int32 array (the scan-xs path).
+        """
+        if isinstance(layer_idx_or_ids, int):
+            ids = jnp.asarray(self.cluster_ids[layer_idx_or_ids])
+        else:
+            ids = layer_idx_or_ids
+        return sa.batched_share_prefill_attention_layer(
+            q, k, v, state, ids, self.cfg, attention_fn, extra_mask)
+
+    def layer_cluster_ids(self) -> jnp.ndarray:
+        """(L, H) scan-xs array of cluster ids."""
+        return jnp.asarray(self.cluster_ids)

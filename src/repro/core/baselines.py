@@ -1,0 +1,74 @@
+"""Baseline sparse-attention pattern generators the paper compares against.
+
+  * FlashAttention-2  — exact dense attention (the causal mask itself).
+  * MInference        — per-head pattern with dynamically re-estimated
+    vertical-slash indices (we use its default vertical-slash configuration,
+    as the paper does — §6.1).
+  * FlexPrefill       — pooled-Q/pooled-K query-aware block estimation with
+    cumulative-threshold selection, falling back to vertical-slash for
+    "structured" heads (Lai et al., 2025).
+
+These produce (H, NB, NB) block masks consumed by the same sparse kernel, so
+accuracy/latency comparisons isolate the *pattern policy* — exactly the
+paper's experimental design.  The pooled estimator here is also the subject
+of the paper's §3 critique (token-alignment loss, extreme smoothing), which
+``benchmarks/bench_pooling_estimation.py`` quantifies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.patterns import (
+    causal_block_mask,
+    cumulative_topk_mask,
+    dense_block_mask,
+)
+from repro.core.vertical_slash import search_vertical_slash_pattern
+
+
+def flash_attention_mask(num_heads: int, nb: int) -> jnp.ndarray:
+    """Dense (causal) pattern for every head."""
+    return jnp.broadcast_to(dense_block_mask(nb)[None],
+                            (num_heads, nb, nb))
+
+
+def minference_masks(q: jnp.ndarray, k: jnp.ndarray, *, gamma: float,
+                     block_size: int) -> jnp.ndarray:
+    """MInference default config: vertical-slash per head, indices estimated
+    from the last query block each call (q, k: (H, N, D))."""
+    return jax.vmap(
+        lambda qh, kh: search_vertical_slash_pattern(
+            qh, kh, gamma, block_size))(q, k)
+
+
+def pooled_block_scores(q: jnp.ndarray, k: jnp.ndarray,
+                        block_size: int) -> jnp.ndarray:
+    """FlexPrefill's estimator: softmax(pool(Q)·pool(K)ᵀ/√d) over kv blocks.
+
+    q, k: (N, D) single head.  Returns (NB, NB) row-stochastic scores over
+    the causal region.
+    """
+    n, d = q.shape
+    nb = n // block_size
+    pq = jnp.mean(q.reshape(nb, block_size, d), axis=1)
+    pk = jnp.mean(k.reshape(nb, block_size, d), axis=1)
+    logits = (pq @ pk.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    causal = causal_block_mask(nb)
+    logits = jnp.where(causal, logits, -jnp.inf)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.where(causal, jnp.exp(logits - m), 0.0)
+    return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+
+
+def flexprefill_masks(q: jnp.ndarray, k: jnp.ndarray, *, gamma: float,
+                      block_size: int) -> jnp.ndarray:
+    """Query-aware block mask per head: per q-block cumulative-γ selection
+    over pooled block scores (q, k: (H, N, D))."""
+    def one_head(qh, kh):
+        scores = pooled_block_scores(qh, kh, block_size)
+        keep = cumulative_topk_mask(scores, gamma)            # per-row γ
+        nb = scores.shape[0]
+        keep = keep | jnp.eye(nb, dtype=bool)                 # local block
+        return keep & causal_block_mask(nb)
+    return jax.vmap(one_head)(q, k)

@@ -1,0 +1,255 @@
+"""Offline clustering of similar attention heads (paper §5.2 + Appendix A.4/C).
+
+Pipeline (matches the paper, adapted to this container — DESIGN.md §8):
+
+  1. capture block-averaged attention score maps for every (layer, head) from
+     a profiling prefill on a retrieval-style sample;
+  2. pool each map to a fixed POOLED×POOLED grid, embed with a small
+     convolutional autoencoder (latent 64, paper Appendix C) trained in pure
+     JAX with Adam (paper: PyTorch, lr 1e-3, early stopping);
+  3. L2-normalize latents and run average-linkage agglomerative clustering
+     with a distance threshold (paper: scipy ``fcluster``; ours is a numpy
+     Lance-Williams implementation since scipy is unavailable offline);
+  4. clusters smaller than ``min_cluster_size`` become the noise cluster (-1).
+
+The result is the static ``head_dict``: an (L, H) int32 array of cluster ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+POOLED = 32          # pooled attention-map side fed to the autoencoder
+LATENT = 64          # paper Appendix A.4: latent dimension 64
+
+
+# --------------------------------------------------------------------------
+# Attention-map preprocessing
+# --------------------------------------------------------------------------
+
+def pool_map(score_map: jnp.ndarray, out: int = POOLED) -> jnp.ndarray:
+    """Average-pool an (NB, NB) block score map to (out, out)."""
+    nb = score_map.shape[-1]
+    if nb < out:
+        reps = -(-out // nb)
+        score_map = jnp.repeat(jnp.repeat(score_map, reps, -2), reps, -1)
+        nb = score_map.shape[-1]
+    crop = (nb // out) * out
+    x = score_map[..., :crop, :crop]
+    x = x.reshape(*x.shape[:-2], out, crop // out, out, crop // out)
+    return x.mean(axis=(-3, -1))
+
+
+def binarize_maps(maps: jnp.ndarray, gamma: float = 0.9) -> jnp.ndarray:
+    """Threshold pooled maps to [0,1] (patterns, not magnitudes, cluster)."""
+    flat = maps.reshape(maps.shape[0], -1)
+    mx = jnp.max(flat, axis=-1, keepdims=True)
+    return (flat / jnp.maximum(mx, 1e-12)).reshape(maps.shape)
+
+
+# --------------------------------------------------------------------------
+# Convolutional autoencoder (paper Appendix C, scaled to POOLED×POOLED input)
+# --------------------------------------------------------------------------
+
+AEParams = dict     # pytree of autoencoder weights (paper Appendix C)
+
+
+def init_autoencoder(key: jax.Array, pooled: int = POOLED) -> AEParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p4 = pooled // 4
+    flat = 32 * p4 * p4
+    s = lambda *sh: 1.0 / np.sqrt(np.prod(sh[:-1]) + 1.0)
+    return dict(
+        conv1=jax.random.normal(k1, (3, 3, 1, 16)) * 0.1,
+        conv2=jax.random.normal(k2, (3, 3, 16, 32)) * 0.1,
+        enc_w=jax.random.normal(k3, (flat, LATENT)) * s(flat, LATENT),
+        enc_b=jnp.zeros((LATENT,)),
+        dec_w=jax.random.normal(k4, (LATENT, pooled * pooled)) * s(LATENT, 1),
+        dec_b=jnp.zeros((pooled * pooled,)),
+    )
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def encode(params: AEParams, maps: jnp.ndarray) -> jnp.ndarray:
+    """(M, P, P) pooled maps → (M, LATENT) embeddings."""
+    x = maps[..., None]                       # NHWC
+    x = jax.nn.relu(_conv(x, params["conv1"]))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv(x, params["conv2"]))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["enc_w"] + params["enc_b"]
+
+
+def decode(params: AEParams, z: jnp.ndarray, pooled: int = POOLED):
+    x = jax.nn.sigmoid(z @ params["dec_w"] + params["dec_b"])
+    return x.reshape(-1, pooled, pooled)
+
+
+def train_autoencoder(maps: jnp.ndarray, *, epochs: int = 300,
+                      lr: float = 1e-3, seed: int = 0,
+                      patience: int = 30) -> AEParams:
+    """MSE reconstruction training with Adam + early stopping (paper A.4)."""
+    pooled = maps.shape[-1]
+    params = init_autoencoder(jax.random.PRNGKey(seed), pooled)
+    flat, treedef = jax.tree.flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+
+    def loss_fn(params):
+        z = encode(params, maps)
+        recon = decode(params, z, pooled)
+        return jnp.mean((recon - maps) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda leaves: loss_fn(jax.tree.unflatten(treedef, leaves))))
+
+    best, since_best = np.inf, 0
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    for t in range(1, epochs + 1):
+        loss, g = grad_fn(flat)
+        m = [b1 * mi + (1 - b1) * gi for mi, gi in zip(m, g)]
+        v = [b2 * vi + (1 - b2) * gi**2 for vi, gi in zip(v, g)]
+        mh = [mi / (1 - b1**t) for mi in m]
+        vh = [vi / (1 - b2**t) for vi in v]
+        flat = [p - lr * mi / (jnp.sqrt(vi) + eps)
+                for p, mi, vi in zip(flat, mh, vh)]
+        lv = float(loss)
+        if lv < best - 1e-6:
+            best, since_best = lv, 0
+        else:
+            since_best += 1
+            if since_best >= patience:
+                break
+    return jax.tree.unflatten(treedef, flat)
+
+
+# --------------------------------------------------------------------------
+# Average-linkage agglomerative clustering (numpy; scipy unavailable)
+# --------------------------------------------------------------------------
+
+def agglomerative_cluster(x: np.ndarray, distance_threshold: float
+                          ) -> np.ndarray:
+    """Average-linkage clustering; merge while min inter-cluster dist < thr.
+
+    Lance-Williams update for average linkage:
+        d(k, i∪j) = (n_i d(k,i) + n_j d(k,j)) / (n_i + n_j)
+    Returns integer labels (0..K-1).
+    """
+    n = x.shape[0]
+    d = np.sqrt(np.maximum(
+        ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1), 0.0))
+    np.fill_diagonal(d, np.inf)
+    sizes = np.ones(n)
+    alive = np.ones(n, dtype=bool)
+    members: list[list[int]] = [[i] for i in range(n)]
+
+    while alive.sum() > 1:
+        sub = np.where(alive)[0]
+        dd = d[np.ix_(sub, sub)]
+        flat = np.argmin(dd)
+        a, b = divmod(flat, dd.shape[1])
+        i, j = sub[a], sub[b]
+        if d[i, j] >= distance_threshold:
+            break
+        # merge j into i
+        ni, nj = sizes[i], sizes[j]
+        newrow = (ni * d[i] + nj * d[j]) / (ni + nj)
+        d[i, :] = newrow
+        d[:, i] = newrow
+        d[i, i] = np.inf
+        d[j, :] = np.inf
+        d[:, j] = np.inf
+        sizes[i] = ni + nj
+        alive[j] = False
+        members[i].extend(members[j])
+        members[j] = []
+
+    labels = np.full(n, -1, dtype=np.int32)
+    k = 0
+    for i in range(n):
+        if alive[i]:
+            for idx in members[i]:
+                labels[idx] = k
+            k += 1
+    return labels
+
+
+# --------------------------------------------------------------------------
+# End-to-end head clustering
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusteringResult:
+    cluster_ids: np.ndarray      # (L, H) int32, -1 = noise
+    num_clusters: int
+    latents: np.ndarray          # (L*H, LATENT) for diagnostics
+
+    def cluster_ids_for_layer(self, layer: int) -> np.ndarray:
+        return self.cluster_ids[layer]
+
+
+def cluster_heads(score_maps: jnp.ndarray, *,
+                  distance_threshold: float | None = None,
+                  min_cluster_size: int = 5,
+                  ae_epochs: int = 300,
+                  seed: int = 0) -> ClusteringResult:
+    """score_maps: (L, H, NB, NB) block-avg attention from a profiling run.
+
+    ``distance_threshold=None`` picks it adaptively: the 25th percentile of
+    the pairwise latent distances — similar heads merge, the spread tail
+    stays apart (the paper hand-tunes 10 on unnormalized latents; an
+    absolute value does not transfer across models, an order statistic does).
+    """
+    l, h = score_maps.shape[:2]
+    flat_maps = score_maps.reshape(l * h, *score_maps.shape[2:])
+    pooled = pool_map(flat_maps)
+    pooled = binarize_maps(pooled)
+    params = train_autoencoder(pooled, epochs=ae_epochs, seed=seed)
+    z = np.asarray(encode(params, pooled))
+    z = z / np.maximum(np.linalg.norm(z, axis=-1, keepdims=True), 1e-12)
+    if distance_threshold is None:
+        d = np.sqrt(np.maximum(
+            ((z[:, None, :] - z[None, :, :]) ** 2).sum(-1), 0.0))
+        off = d[~np.eye(len(z), dtype=bool)]
+        distance_threshold = float(np.percentile(off, 25.0))
+    labels = agglomerative_cluster(z, distance_threshold)
+
+    # small clusters → noise (paper A.4: clusters with < 5 samples)
+    out = labels.copy()
+    k = 0
+    for lbl in np.unique(labels):
+        idx = labels == lbl
+        if idx.sum() < min_cluster_size:
+            out[idx] = -1
+        else:
+            out[idx] = k
+            k += 1
+    return ClusteringResult(
+        cluster_ids=out.reshape(l, h).astype(np.int32),
+        num_clusters=max(k, 1),
+        latents=z)
+
+
+def jaccard_similarity_matrix(masks: np.ndarray) -> np.ndarray:
+    """Paper Figure 2(b): Jaccard (# intersection / # union) between head
+    patterns.  masks: (M, NB, NB) bool."""
+    m = masks.reshape(masks.shape[0], -1).astype(np.float64)
+    inter = m @ m.T
+    sums = m.sum(axis=1)
+    union = sums[:, None] + sums[None, :] - inter
+    return inter / np.maximum(union, 1.0)

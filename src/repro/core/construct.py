@@ -1,0 +1,53 @@
+"""Pivotal pattern construction (paper Algorithm 2).
+
+Given the block-averaged QK logits Ã emitted by the sparse attention kernel
+for a head that ran **dense** attention, construct the pivotal pattern:
+
+  1. row-softmax Ã over kv blocks → block-averaged attention scores;
+  2. the last row becomes the pivotal representative ã;
+  3. flatten, normalize, and select the minimal block set with cumulative
+     mass ≥ γ → pivotal mask M.
+
+Skipped / non-causal blocks carry ``-inf`` in Ã and therefore zero mass.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.patterns import cumulative_topk_mask
+
+
+def block_softmax(a_tilde: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise softmax over kv blocks; rows with no valid block become 0."""
+    row_max = jnp.max(a_tilde, axis=-1, keepdims=True)
+    safe_max = jnp.where(jnp.isfinite(row_max), row_max, 0.0)
+    e = jnp.where(jnp.isfinite(a_tilde), jnp.exp(a_tilde - safe_max), 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-12)
+
+
+def construct_pivotal_pattern(
+    a_tilde: jnp.ndarray, gamma: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Algorithm 2 for one head.
+
+    Args:
+      a_tilde: (NB, NB) block-averaged QK logits (−inf on skipped blocks).
+      gamma: cumulative attention threshold.
+
+    Returns:
+      (mask, rep): (NB, NB) bool pivotal pattern and (NB,) f32 representative
+      ã (the block-averaged attention of the last query-block row).
+    """
+    scores = block_softmax(jnp.asarray(a_tilde, jnp.float32))
+    rep = scores[-1, :]
+    nb = scores.shape[-1]
+    flat = scores.reshape(-1)
+    keep = cumulative_topk_mask(flat, gamma)
+    mask = keep.reshape(nb, nb)
+    # Guarantee a well-defined softmax for every query row: keep the block
+    # diagonal (each query row's local block is always computed).
+    diag = jnp.eye(nb, dtype=bool)
+    return mask | diag, rep

@@ -1,0 +1,90 @@
+"""Sparse-pattern determination (paper Algorithm 3).
+
+For each head, estimate the block-averaged attention distribution of the last
+query block,
+
+    â = softmax( pool(Q̂ Kᵀ) / √d ),      Q̂ = Q[-block_size:]
+
+then compute
+
+    d_sparse = √JSD(â ‖ u)     (vs the uniform distribution)
+    d_sim    = √JSD(â ‖ ã)     (vs the cluster's pivotal representative)
+
+and pick the pattern source:
+
+    shared_pivot    if d_sparse < δ ∧ d_sim < τ ∧ pivot exists
+    dense           if d_sparse < δ ∧ no pivot yet ∧ head is the cluster's
+                    first head in this layer (Algorithm 4's "assign dense")
+    vertical_slash  otherwise (incl. noise clusters and highly sparse heads)
+
+Outputs are arithmetic selectors (no control flow) so the whole prefill stays
+one jitted program (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.jsd import js_distance, js_distance_to_uniform
+
+# Pattern-source codes (also used by benchmarks/bench_pattern_dist.py).
+PATTERN_SHARED = 0
+PATTERN_DENSE = 1
+PATTERN_VERTICAL_SLASH = 2
+
+
+class PatternDecision(NamedTuple):
+    use_shared: jnp.ndarray     # (H,) bool
+    use_dense: jnp.ndarray      # (H,) bool
+    use_vs: jnp.ndarray         # (H,) bool
+    a_hat_blocks: jnp.ndarray   # (H, NB) estimated block-avg attention â
+    d_sparse: jnp.ndarray       # (H,)
+    d_sim: jnp.ndarray          # (H,)
+
+
+def pooled_block_estimate(strip: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """â from a (b, N) softmaxed strip: mean over rows, sum within kv blocks.
+
+    The paper pools Q̂Kᵀ logits then softmaxes; pooling *probabilities* per
+    block is equivalent up to the softmax temperature of in-block variance and
+    is numerically safer with −inf causal entries.  Both reduce to a (NB,)
+    distribution over kv blocks.
+    """
+    b, n = strip.shape
+    nb = n // block_size
+    per_block = jnp.sum(strip.reshape(b, nb, block_size), axis=-1)
+    a_hat = jnp.mean(per_block, axis=0)
+    return a_hat / jnp.maximum(jnp.sum(a_hat), 1e-12)
+
+
+def first_head_in_cluster(cluster_ids: jnp.ndarray) -> jnp.ndarray:
+    """(H,) bool: head is the lowest-indexed head of its cluster in the layer."""
+    eq = cluster_ids[:, None] == cluster_ids[None, :]
+    first_idx = jnp.argmax(eq, axis=1)      # first True along the row
+    return jnp.arange(cluster_ids.shape[0]) == first_idx
+
+
+def determine_sparse_pattern(
+    a_hat_blocks: jnp.ndarray,      # (H, NB) â per head
+    cluster_ids: jnp.ndarray,       # (H,) int32, -1 = noise
+    pivot_reps: jnp.ndarray,        # (H, NB) ã gathered per head
+    pivot_valid: jnp.ndarray,       # (H,) bool pivot exists for head's cluster
+    *,
+    delta: float,
+    tau: float,
+) -> PatternDecision:
+    """Algorithm 3, vectorized over heads."""
+    d_sparse = js_distance_to_uniform(a_hat_blocks)
+    d_sim = js_distance(a_hat_blocks, pivot_reps)
+
+    noise = cluster_ids < 0
+    not_sparse = d_sparse < delta
+    similar = d_sim < tau
+    first = first_head_in_cluster(cluster_ids)
+
+    use_shared = not_sparse & similar & pivot_valid & ~noise
+    use_dense = not_sparse & ~pivot_valid & first & ~noise
+    use_vs = ~(use_shared | use_dense)
+    return PatternDecision(use_shared, use_dense, use_vs,
+                           a_hat_blocks, d_sparse, d_sim)

@@ -1,0 +1,46 @@
+"""Jensen-Shannon divergence utilities (paper §5.2, Algorithm 3 line 6).
+
+The paper measures head sparsity and inter-head similarity with the
+Jensen-Shannon *distance* ``√JSD(p‖q)``.  We use base-2 logarithms so the
+divergence is bounded in [0, 1] and the distance in [0, 1] — matching the
+convention of ``scipy.spatial.distance.jensenshannon`` the authors build on
+and making the thresholds τ=0.2 / δ=0.3 scale-free.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+_LN2 = 0.6931471805599453
+
+
+def _kl(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """KL(p‖q) in bits along the last axis; p, q are probability vectors."""
+    p = jnp.clip(p, _EPS, 1.0)
+    q = jnp.clip(q, _EPS, 1.0)
+    return jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1) / _LN2
+
+
+def js_divergence(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """JSD(p‖q) ∈ [0, 1] (base-2) along the last axis."""
+    m = 0.5 * (p + q)
+    return 0.5 * _kl(p, m) + 0.5 * _kl(q, m)
+
+
+def js_distance(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """√JSD(p‖q) — the metric used for d_sparse and d_sim."""
+    return jnp.sqrt(jnp.maximum(js_divergence(p, q), 0.0))
+
+
+def js_distance_to_uniform(p: jnp.ndarray) -> jnp.ndarray:
+    """d_sparse = √JSD(p‖u) with u uniform over the support of the last axis."""
+    n = p.shape[-1]
+    u = jnp.full_like(p, 1.0 / n)
+    return js_distance(p, u)
+
+
+def normalize(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Project non-negative scores onto the simplex."""
+    x = jnp.maximum(x, 0.0)
+    s = jnp.sum(x, axis=axis, keepdims=True)
+    return x / jnp.maximum(s, _EPS)

@@ -1,0 +1,77 @@
+"""The dynamic pivotal-pattern dictionary as a fixed-shape pytree.
+
+The paper maintains a Python dict ``cluster → (ã, M)`` mutated layer-by-layer
+during prefill.  The JAX version is a :class:`PivotalState` carried through a
+``lax.scan`` over layers; lookups are gathers by cluster id and updates are
+one-hot scatters, which GSPMD turns into the all-reduce merge that realizes
+the paper's "global dictionary shared across devices" future-work proposal
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+
+class PivotalState(NamedTuple):
+    """pivotal_pattern_dict: cluster → (M, ã) plus validity flags."""
+
+    masks: jnp.ndarray   # (C, NB, NB) bool — pivotal patterns M
+    reps: jnp.ndarray    # (C, NB) f32 — pivotal representatives ã
+    valid: jnp.ndarray   # (C,) bool — pivot exists for this cluster
+
+    @property
+    def num_clusters(self) -> int:
+        return self.masks.shape[0]
+
+
+def init_pivotal_state(num_clusters: int, nb: int,
+                       dtype=jnp.float32) -> PivotalState:
+    return PivotalState(
+        masks=jnp.zeros((num_clusters, nb, nb), dtype=bool),
+        reps=jnp.full((num_clusters, nb), 1.0 / nb, dtype=dtype),
+        valid=jnp.zeros((num_clusters,), dtype=bool),
+    )
+
+
+def lookup(state: PivotalState, cluster_ids: jnp.ndarray
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather (M, ã, valid) for each head; noise ids (-1) read slot 0 but are
+    masked invalid."""
+    safe = jnp.clip(cluster_ids, 0, state.num_clusters - 1)
+    masks = jnp.take(state.masks, safe, axis=0)
+    reps = jnp.take(state.reps, safe, axis=0)
+    valid = jnp.take(state.valid, safe, axis=0) & (cluster_ids >= 0)
+    return masks, reps, valid
+
+
+def update(state: PivotalState,
+           cluster_ids: jnp.ndarray,      # (H,)
+           new_masks: jnp.ndarray,        # (H, NB, NB) bool
+           new_reps: jnp.ndarray,         # (H, NB)
+           should_update: jnp.ndarray,    # (H,) bool — heads that ran dense
+           ) -> PivotalState:
+    """One-hot scatter update; at most one head per cluster updates per layer
+    (the first head), so the weighted sums are exact."""
+    c = state.num_clusters
+    onehot = (jnp.arange(c)[None, :] == cluster_ids[:, None])  # (H, C)
+    onehot = onehot & should_update[:, None] & (cluster_ids >= 0)[:, None]
+    w = jnp.asarray(onehot, state.reps.dtype)
+
+    touched = jnp.any(onehot, axis=0)                          # (C,)
+    upd_masks = jnp.einsum("hc,hij->cij", w,
+                           jnp.asarray(new_masks, state.reps.dtype)) > 0.5
+    upd_reps = jnp.einsum("hc,hn->cn", w, new_reps)
+
+    masks = jnp.where(touched[:, None, None], upd_masks, state.masks)
+    reps = jnp.where(touched[:, None], upd_reps, state.reps)
+    valid = state.valid | touched
+    return PivotalState(masks=masks, reps=reps, valid=valid)
+
+
+def merge_across_devices(state: PivotalState) -> PivotalState:
+    """No-op placeholder: under pjit the scatter/where above already carries
+    the GSPMD-inserted all-reduce when heads are sharded over ``model``.
+    Kept as an explicit extension point for shard_map-based variants."""
+    return state

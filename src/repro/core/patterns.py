@@ -1,0 +1,143 @@
+"""Block-sparse pattern algebra.
+
+All sparse patterns in this framework are **block-granular** boolean masks of
+shape ``(num_q_blocks, num_kv_blocks)`` with ``True`` = "compute this
+(q_block, kv_block) tile".  Block size is 128 on TPU (MXU/VMEM alignment —
+DESIGN.md §3); the paper's token-granular Triton patterns are mapped onto this
+grid.
+
+Conventions:
+  * q blocks index rows, kv blocks index columns;
+  * causal prefill masks satisfy ``M[i, j] = False`` for ``j > i``;
+  * "slash" diagonals are indexed by offset ``o = i - j ∈ [0, NB)``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_blocks(seq_len: int, block_size: int) -> int:
+    if seq_len % block_size:
+        raise ValueError(
+            f"seq_len {seq_len} not divisible by block_size {block_size}; "
+            "pad sequences to a block multiple before attention")
+    return seq_len // block_size
+
+
+def causal_block_mask(nb_q: int, nb_kv: int | None = None) -> jnp.ndarray:
+    """Lower-triangular block mask (diagonal blocks included)."""
+    nb_kv = nb_q if nb_kv is None else nb_kv
+    i = jnp.arange(nb_q)[:, None]
+    j = jnp.arange(nb_kv)[None, :]
+    return j <= i + (nb_kv - nb_q)
+
+
+def dense_block_mask(nb_q: int, nb_kv: int | None = None,
+                     causal: bool = True) -> jnp.ndarray:
+    nb_kv = nb_q if nb_kv is None else nb_kv
+    if causal:
+        return causal_block_mask(nb_q, nb_kv)
+    return jnp.ones((nb_q, nb_kv), dtype=bool)
+
+
+def sliding_window_block_mask(nb: int, window_blocks: int,
+                              sink_blocks: int = 1) -> jnp.ndarray:
+    """Causal sliding window (plus attention-sink blocks) at block granularity.
+
+    A window of ``w`` blocks keeps diagonals 0..w-1; sink blocks keep the
+    first ``sink_blocks`` kv block columns (StreamingLLM-style, used by the
+    SWA long-decode variant — DESIGN.md §6).
+    """
+    i = jnp.arange(nb)[:, None]
+    j = jnp.arange(nb)[None, :]
+    causal = j <= i
+    window = (i - j) < window_blocks
+    sink = j < sink_blocks
+    return causal & (window | sink)
+
+
+def vertical_block_mask(nb: int, col_active: jnp.ndarray) -> jnp.ndarray:
+    """Expand active kv-block columns ``(NB,) bool`` into a causal mask."""
+    m = jnp.broadcast_to(col_active[None, :], (nb, nb))
+    return m & causal_block_mask(nb)
+
+
+def slash_block_mask(nb: int, offset_active: jnp.ndarray) -> jnp.ndarray:
+    """Expand active block diagonals ``(NB,) bool`` (offset o = i - j)."""
+    i = jnp.arange(nb)[:, None]
+    j = jnp.arange(nb)[None, :]
+    off = i - j
+    valid = off >= 0
+    off = jnp.clip(off, 0, nb - 1)
+    return jnp.take(offset_active, off) & valid
+
+
+def a_shape_block_mask(nb: int, sink_blocks: int,
+                       local_blocks: int) -> jnp.ndarray:
+    """MInference 'A-shape': attention sink columns + local window."""
+    return sliding_window_block_mask(nb, local_blocks, sink_blocks)
+
+
+def block_mask_density(mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of *causal* blocks that are computed (the speedup proxy)."""
+    nb_q, nb_kv = mask.shape[-2:]
+    causal = causal_block_mask(nb_q, nb_kv)
+    total = jnp.sum(causal)
+    return jnp.sum(mask & causal, axis=(-2, -1)) / total
+
+
+def expand_block_mask(mask: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Block mask → token mask (for the jnp reference path and tests)."""
+    return jnp.repeat(jnp.repeat(mask, block_size, axis=-2),
+                      block_size, axis=-1)
+
+
+def cumulative_topk_mask(scores: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Select the minimal set of entries whose mass reaches ``gamma``.
+
+    Implements the paper's cumulative-threshold selection (Algorithm 2 lines
+    5-8 / Algorithm 5): sort descending, take the shortest prefix with
+    cumulative sum ≥ γ.  Works along the last axis; ``scores`` need not be
+    normalized (they are normalized internally).
+    """
+    s = scores / jnp.maximum(jnp.sum(scores, axis=-1, keepdims=True), 1e-12)
+    order = jnp.argsort(-s, axis=-1)
+    sorted_s = jnp.take_along_axis(s, order, axis=-1)
+    csum = jnp.cumsum(sorted_s, axis=-1)
+    # keep entries strictly before the threshold crossing, plus the crosser
+    keep_sorted = (csum - sorted_s) < gamma
+    keep = jnp.zeros_like(keep_sorted)
+    keep = jnp.put_along_axis(keep, order, keep_sorted, axis=-1,
+                              inplace=False)
+    return keep
+
+
+def indices_to_mask(indices: jnp.ndarray, size: int) -> jnp.ndarray:
+    """index_to_mask from the paper: scatter an index set into a bool mask."""
+    mask = jnp.zeros((size,), dtype=bool)
+    return mask.at[indices].set(True)
+
+
+def active_block_table(mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-q-block active kv-block index lists for the splash kernel.
+
+    Returns ``(indices, counts)`` where ``indices[i, :counts[i]]`` are the kv
+    blocks computed for q block ``i`` (padded with the last valid index so the
+    kernel's clamped loads stay in-bounds).  Host-side helper (numpy) used to
+    *stage* scalar-prefetch operands; the in-graph equivalent lives in
+    kernels/ops.py.
+    """
+    nb_q, nb_kv = mask.shape
+    counts = mask.sum(axis=1).astype(np.int32)
+    width = int(max(counts.max(), 1))
+    indices = np.zeros((nb_q, width), dtype=np.int32)
+    for i in range(nb_q):
+        idx = np.nonzero(mask[i])[0]
+        if len(idx) == 0:
+            idx = np.array([0])
+        indices[i, : len(idx)] = idx
+        indices[i, len(idx):] = idx[-1]
+    return indices, counts

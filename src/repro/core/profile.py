@@ -1,0 +1,167 @@
+"""Profiling utilities for the offline phase and the paper's analyses.
+
+``capture_block_attention_maps`` runs a dense prefill over a decoder-only
+GQA transformer and records the block-averaged attention score map of every
+(layer, head) — the input to offline clustering (paper §5.2: "clustering on
+their attention score maps using a sample from the Retr.KV task").
+
+``run_prefill_traced`` runs the SharePrefill flow layer-by-layer in Python
+(same math as the jitted scan) and records per-layer pattern statistics and
+masks — the data behind Figure 2 (observations) and Figure 6 (pattern
+distribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import pattern_dict as pdict
+from repro.core.api import SharePrefill
+from repro.core.construct import block_softmax
+from repro.core.share_attention import share_prefill_attention_layer
+from repro.kernels.chunked import chunked_attention, chunked_attention_fn
+from repro.models import common
+from repro.models.transformer import (
+    embed_tokens,
+    logits_from_hidden,
+    num_prefix_layers,
+)
+
+
+def _layer_slice(stack, l: int):
+    return jax.tree.map(lambda p: p[l], stack)
+
+
+def _layer_qkv(layer, x, cfg: ModelConfig, positions):
+    from repro.models.attention import _rope_qk
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    q, k, v = common.gqa_qkv(layer["attn"], h)
+    q, k = _rope_qk(q, k, positions, cfg)
+    return q, k, v
+
+
+def _layer_finish(layer, x, attn_out, cfg: ModelConfig, moe_ffn: bool):
+    x = x + common.gqa_out(layer["attn"], attn_out)
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    if moe_ffn:
+        from repro.models.moe import moe_apply
+        y, _ = moe_apply(layer["ffn"], h, cfg)
+    else:
+        y = common.mlp(layer["ffn"], h)
+    return x + y
+
+
+def capture_block_attention_maps(params, cfg: ModelConfig,
+                                 tokens: jnp.ndarray, *,
+                                 block_size: int = 64
+                                 ) -> np.ndarray:
+    """Dense prefill capturing block-avg attention maps.
+
+    tokens: (1, S).  Returns (L, H, NB, NB) float32 row-softmaxed maps.
+    Supports the dense/vlm/moe transformer families.
+    """
+    b, s = tokens.shape
+    assert b == 1, "profiling uses a single sample (paper §5.2)"
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(params, cfg, tokens)
+    moe_ffn = cfg.moe.enabled
+    maps: List[np.ndarray] = []
+    n_prefix = num_prefix_layers(cfg)
+
+    layers = ([params[f"prefix_{i}"] for i in range(n_prefix)]
+              + [_layer_slice(params["stack"], l)
+                 for l in range(cfg.num_layers - n_prefix)])
+    for li, layer in enumerate(layers):
+        q, k, v = _layer_qkv(layer, x, cfg, positions)
+        kx = common.repeat_kv(k, cfg.gqa_groups)
+        vx = common.repeat_kv(v, cfg.gqa_groups)
+        out, a_tilde = chunked_attention(
+            q, kx, vx, block_size=block_size, causal=True,
+            collect_stats=True)
+        maps.append(np.asarray(jax.vmap(block_softmax)(a_tilde[0])))
+        x = _layer_finish(layer, x, out, cfg,
+                          moe_ffn and li >= n_prefix)
+    return np.stack(maps)           # (L, H, NB, NB)
+
+
+@dataclasses.dataclass
+class PrefillTrace:
+    last_logits: np.ndarray
+    full_logits: Optional[np.ndarray]
+    per_layer: List[Dict[str, float]]       # shared/dense/vs/density per layer
+    masks: List[np.ndarray]                 # (H, NB, NB) per layer
+
+
+def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                       sp: SharePrefill, *, method: str = "share",
+                       want_full_logits: bool = False,
+                       want_masks: bool = False) -> PrefillTrace:
+    """Layer-by-layer SharePrefill prefill with per-layer statistics."""
+    from repro.core import baselines
+    from repro.core.patterns import block_mask_density, causal_block_mask
+
+    b, s = tokens.shape
+    assert b == 1
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed_tokens(params, cfg, tokens)
+    bs = sp.cfg.block_size
+    nb = s // bs
+    state = pdict.init_pivotal_state(max(sp.num_clusters, 1), nb)
+    attention_fn = chunked_attention_fn(block_size=bs)
+    n_prefix = num_prefix_layers(cfg)
+    moe_ffn = cfg.moe.enabled
+
+    per_layer, masks_out = [], []
+    layers = ([params[f"prefix_{i}"] for i in range(n_prefix)]
+              + [_layer_slice(params["stack"], l)
+                 for l in range(cfg.num_layers - n_prefix)])
+    for li, layer in enumerate(layers):
+        q, k, v = _layer_qkv(layer, x, cfg, positions)
+        kx = common.repeat_kv(k, cfg.gqa_groups)
+        vx = common.repeat_kv(v, cfg.gqa_groups)
+        h = q.shape[1]
+        if method == "share":
+            ids = jnp.asarray(sp.cluster_ids[li]) if sp.cfg.enabled else \
+                jnp.arange(h, dtype=jnp.int32)
+            out, state, st = share_prefill_attention_layer(
+                q[0], k[0], v[0], state, ids, sp.cfg, attention_fn)
+            out = out[None]
+            rec = {"num_shared": float(st.num_shared),
+                   "num_dense": float(st.num_dense),
+                   "num_vs": float(st.num_vs),
+                   "block_density": float(st.block_density)}
+            mask = None
+        else:
+            if method == "dense":
+                mask = jnp.broadcast_to(causal_block_mask(nb)[None],
+                                        (h, nb, nb))
+            elif method == "vertical_slash":
+                mask = baselines.minference_masks(
+                    q[0], kx[0], gamma=sp.cfg.gamma, block_size=bs)
+            elif method == "flex":
+                mask = baselines.flexprefill_masks(
+                    q[0], kx[0], gamma=sp.cfg.gamma, block_size=bs)
+            else:
+                raise ValueError(method)
+            mask = mask & causal_block_mask(nb)[None]
+            out, _ = attention_fn(q[0], kx[0], vx[0], mask)
+            out = out[None]
+            rec = {"num_shared": 0.0, "num_dense": 0.0,
+                   "num_vs": float(h),
+                   "block_density": float(
+                       jnp.mean(block_mask_density(mask)))}
+        per_layer.append(rec)
+        if want_masks and mask is not None:
+            masks_out.append(np.asarray(mask))
+        x = _layer_finish(layer, x, out, cfg, moe_ffn and li >= n_prefix)
+
+    full = logits_from_hidden(params, cfg, x) if want_full_logits else None
+    last = logits_from_hidden(params, cfg, x[:, -1, :])
+    return PrefillTrace(np.asarray(last),
+                        None if full is None else np.asarray(full),
+                        per_layer, masks_out)

@@ -1,0 +1,139 @@
+"""SharePrefill online orchestration (paper Algorithm 1, per layer).
+
+For a single sample and one layer's heads:
+
+  1. estimate â per head from the last-query-block strip (Algorithm 3);
+  2. look up the cluster's pivotal pattern / representative (Algorithm 4);
+  3. decide shared_pivot / dense / vertical_slash per head;
+  4. materialize block masks for all three sources and select arithmetically;
+  5. run block-sparse attention → output O and block-avg QK logits Ã;
+  6. heads that ran dense construct new pivots (Algorithm 2) and update the
+     dictionary state.
+
+The function is pure; the pivotal dictionary is threaded as a
+:class:`PivotalState` carry through the model's ``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SharePrefillConfig
+from repro.core import pattern_dict as pdict
+from repro.core.construct import construct_pivotal_pattern
+from repro.core.determine import determine_sparse_pattern, pooled_block_estimate
+from repro.core.patterns import block_mask_density, causal_block_mask
+from repro.core.vertical_slash import (
+    search_vertical_slash_from_strip,
+    strip_scores,
+)
+
+# attention_fn: (q (H,N,D), k (H,N,D), v (H,N,D), mask (H,NB,NB))
+#               -> (out (H,N,D), a_tilde (H,NB,NB))
+AttentionFn = Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+class LayerStats(NamedTuple):
+    """Per-layer pattern statistics (paper Figure 6 / latency accounting)."""
+
+    num_shared: jnp.ndarray     # scalar f32
+    num_dense: jnp.ndarray
+    num_vs: jnp.ndarray
+    block_density: jnp.ndarray  # computed fraction of causal blocks (mean over heads)
+    d_sparse_mean: jnp.ndarray
+    d_sim_mean: jnp.ndarray
+
+
+def _expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """GQA: repeat kv heads to match query heads."""
+    h_kv = x.shape[0]
+    if h_kv == num_q_heads:
+        return x
+    return jnp.repeat(x, num_q_heads // h_kv, axis=0)
+
+
+def share_prefill_attention_layer(
+    q: jnp.ndarray,                 # (H, N, D)
+    k: jnp.ndarray,                 # (Hkv, N, D)
+    v: jnp.ndarray,                 # (Hkv, N, D)
+    state: pdict.PivotalState,
+    cluster_ids: jnp.ndarray,       # (H,) int32, -1 = noise
+    cfg: SharePrefillConfig,
+    attention_fn: AttentionFn,
+    extra_mask: jnp.ndarray | None = None,  # (NB, NB) e.g. sliding window
+) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
+    h, n, d = q.shape
+    bs = cfg.block_size
+    nb = n // bs
+    kx = _expand_kv(k, h)
+    vx = _expand_kv(v, h)
+
+    # -- Algorithm 3: estimate + decide ------------------------------------
+    strips = jax.vmap(lambda qh, kh: strip_scores(qh, kh, bs))(q, kx)
+    a_hat = jax.vmap(lambda s: pooled_block_estimate(s, bs))(strips)
+
+    pivot_masks, pivot_reps, pivot_valid = pdict.lookup(state, cluster_ids)
+    decision = determine_sparse_pattern(
+        a_hat, cluster_ids, pivot_reps, pivot_valid,
+        delta=cfg.delta, tau=cfg.tau)
+
+    # -- Algorithm 5 fallback ----------------------------------------------
+    vs_masks = jax.vmap(
+        lambda s: search_vertical_slash_from_strip(s, cfg.gamma, bs))(strips)
+
+    # -- Algorithm 4: select mask source ------------------------------------
+    causal = causal_block_mask(nb)
+    masks = jnp.where(decision.use_shared[:, None, None], pivot_masks,
+                      vs_masks)
+    masks = jnp.where(decision.use_dense[:, None, None], causal[None], masks)
+    masks = masks & causal[None]
+    if extra_mask is not None:
+        masks = masks & extra_mask[None]
+
+    # -- sparse attention + Ã (Algorithm 1 line 8) ---------------------------
+    out, a_tilde = attention_fn(q, kx, vx, masks)
+
+    # -- Algorithm 2: construct + update dictionary --------------------------
+    new_masks, new_reps = jax.vmap(
+        lambda a: construct_pivotal_pattern(a, cfg.gamma))(a_tilde)
+    new_state = pdict.update(state, cluster_ids, new_masks, new_reps,
+                             decision.use_dense)
+
+    stats = LayerStats(
+        num_shared=jnp.sum(decision.use_shared.astype(jnp.float32)),
+        num_dense=jnp.sum(decision.use_dense.astype(jnp.float32)),
+        num_vs=jnp.sum(decision.use_vs.astype(jnp.float32)),
+        block_density=jnp.mean(block_mask_density(masks)),
+        d_sparse_mean=jnp.mean(decision.d_sparse),
+        d_sim_mean=jnp.mean(decision.d_sim),
+    )
+    return out, new_state, stats
+
+
+def batched_share_prefill_attention_layer(
+    q: jnp.ndarray,                 # (B, H, N, D)
+    k: jnp.ndarray,                 # (B, Hkv, N, D)
+    v: jnp.ndarray,
+    state: pdict.PivotalState,      # batched: leaves carry leading B dim
+    cluster_ids: jnp.ndarray,       # (H,)
+    cfg: SharePrefillConfig,
+    attention_fn: AttentionFn,
+    extra_mask: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
+    """vmap over the batch; each sample carries its own pattern dictionary
+    (patterns are input-dependent — paper observation 2 is about *similarity
+    structure*, not the patterns themselves)."""
+    fn = lambda qb, kb, vb, st: share_prefill_attention_layer(
+        qb, kb, vb, st, cluster_ids, cfg, attention_fn, extra_mask)
+    out, new_state, stats = jax.vmap(fn)(q, k, v, state)
+    stats = jax.tree.map(jnp.mean, stats)
+    return out, new_state, stats
+
+
+def init_batched_state(batch: int, num_clusters: int,
+                       nb: int) -> pdict.PivotalState:
+    st = pdict.init_pivotal_state(num_clusters, nb)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (batch,) + x.shape), st)

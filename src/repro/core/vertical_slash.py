@@ -1,0 +1,107 @@
+"""Cumulative-threshold vertical-slash pattern search (paper Algorithm 5).
+
+Faithful to FlexPrefill's search: a representative query strip Q̂ (the last
+``block_size`` queries) scores every key; vertical (column) and slash
+(diagonal) directions are summed, normalized, and the minimal sets covering
+cumulative mass γ are selected.  TPU adaptation (DESIGN.md §3): the selected
+*token* columns/diagonals are then quantized to 128-wide *block* columns /
+block diagonals, and the union is expanded into a causal block mask.
+
+Everything here operates on a single head; callers vmap over heads/batch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.patterns import (
+    cumulative_topk_mask,
+    slash_block_mask,
+    vertical_block_mask,
+)
+
+
+def strip_scores(q: jnp.ndarray, k: jnp.ndarray,
+                 block_size: int) -> jnp.ndarray:
+    """softmax(Q̂ Kᵀ/√d) for the last query block; (block_size, N)."""
+    n, d = k.shape
+    q_hat = q[-block_size:, :]
+    logits = (q_hat @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    # causal: row r of the strip is global query N - block_size + r
+    rows = jnp.arange(block_size) + (n - block_size)
+    cols = jnp.arange(n)
+    logits = jnp.where(cols[None, :] <= rows[:, None], logits, -jnp.inf)
+    logits = jnp.asarray(logits, jnp.float32)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def vertical_slash_direction_scores(a_hat: jnp.ndarray):
+    """sum_vertical / sum_slash of a (b, N) strip of attention scores.
+
+    Returns ``(a_v, a_s)``: per-token column mass (N,) and per-diagonal mass
+    (N,) where diagonal offset ``o = query_pos - key_pos`` and the strip's
+    last row anchors ``o = N - 1 - col``.
+    """
+    b, n = a_hat.shape
+    a_v = jnp.sum(a_hat, axis=0)
+    # Diagonal o collects strip entries (r, c) with (n - b + r) - c == o.
+    # Shift each row r so its columns align by offset, then sum rows.
+    # offset for (r, c): (n - b + r) - c ∈ [r - b + 1 + ... ] — use a roll-free
+    # gather: for row r, contribution to offset o comes from c = n - b + r - o.
+    offs = jnp.arange(n)
+    rows = jnp.arange(b)
+    cols = (n - b) + rows[:, None] - offs[None, :]
+    valid = (cols >= 0) & (cols < n)
+    gathered = jnp.take_along_axis(
+        a_hat, jnp.clip(cols, 0, n - 1), axis=1)
+    a_s = jnp.sum(jnp.where(valid, gathered, 0.0), axis=0)
+    return a_v, a_s
+
+
+def token_sets_to_block_sets(v_keep: jnp.ndarray, s_keep: jnp.ndarray,
+                             block_size: int):
+    """Quantize token-level column/diagonal selections to block granularity."""
+    n = v_keep.shape[0]
+    nb = n // block_size
+    col_active = jnp.any(v_keep.reshape(nb, block_size), axis=1)
+    # diagonal offsets quantize to block offsets; mark both straddled blocks
+    lo = jnp.any(s_keep.reshape(nb, block_size), axis=1)
+    hi = jnp.concatenate([lo[1:], jnp.zeros((1,), bool)])
+    off_active = lo | hi
+    return col_active, off_active
+
+
+def search_vertical_slash_pattern(q: jnp.ndarray, k: jnp.ndarray,
+                                  gamma: float,
+                                  block_size: int) -> jnp.ndarray:
+    """Algorithm 5, block-granular output: (NB, NB) causal block mask."""
+    n = k.shape[0]
+    nb = n // block_size
+    a_hat = strip_scores(q, k, block_size)
+    a_v, a_s = vertical_slash_direction_scores(a_hat)
+    v_keep = cumulative_topk_mask(a_v, gamma)
+    s_keep = cumulative_topk_mask(a_s, gamma)
+    col_active, off_active = token_sets_to_block_sets(
+        v_keep, s_keep, block_size)
+    # Always keep the main block diagonal (local blocks) and the sink column —
+    # required for a well-defined softmax on every query row.
+    off_active = off_active.at[0].set(True)
+    col_active = col_active.at[0].set(True)
+    return vertical_block_mask(nb, col_active) | slash_block_mask(
+        nb, off_active)
+
+
+def search_vertical_slash_from_strip(a_hat: jnp.ndarray, gamma: float,
+                                     block_size: int) -> jnp.ndarray:
+    """Same as above but from a pre-computed strip (shared with Algorithm 3)."""
+    n = a_hat.shape[-1]
+    nb = n // block_size
+    a_v, a_s = vertical_slash_direction_scores(a_hat)
+    v_keep = cumulative_topk_mask(a_v, gamma)
+    s_keep = cumulative_topk_mask(a_s, gamma)
+    col_active, off_active = token_sets_to_block_sets(
+        v_keep, s_keep, block_size)
+    off_active = off_active.at[0].set(True)
+    col_active = col_active.at[0].set(True)
+    return vertical_block_mask(nb, col_active) | slash_block_mask(
+        nb, off_active)

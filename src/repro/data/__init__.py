@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    TASKS,
+    DataConfig,
+    batches,
+    eval_batches,
+    sample,
+)
+
+__all__ = ["TASKS", "DataConfig", "batches", "eval_batches", "sample"]

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    current_rules,
+    shard,
+    use_rules,
+)
+
+__all__ = ["DEFAULT_RULES", "ShardingRules", "current_rules", "shard",
+           "use_rules"]

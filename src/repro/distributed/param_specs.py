@@ -1,0 +1,190 @@
+"""Parameter PartitionSpec assignment (FSDP over ``data`` + TP over ``model``).
+
+Leaves are matched by their pytree path suffix; sizes not divisible by the
+target mesh axes fall back to replication for that dim.  Stacked layer params
+(any path containing a ``stack`` key) get a leading replicated dim.
+
+The default policy is 2-D sharding: the TP dim (heads / ffn hidden / experts /
+vocab) over ``model`` and the other large dim over ``data`` (ZeRO-3-style
+FSDP) — this is what lets a 123B-dense or 244B-MoE model fit a 256-chip v5e
+pod at bf16 (see EXPERIMENTS.md §Dry-run).  Inference can switch FSDP off
+(``fsdp=False``) to avoid per-layer weight all-gathers — one of the §Perf
+hillclimb levers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+
+# (last-key match, per-dim logical axes) — dims counted from the END so the
+# same rule covers stacked ((L,) + shape) and unstacked leaves.
+_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("embed", ("vocab", "fsdp")),
+    ("lm_head", ("fsdp", "vocab")),
+    ("wq", ("fsdp", "tp", None)),
+    ("w_q", ("fsdp", "tp", None)),
+    ("wk", ("fsdp", "tp", None)),
+    ("wv", ("fsdp", "tp", None)),
+    ("wo", ("tp", None, "fsdp")),
+    ("w_gate", ("fsdp", "tp")),         # dense mlp (2D)
+    ("w_up", ("fsdp", "tp")),
+    ("w_down", ("tp", "fsdp")),
+    ("router", ("fsdp", None)),
+    ("w_kv_down", ("fsdp", None)),
+    ("w_q_down", ("fsdp", None)),
+    ("w_q_up", (None, "tp", None)),
+    ("w_uk", (None, "tp", None)),
+    ("w_uv", (None, "tp", None)),
+    ("w_in", ("fsdp", "tp")),
+    ("w_x", ("fsdp", "tp")),
+    ("w_a", ("tp", None)),
+    ("w_i", ("tp", None)),
+    ("w_out", ("tp", "fsdp")),
+    ("conv_w", (None, "tp")),
+)
+
+# MoE expert stacks are 3-D with a leading expert dim.  When the expert
+# count does not divide the model axis (Mixtral: 8 experts on 16 chips) the
+# fallback shards the FFN hidden dim instead — otherwise the expert weights
+# replicate at 270 GB/device (§Perf iteration 3).
+_MOE_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("w_gate", ("experts", "fsdp", None)),
+    ("w_up", ("experts", "fsdp", None)),
+    ("w_down", ("experts", None, "fsdp")),
+)
+_MOE_FALLBACK: dict = {
+    "w_gate": (None, "fsdp", "tp"),
+    "w_up": (None, "fsdp", "tp"),
+    "w_down": (None, "tp", "fsdp"),
+}
+
+
+def _axes_for(logical: Optional[str], *, fsdp: bool
+              ) -> Optional[Tuple[str, ...]]:
+    if logical is None:
+        return None
+    if logical in ("tp", "vocab", "experts"):
+        return ("model",)
+    if logical == "fsdp":
+        return ("data",) if fsdp else None
+    return None
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def leaf_pspec(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, *, fsdp: bool = True) -> P:
+    last = path_keys[-1]
+    ndim = len(shape)
+    is_moe_expert = (last in ("w_gate", "w_up", "w_down")
+                     and "ffn" in path_keys and ndim >= 3
+                     and "shared" not in path_keys)
+    rules = _MOE_RULES if is_moe_expert else _RULES
+    if is_moe_expert:
+        expert_dim = shape[ndim - 3]
+        if expert_dim % mesh.shape.get("model", 1):
+            rules = ((last, _MOE_FALLBACK[last]),)
+    for name, dims in rules:
+        if last == name and ndim >= len(dims):
+            parts: list = [None] * ndim
+            for i, logical in enumerate(dims):
+                dim_idx = ndim - len(dims) + i
+                axes = _axes_for(logical, fsdp=fsdp)
+                if axes is None:
+                    continue
+                size = int(np.prod([mesh.shape[a] for a in axes]))
+                if shape[dim_idx] % size == 0:
+                    parts[dim_idx] = axes[0] if len(axes) == 1 else axes
+            return P(*parts)
+    return P()          # replicate (norms, biases, small vectors)
+
+
+def param_pspecs(params_shape: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """Map a params pytree (of arrays or ShapeDtypeStructs) to PartitionSpecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [leaf_pspec(_path_keys(p), tuple(x.shape), mesh, fsdp=fsdp)
+             for p, x in flat]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, *, fsdp: bool = True
+                    ) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params_shape, mesh, fsdp=fsdp))
+
+
+# --------------------------------------------------------------------------
+# Cache / batch specs
+# --------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch: int) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % size == 0:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def cache_pspec(shape: Tuple[int, ...], mesh: Mesh, *, batch: int,
+                stacked: bool) -> P:
+    """KV-cache leaf spec: batch over (pod,data); ONE of {kv_heads, head_dim,
+    seq} over model (priority order, divisibility-gated); long-context
+    batch=1 caches shard seq over (pod,data) instead."""
+    dims = list(shape)
+    parts: list = [None] * len(dims)
+    i0 = 1 if stacked else 0
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes \
+        else 1
+    msize = mesh.shape.get("model", 1)
+
+    batch_idx = i0
+    used_data = False
+    if data_axes and dims[batch_idx] % dsize == 0 and dims[batch_idx] > 1:
+        parts[batch_idx] = (data_axes if len(data_axes) > 1
+                            else data_axes[0])
+        used_data = True
+
+    # choose one dim for the model axis: kv_heads > head_dim > seq
+    rest = list(range(i0 + 1, len(dims)))
+    model_dim = None
+    if len(dims) - i0 == 4:              # (B, Hkv, S, hd)
+        for cand in (i0 + 1, i0 + 3, i0 + 2):
+            if dims[cand] % msize == 0 and dims[cand] >= msize:
+                model_dim = cand
+                break
+    elif len(dims) - i0 == 3:            # (B, S, R) MLA latent
+        for cand in (i0 + 1, i0 + 2):
+            if dims[cand] % msize == 0 and dims[cand] >= msize:
+                model_dim = cand
+                break
+    if model_dim is not None and "model" in mesh.axis_names:
+        parts[model_dim] = "model"
+
+    # batch=1 long decode: context-parallel the seq dim over (pod, data)
+    if not used_data and data_axes and len(dims) - i0 >= 3:
+        seq_idx = i0 + 2 if len(dims) - i0 == 4 else i0 + 1
+        if parts[seq_idx] is None and dims[seq_idx] % dsize == 0 \
+                and dims[seq_idx] >= dsize:
+            parts[seq_idx] = (data_axes if len(data_axes) > 1
+                              else data_axes[0])
+    return P(*parts)
+
+
+def cache_shardings(cache_shape: Any, mesh: Mesh, *, batch: int) -> Any:
+    def one(x):
+        stacked = len(x.shape) >= 1 and x.shape[0] != batch and \
+            (len(x.shape) >= 4 or (len(x.shape) == 3 and x.shape[1] == batch))
+        # stacked iff dim0 is the layer-stack dim (batch appears at dim1)
+        st = (len(x.shape) >= 2 and x.shape[0] != batch
+              and x.shape[1] == batch)
+        return NamedSharding(mesh, cache_pspec(tuple(x.shape), mesh,
+                                               batch=batch, stacked=st))
+    return jax.tree.map(one, cache_shape)

@@ -1,0 +1,133 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Models annotate activations/params with *logical* axis names via
+:func:`shard`; a :class:`ShardingRules` context maps logical names to mesh
+axes.  Outside a rules context the annotations are no-ops, so the same model
+code runs unsharded on one CPU device (smoke tests) and fully sharded on the
+(pod, data, model) production mesh (dry-run / launch).
+
+Logical axes:
+  batch        DP over ("pod", "data") — training/prefill/decode batch
+  seq          context parallelism — long-decode KV-cache sequence
+  heads        TP over "model" — attention heads
+  kv_heads     TP over "model" (GQA: may be smaller than the axis → replicate)
+  embed        replicated activation feature dim
+  mlp          TP over "model" — FFN hidden
+  experts      expert parallelism over "model"
+  vocab        TP over "model" — embedding/logits
+  ssm_inner    TP over "model" — SSM/RG-LRU channel dim
+  stack        layer-stack dim of scanned params (never sharded)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "embed": None,
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_cap": None,
+    "vocab": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "stack": None,
+    "blocks_q": None,
+    "blocks_kv": None,
+    "clusters": None,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh,
+                 overrides: Optional[Dict[str, Optional[Tuple[str, ...]]]]
+                 = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+        axes = set(mesh.axis_names)
+        # drop mesh axes the current mesh does not have (e.g. "pod" single-pod)
+        for k, v in list(self.rules.items()):
+            if v is None:
+                continue
+            kept = tuple(a for a in v if a in axes)
+            self.rules[k] = kept if kept else None
+
+    def spec(self, *logical: Optional[str]) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            axes = self.rules.get(name)
+            if axes is None:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        return P(*parts)
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate with a sharding constraint if a rules context is active.
+
+    ``len(logical)`` may be shorter than ``x.ndim``; missing trailing axes are
+    treated as replicated.  Sizes not divisible by the mapped mesh axes fall
+    back to replication for that dim (e.g. 8 kv heads on a 16-way model axis).
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    logical = tuple(logical) + (None,) * (x.ndim - len(logical))
+    parts = []
+    used: set = set()
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.rules.get(name)
+        if axes:
+            # a mesh axis may appear at most once per spec: first dim wins
+            axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= rules.mesh.shape[a]
+        if dim % size != 0:
+            parts.append(None)
+        else:
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts)))

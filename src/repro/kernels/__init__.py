@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (block-sparse prefill
+attention) plus pure-jnp oracles.
+
+  block_sparse_attn.py  pl.pallas_call + BlockSpec splash-style kernel
+  ops.py                jit'd wrappers (index staging, Ã scatter)
+  ref.py                pure-jnp oracles the kernels are validated against
+"""
+from repro.kernels.ops import (
+    block_sparse_attention,
+    build_block_tables,
+    make_attention_fn,
+    scatter_block_stats,
+)
+from repro.kernels.ref import (
+    block_sparse_attention_ref,
+    decode_attention_ref,
+    dense_attention_ref,
+)
+
+__all__ = [
+    "block_sparse_attention", "build_block_tables", "make_attention_fn",
+    "scatter_block_stats", "block_sparse_attention_ref",
+    "decode_attention_ref", "dense_attention_ref",
+]

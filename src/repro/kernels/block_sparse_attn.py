@@ -1,0 +1,158 @@
+"""Pallas TPU block-sparse flash attention with fused block-stats (Ã).
+
+The paper's Triton kernel (FlashAttention-2 blockwise, mask-directed block
+skipping, fused block-avg QK emission) adapted to TPU (DESIGN.md §3):
+
+  * 128×128 blocks — MXU-shaped matmuls, VMEM-resident tiles;
+  * "splash"-style scalar prefetch: per (head, q-block) *active kv-block
+    index lists* + counts are prefetched to SMEM; the K/V ``BlockSpec``
+    index_map reads them, so skipped blocks are never touched by the MXU and
+    padded steps repeat the previous index (the Pallas TPU pipeline elides
+    the DMA when the block index does not change between steps);
+  * online softmax (running max / sum, accumulator rescale) — FA-2 math;
+  * a compact (H, NBq, W) stats output holds the block-averaged QK logits of
+    each *visited* step; the wrapper scatters it into the full (H, NB, NB)
+    Ã with −inf background (skipped blocks).
+
+Grid: ``(heads, q_blocks, W)`` with the W axis sequential ("arbitrary").
+Validated against :mod:`repro.kernels.ref` in interpret mode (CPU container).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(idx_ref, cnt_ref,                 # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,              # VMEM tiles
+            out_ref, stats_ref,               # outputs
+            acc_ref, m_ref, l_ref,            # VMEM scratch
+            *, block_q: int, block_kv: int, scale: float,
+            causal: bool, w_steps: int):
+    h = pl.program_id(0)
+    i = pl.program_id(1)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    count = cnt_ref[h, i]
+    j = idx_ref[h, i, w]
+    valid = w < count
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (bq, d)
+        k = k_ref[0].astype(jnp.float32)           # (bk, d)
+        v = v_ref[0].astype(jnp.float32)           # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        if causal:
+            q_pos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = j * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            tok_valid = k_pos <= q_pos
+        else:
+            tok_valid = jnp.ones((block_q, block_kv), dtype=bool)
+
+        # fused block stats: mean of QK logits over valid entries
+        n_valid = jnp.sum(tok_valid.astype(jnp.float32))
+        s_sum = jnp.sum(jnp.where(tok_valid, s, 0.0))
+        stats_ref[0, 0, 0] = jnp.where(
+            n_valid > 0, s_sum / jnp.maximum(n_valid, 1.0), NEG_INF)
+
+        s = jnp.where(tok_valid, s, NEG_INF)
+        m_prev = m_ref[...]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        p = jnp.where(tok_valid, jnp.exp(s - m_new), 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jnp.logical_not(valid))
+    def _skip():
+        stats_ref[0, 0, 0] = NEG_INF
+
+    @pl.when(w == w_steps - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+def block_sparse_attention_kernel(
+    q: jnp.ndarray,             # (H, N, Dqk)
+    k: jnp.ndarray,             # (Hkv, N, Dqk)
+    v: jnp.ndarray,             # (Hkv, N, Dv)
+    indices: jnp.ndarray,       # (H, NBq, W) int32 active kv-block ids
+    counts: jnp.ndarray,        # (H, NBq) int32
+    *,
+    block_size: int,
+    causal: bool = True,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (H, N, Dv), stats_compact (H, NBq, W) f32)."""
+    h, n, d = q.shape
+    h_kv, _, dv = v.shape
+    group = h // h_kv
+    nbq = n // block_size
+    w_steps = indices.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_size, block_kv=block_size, scale=scale,
+        causal=causal, w_steps=w_steps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(h, nbq, w_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_size, d),
+                         lambda hh, ii, ww, idx, cnt: (hh, ii, 0)),
+            pl.BlockSpec((1, block_size, d),
+                         lambda hh, ii, ww, idx, cnt:
+                         (hh // group, idx[hh, ii, ww], 0)),
+            pl.BlockSpec((1, block_size, dv),
+                         lambda hh, ii, ww, idx, cnt:
+                         (hh // group, idx[hh, ii, ww], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_size, dv),
+                         lambda hh, ii, ww, idx, cnt: (hh, ii, 0)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda hh, ii, ww, idx, cnt: (hh, ii, ww)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_size, dv), jnp.float32),
+            pltpu.VMEM((block_size, 1), jnp.float32),
+            pltpu.VMEM((block_size, 1), jnp.float32),
+        ],
+    )
+
+    out, stats = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((h, n, dv), q.dtype),
+            jax.ShapeDtypeStruct((h, nbq, w_steps), jnp.float32),
+        ],
+        interpret=interpret,
+    )(indices, counts, q, k, v)
+    return out, stats

@@ -1,0 +1,106 @@
+"""Chunked exact attention in pure JAX (flash-style lax.scan over q blocks).
+
+This is the O(N)-memory attention used (a) as the differentiable training
+attention, (b) as the dry-run lowering path where XLA:CPU cannot express
+data-dependent block skipping (DESIGN.md §3), and (c) as the large-N variant
+of the block-sparse oracle.  Semantics match :mod:`repro.kernels.ref`
+exactly; tests assert allclose between the two and against the Pallas kernel.
+
+Accepts an optional block mask: masked blocks contribute nothing to the
+softmax and carry −inf in the emitted Ã (matching the sparse kernel), but the
+FLOPs are still issued — on TPU the Pallas kernel is the one that skips.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def chunked_attention(
+    q: jnp.ndarray,                     # (B, H, N, Dqk)
+    k: jnp.ndarray,                     # (B, H, Nkv, Dqk)  (kv pre-expanded)
+    v: jnp.ndarray,                     # (B, H, Nkv, Dv)
+    *,
+    block_size: int = 128,
+    causal: bool = True,
+    block_mask: Optional[jnp.ndarray] = None,   # (B, H, NBq, NBkv) bool
+    window: int = 0,                    # sliding window in tokens (0 = full)
+    sink: int = 0,                      # always-visible prefix tokens
+    collect_stats: bool = False,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Exact attention, scanned over query blocks.
+
+    Returns ``(out (B,H,N,Dv), a_tilde (B,H,NBq,NBkv) | None)``.
+    """
+    b, h, n, d = q.shape
+    nkv = k.shape[2]
+    if block_mask is None:
+        # no mask to respect — free to shrink the block until it divides
+        while n % block_size or nkv % block_size:
+            block_size -= 1
+    nbq = n // block_size
+    nbkv = nkv // block_size
+    scale = 1.0 / (d ** 0.5)
+    q32 = jnp.asarray(q, jnp.float32)
+    k32 = jnp.asarray(k, jnp.float32)
+    v32 = jnp.asarray(v, jnp.float32)
+    offset = nkv - n                      # query i is global position i+offset
+
+    kpos = jnp.arange(nkv)
+
+    def body(carry, i):
+        del carry
+        qb = jax.lax.dynamic_slice_in_dim(q32, i * block_size, block_size, 2)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qb, k32) * scale
+        qpos = i * block_size + jnp.arange(block_size) + offset
+        valid = jnp.ones((block_size, nkv), dtype=bool)
+        if causal:
+            valid &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            in_win = (qpos[:, None] - kpos[None, :]) < window
+            valid &= in_win | (kpos[None, :] < sink)
+        if block_mask is not None:
+            row = jax.lax.dynamic_slice_in_dim(block_mask, i, 1, 2)[:, :, 0]
+            tokrow = jnp.repeat(row, block_size, axis=-1)     # (B,H,Nkv)
+            valid = valid[None, None] & tokrow[:, :, None, :]
+        else:
+            valid = jnp.broadcast_to(valid[None, None],
+                                     (b, h, block_size, nkv))
+        masked = jnp.where(valid, logits, NEG_INF)
+        m = jnp.max(masked, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(valid, jnp.exp(masked - m), 0.0)
+        denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        ob = jnp.einsum("bhqk,bhkd->bhqd", p / denom, v32)
+
+        if collect_stats:
+            lg = logits.reshape(b, h, block_size, nbkv, block_size)
+            vd = valid.reshape(b, h, block_size, nbkv, block_size)
+            cnt = jnp.sum(vd, axis=(2, 4))
+            s = jnp.sum(jnp.where(vd, lg, 0.0), axis=(2, 4))
+            stats = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1), NEG_INF)
+        else:
+            stats = jnp.zeros((b, h, 0), jnp.float32)
+        return None, (jnp.asarray(ob, q.dtype), stats)
+
+    _, (blocks, stats) = jax.lax.scan(body, None, jnp.arange(nbq))
+    out = jnp.moveaxis(blocks, 0, 2).reshape(b, h, n, -1)
+    if collect_stats:
+        a_tilde = jnp.moveaxis(stats, 0, 2)                   # (B,H,NBq,NBkv)
+        return out, a_tilde
+    return out, None
+
+
+def chunked_attention_fn(*, block_size: int):
+    """AttentionFn adapter for repro.core.share_attention (single sample,
+    (H, N, D) operands, always collects Ã)."""
+    def fn(q, kx, vx, masks):
+        out, a_tilde = chunked_attention(
+            q[None], kx[None], vx[None], block_size=block_size,
+            causal=True, block_mask=masks[None], collect_stats=True)
+        return out[0], a_tilde[0]
+    return fn

@@ -1,0 +1,216 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+Decode is memory-bound (EXPERIMENTS.md §Roofline: every decode_32k /
+long_500k pair), so the kernel streams the grouped KV cache HBM→VMEM exactly
+once, keeps the GQA query block resident, and supports:
+
+  * grouped-query attention without cache expansion (q reshaped to
+    (Hkv, G, D); the cache is read once, not ×G);
+  * a per-(kv-head, group) token ``keep`` mask — the decode-phase pattern
+    sharing extension: masked-out cache blocks still stream on this simple
+    variant, but the block-skip variant below prunes whole kv blocks whose
+    keep-mask is empty via scalar-prefetched block tables (same splash
+    machinery as the prefill kernel);
+  * running-max online softmax over sequential kv blocks.
+
+Grid: ``(Hkv, S/bs)`` with the kv axis sequential.  Validated against
+:func:`repro.kernels.ref.decode_attention_ref` / the grouped einsum in
+interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref,      # VMEM tiles
+            out_ref,                             # output
+            acc_ref, m_ref, l_ref,               # scratch
+            *, block_kv: int, scale: float, kv_steps: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (G, D)
+    k = k_ref[0].astype(jnp.float32)             # (bs, D)
+    v = v_ref[0].astype(jnp.float32)             # (bs, Dv)
+    valid = mask_ref[0]                          # (G, bs) bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (G, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no valid key yet keep m = -inf; guard the rescale
+    alpha = jnp.where(jnp.isfinite(m_prev),
+                      jnp.exp(m_prev - jnp.where(jnp.isfinite(m_new),
+                                                 m_new, 0.0)), 0.0)
+    p = jnp.where(valid, jnp.exp(s - jnp.where(jnp.isfinite(m_new),
+                                               m_new, 0.0)), 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,             # (H, D) one token's queries
+    cache_k: jnp.ndarray,       # (Hkv, S, D)
+    cache_v: jnp.ndarray,       # (Hkv, S, Dv)
+    mask: jnp.ndarray,          # (H, S) bool — length ∧ window ∧ keep
+    *,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (H, Dv)."""
+    h, d = q.shape
+    hkv, s, dv = cache_v.shape
+    g = h // hkv
+    kv_steps = s // block_kv
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(hkv, g, d)
+    maskg = mask.reshape(hkv, g, s)
+
+    kernel = functools.partial(_kernel, block_kv=block_kv, scale=scale,
+                               kv_steps=kv_steps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(hkv, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda h_, j: (h_, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda h_, j: (h_, j, 0)),
+            pl.BlockSpec((1, block_kv, dv), lambda h_, j: (h_, j, 0)),
+            pl.BlockSpec((1, g, block_kv), lambda h_, j: (h_, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda h_, j: (h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((hkv, g, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, cache_k, cache_v, maskg)
+    return out.reshape(h, dv)
+
+
+def _sparse_kernel(idx_ref, cnt_ref,
+                   q_ref, k_ref, v_ref, mask_ref,
+                   out_ref, acc_ref, m_ref, l_ref,
+                   *, block_kv: int, scale: float, w_steps: int):
+    h = pl.program_id(0)
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_step = w < cnt_ref[h]
+
+    @pl.when(valid_step)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        valid = mask_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe), 0.0)
+        p = jnp.where(valid, jnp.exp(s - safe), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(w == w_steps - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_decode_sparse(
+    q: jnp.ndarray,             # (H, D)
+    cache_k: jnp.ndarray,       # (Hkv, S, D)
+    cache_v: jnp.ndarray,       # (Hkv, S, Dv)
+    mask: jnp.ndarray,          # (H, S) bool — already includes keep-set
+    *,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Block-skipping variant: kv blocks whose keep-mask is all-False for a
+    kv-head group are never streamed (scalar-prefetched block tables — the
+    decode analogue of the prefill splash kernel)."""
+    h, d = q.shape
+    hkv, s, dv = cache_v.shape
+    g = h // hkv
+    nb = s // block_kv
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(hkv, g, d)
+    maskg = mask.reshape(hkv, g, s)
+    # per-kv-head active block table (union over the group's heads)
+    blk_any = jnp.any(maskg.reshape(hkv, g, nb, block_kv), axis=(1, 3))
+    cols = jnp.arange(nb, dtype=jnp.int32)
+    key = jnp.where(blk_any, cols, cols + nb)
+    order = jnp.argsort(key, axis=-1).astype(jnp.int32)
+    counts = jnp.sum(blk_any, axis=-1).astype(jnp.int32)
+    last = jnp.take_along_axis(order,
+                               jnp.maximum(counts - 1, 0)[:, None], -1)
+    widx = jnp.arange(nb, dtype=jnp.int32)
+    indices = jnp.where(widx[None, :] < counts[:, None], order, last)
+
+    kernel = functools.partial(_sparse_kernel, block_kv=block_kv,
+                               scale=scale, w_steps=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda h_, w, idx, cnt: (h_, 0, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda h_, w, idx, cnt: (h_, idx[h_, w], 0)),
+            pl.BlockSpec((1, block_kv, dv),
+                         lambda h_, w, idx, cnt: (h_, idx[h_, w], 0)),
+            pl.BlockSpec((1, g, block_kv),
+                         lambda h_, w, idx, cnt: (h_, 0, idx[h_, w])),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv),
+                               lambda h_, w, idx, cnt: (h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hkv, g, dv), q.dtype),
+        interpret=interpret,
+    )(indices, counts, qg, cache_k, cache_v, maskg)
+    return out.reshape(h, dv)

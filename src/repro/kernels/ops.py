@@ -1,0 +1,96 @@
+"""Jitted wrappers around the attention kernels.
+
+``block_sparse_attention`` is the AttentionFn consumed by
+:mod:`repro.core.share_attention`: it takes per-head block masks, stages the
+splash index tables in-graph, dispatches to the Pallas kernel (or the jnp
+oracle), and scatters the compact block-stats back into the full Ã layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_ops
+from repro.kernels.block_sparse_attn import block_sparse_attention_kernel
+
+NEG_INF = float("-inf")
+
+
+def build_block_tables(block_mask: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(…, NBq, NBkv) bool mask → splash index tables.
+
+    Returns ``(indices, counts)``: active kv-block ids ascending, padded by
+    *repeating the last active id* so padded grid steps re-address the same
+    block and the TPU pipeline elides their DMA (DESIGN.md §3).
+    """
+    nb_kv = block_mask.shape[-1]
+    cols = jnp.arange(nb_kv, dtype=jnp.int32)
+    # active columns sort before inactive ones, each group ascending
+    key = jnp.where(block_mask, cols, cols + nb_kv)
+    order = jnp.argsort(key, axis=-1).astype(jnp.int32)
+    counts = jnp.sum(block_mask, axis=-1).astype(jnp.int32)
+    last_active = jnp.take_along_axis(
+        order, jnp.maximum(counts - 1, 0)[..., None], axis=-1)
+    w = jnp.arange(nb_kv, dtype=jnp.int32)
+    indices = jnp.where(w < counts[..., None], order, last_active)
+    return indices, counts
+
+
+def scatter_block_stats(stats_compact: jnp.ndarray,  # (H, NBq, W)
+                        indices: jnp.ndarray,        # (H, NBq, W)
+                        nb_kv: int) -> jnp.ndarray:
+    """Compact per-step stats → full (H, NBq, NBkv) Ã with −inf background.
+
+    Padded steps carry −inf, and scattering with ``max`` keeps the real value
+    when a padded step repeats an active block id.
+    """
+    h, nbq, _ = stats_compact.shape
+    full = jnp.full((h, nbq, nb_kv), NEG_INF, jnp.float32)
+    h_ix = jnp.arange(h)[:, None, None]
+    q_ix = jnp.arange(nbq)[None, :, None]
+    return full.at[h_ix, q_ix, indices].max(stats_compact)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "causal", "impl",
+                                    "interpret"))
+def block_sparse_attention(
+    q: jnp.ndarray,             # (H, N, Dqk)
+    k: jnp.ndarray,             # (H or Hkv, N, Dqk)
+    v: jnp.ndarray,             # (H or Hkv, N, Dv)
+    block_mask: jnp.ndarray,    # (H, NBq, NBkv) bool
+    *,
+    block_size: int,
+    causal: bool = True,
+    impl: str = "kernel",       # "kernel" | "ref"
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-sparse attention + fused Ã for a single sample."""
+    if impl == "ref":
+        h = q.shape[0]
+        if k.shape[0] != h:
+            k = jnp.repeat(k, h // k.shape[0], axis=0)
+            v = jnp.repeat(v, h // v.shape[0], axis=0)
+        return ref_ops.block_sparse_attention_ref(
+            q, k, v, block_mask, block_size=block_size, causal=causal)
+    indices, counts = build_block_tables(block_mask)
+    out, stats_compact = block_sparse_attention_kernel(
+        q, k, v, indices, counts, block_size=block_size, causal=causal,
+        interpret=interpret)
+    a_tilde = scatter_block_stats(stats_compact, indices,
+                                  block_mask.shape[-1])
+    return out, a_tilde
+
+
+def make_attention_fn(*, block_size: int, impl: str = "ref",
+                      interpret: bool = True, causal: bool = True):
+    """Bind an AttentionFn for repro.core.share_attention."""
+    def fn(q, k, v, masks):
+        return block_sparse_attention(
+            q, k, v, masks, block_size=block_size, causal=causal,
+            impl=impl, interpret=interpret)
+    return fn

@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for the attention kernels.
+
+These are the correctness references the Pallas kernels are validated against
+(tests sweep shapes/dtypes and assert_allclose) and the implementation used on
+the CPU dry-run path (``attention_impl="ref"`` — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def _token_masks(block_mask: jnp.ndarray, n_q: int, n_kv: int,
+                 block_q: int, block_kv: int, causal: bool):
+    """Expand an (NBq, NBkv) block mask to token level, with causality."""
+    tok = jnp.repeat(jnp.repeat(block_mask, block_q, axis=-2),
+                     block_kv, axis=-1)
+    if causal:
+        qpos = jnp.arange(n_q)[:, None] + (n_kv - n_q)
+        kpos = jnp.arange(n_kv)[None, :]
+        tok = tok & (kpos <= qpos)
+    return tok
+
+
+def block_sparse_attention_ref(
+    q: jnp.ndarray,             # (H, N, Dqk)
+    k: jnp.ndarray,             # (H, N, Dqk)
+    v: jnp.ndarray,             # (H, N, Dv)
+    block_mask: jnp.ndarray,    # (H, NB, NB) bool
+    *,
+    block_size: int,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the block-sparse flash kernel.
+
+    Returns:
+      out: (H, N, Dv) attention output (same dtype as q).
+      a_tilde: (H, NB, NB) f32 block-averaged QK logits over *valid* (mask ∧
+        causal) positions; −inf where the block is skipped or fully
+        non-causal.  This is the Ã of paper Algorithm 1 line 8.
+    """
+    h, n, d = q.shape
+    nb = n // block_size
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", jnp.asarray(q, jnp.float32),
+                        jnp.asarray(k, jnp.float32)) * scale
+
+    tok = _token_masks(block_mask, n, n, block_size, block_size, causal)
+    masked = jnp.where(tok, logits, NEG_INF)
+
+    # numerically safe softmax (rows always have ≥1 valid block by contract)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(tok, jnp.exp(masked - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,hkd->hqd", p / denom, jnp.asarray(v, jnp.float32))
+
+    # block-averaged QK logits over valid positions
+    valid = tok.reshape(h, nb, block_size, nb, block_size)
+    lg = logits.reshape(h, nb, block_size, nb, block_size)
+    cnt = jnp.sum(valid, axis=(2, 4))
+    s = jnp.sum(jnp.where(valid, lg, 0.0), axis=(2, 4))
+    a_tilde = jnp.where(cnt > 0, s / jnp.maximum(cnt, 1), NEG_INF)
+    return jnp.asarray(out, q.dtype), a_tilde
+
+
+def dense_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True) -> jnp.ndarray:
+    """FlashAttention-2 baseline semantics (exact dense attention)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("...qd,...kd->...qk", jnp.asarray(q, jnp.float32),
+                        jnp.asarray(k, jnp.float32)) * scale
+    if causal:
+        n_q, n_kv = logits.shape[-2:]
+        qpos = jnp.arange(n_q)[:, None] + (n_kv - n_q)
+        kpos = jnp.arange(n_kv)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, NEG_INF)
+    p = jnp.asarray(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)),
+                    jnp.float32)
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("...qk,...kd->...qd", p, jnp.asarray(v, jnp.float32))
+    return jnp.asarray(out, q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray,      # (H, 1, D) or (H, D)
+                         k: jnp.ndarray,      # (H, S, D)
+                         v: jnp.ndarray,      # (H, S, Dv)
+                         *,
+                         length_mask: jnp.ndarray | None = None,  # (S,) bool
+                         window: int = 0,
+                         sink: int = 0) -> jnp.ndarray:
+    """Single-token decode against a KV cache; optional sliding window + sink
+    (the SWA long-decode variant, DESIGN.md §6)."""
+    squeeze = q.ndim == 2
+    if squeeze:
+        q = q[:, None, :]
+    d = q.shape[-1]
+    s = k.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum("hqd,hkd->hqk", jnp.asarray(q, jnp.float32),
+                        jnp.asarray(k, jnp.float32)) * scale
+    mask = jnp.ones((s,), bool)
+    if length_mask is not None:
+        mask = mask & length_mask
+    if window > 0:
+        pos = jnp.arange(s)
+        last = (jnp.sum(length_mask) - 1) if length_mask is not None else s - 1
+        in_window = pos > (last - window)
+        mask = mask & (in_window | (pos < sink))
+    logits = jnp.where(mask[None, None, :], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    out = jnp.einsum("hqk,hkd->hqd", p, jnp.asarray(v, jnp.float32))
+    out = jnp.asarray(out, q.dtype)
+    return out[:, 0, :] if squeeze else out

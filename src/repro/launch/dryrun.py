@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/bench_roofline.py.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SKIP_PAIRS, dryrun_pairs, get_config, get_shape
+from repro.launch.hlo_analysis import (
+    collective_bytes,
+    dominant_term,
+    roofline_terms,
+)
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = 1 token."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    n_params = cfg.param_count()        # active params (MoE: top-k only)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_params * tokens
+    return 2.0 * n_params * shape.global_batch      # decode: 1 token/row
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, *,
+             method: str = "share", fsdp=None, save: bool = True) -> dict:
+    from repro.launch.steps import build_step          # after XLA_FLAGS
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "method": method}
+    t0 = time.time()
+    try:
+        bundle = build_step(arch, shape_name, mesh, method=method,
+                            fsdp=fsdp)
+        with mesh:
+            lowered = jax.jit(
+                bundle.fn, in_shardings=bundle.in_shardings
+            ).lower(*bundle.args)
+            rec["lower_s"] = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.time() - t1
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: float(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:                          # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+
+        cost = compiled.cost_analysis() or {}
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        coll = collective_bytes(compiled.as_text())
+        terms = roofline_terms(
+            flops=flops, bytes_accessed=bytes_acc, coll=coll, chips=chips,
+            peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+        mf = model_flops(arch, shape_name)
+        rec.update({
+            "cost": {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float))},
+            "collectives": coll,
+            "roofline": terms,
+            "dominant": dominant_term(terms),
+            "model_flops": mf,
+            "model_flops_per_chip": mf / chips,
+            "useful_flop_ratio": (mf / chips) / flops if flops else 0.0,
+            "status": "ok",
+        })
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()
+    rec["total_s"] = time.time() - t0
+
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR,
+                            f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--method", default="share")
+    ap.add_argument("--all", action="store_true",
+                    help="run every non-skipped (arch, shape) pair")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        pairs = list(dryrun_pairs())
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        if (args.arch, args.shape) in SKIP_PAIRS:
+            print(f"SKIP {args.arch} {args.shape}: "
+                  f"{SKIP_PAIRS[(args.arch, args.shape)]}")
+            return
+        pairs = [(args.arch, args.shape)]
+
+    n_ok = n_fail = 0
+    for arch, shape in pairs:
+        for mesh_kind in meshes:
+            path = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_kind}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"SKIP(existing) {arch} {shape} {mesh_kind}")
+                        continue
+            rec = run_pair(arch, shape, mesh_kind, method=args.method)
+            ok = rec["status"] == "ok"
+            n_ok += ok
+            n_fail += (not ok)
+            if ok:
+                r = rec["roofline"]
+                print(f"OK   {arch:22s} {shape:12s} {mesh_kind:6s} "
+                      f"compile={rec['compile_s']:6.1f}s "
+                      f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                      f"coll={r['collective_s']:.3e}s dom={rec['dominant']}")
+            else:
+                print(f"FAIL {arch:22s} {shape:12s} {mesh_kind:6s} "
+                      f"{rec['error'][:120]}")
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

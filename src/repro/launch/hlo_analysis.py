@@ -1,0 +1,81 @@
+"""Post-compile HLO analysis: collective-byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` provides FLOPs and bytes-accessed but no
+collective traffic; we parse the optimized HLO text and sum the output-shape
+bytes of every collective op (documented approximation: an all-gather's
+output size ≈ bytes landing on each device; reduce-scatter/all-reduce input
+≈ output × ring-factor — we report raw op-output bytes per category so the
+roofline collective term is a consistent lower bound).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every tensor shape in a (possibly tuple) shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-category {count, bytes} from optimized HLO text."""
+    out = {op: {"count": 0, "bytes": 0} for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}/ ]+?)\s+"
+                     r"(all-gather-start|all-gather|all-reduce-start|"
+                     r"all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute-start|collective-permute)\(",
+                     line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        if op not in out:
+            continue
+        out[op]["count"] += 1
+        out[op]["bytes"] += _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   coll: Dict[str, Dict[str, float]], chips: int,
+                   peak_flops: float, hbm_bw: float, ici_bw: float
+                   ) -> Dict[str, float]:
+    """Three-term roofline (seconds).  cost_analysis numbers are already
+    per-partition under SPMD, so terms divide by per-chip rates only."""
+    total_coll = sum(v["bytes"] for v in coll.values())
+    return {
+        "compute_s": flops / peak_flops,
+        "memory_s": bytes_accessed / hbm_bw,
+        "collective_s": total_coll / ici_bw,
+        "collective_bytes": total_coll,
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    cand = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(cand, key=cand.get)

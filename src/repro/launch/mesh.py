@@ -1,0 +1,30 @@
+"""Production mesh factory.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis extends
+data parallelism across the DCN/ICI boundary.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh for unit tests (requires ≥ prod(shape) local devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12        # 197 TFLOP/s
+HBM_BW = 819e9                  # 819 GB/s
+ICI_BW = 50e9                   # ~50 GB/s per link

@@ -1,0 +1,178 @@
+"""Step builders shared by the dry-run, launcher, and benchmarks.
+
+For each (arch, input shape) this module produces:
+  * the jitted step function (train_step / prefill_step / decode_step),
+  * ShapeDtypeStruct avals for every argument (no allocation),
+  * NamedShardings for params / optimizer state / batch / cache.
+
+Decode shapes lower ``serve_step`` — ONE token against a ``seq_len`` KV
+cache; ``long_500k`` uses the sub-quadratic variant per family (SSM/RG-LRU
+state, native SWA for Mixtral, SWA-decode for dense GQA — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, get_config, get_shape
+from repro.core.api import SharePrefill
+from repro.distributed.param_specs import (
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+)
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.models import build_model
+from repro.models.api import Model
+from repro.optim import init_adamw
+from repro.training import TrainConfig, make_train_step
+
+LONG_DECODE_WINDOW = 8192       # SWA-decode window for dense archs
+LONG_DECODE_SINK = 128
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]           # ShapeDtypeStructs (sharding-annotated)
+    in_shardings: Any
+    model: Model
+    cfg: ModelConfig
+
+
+def _with_rules(fn: Callable, mesh: Mesh) -> Callable:
+    """Trace the step inside a ShardingRules context so the model's
+    ``shard()`` activation constraints bind to the mesh (without this, GSPMD
+    has only the input shardings to propagate from and falls back to
+    replicating scan-carried weights — §Perf iteration 1)."""
+    rules = ShardingRules(mesh)
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with use_rules(rules):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
+def _aval(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree_avals, tree_shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree_avals, tree_shardings)
+
+
+def _extra_inputs(cfg: ModelConfig, batch: int, seq: int, mesh: Mesh,
+                  dtype) -> Dict[str, Any]:
+    """Modality-stub inputs (DESIGN.md §5): VLM M-RoPE ids, audio frames."""
+    bspec = batch_pspec(mesh, batch)
+    extras: Dict[str, Any] = {}
+    if cfg.vlm.enabled:
+        extras["positions"] = _aval(
+            (3, batch, seq), jnp.int32,
+            NamedSharding(mesh, P(None, *bspec)))
+    if cfg.encdec.enabled:
+        extras["embeds"] = _aval(
+            (batch, cfg.encdec.encoder_seq_len, cfg.d_model), dtype,
+            NamedSharding(mesh, bspec))
+    return extras
+
+
+def _sp_for(cfg: ModelConfig) -> SharePrefill:
+    if not cfg.share_prefill.enabled or not cfg.num_heads:
+        return SharePrefill.disabled()
+    return SharePrefill.trivial(cfg.share_prefill, cfg.num_layers,
+                                cfg.num_heads)
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh, *,
+               method: str = "share",
+               dtype=jnp.bfloat16,
+               fsdp: Optional[bool] = None,
+               microbatches: int = 1) -> StepBundle:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "train" and cfg.remat_policy == "none":
+        cfg = dataclasses.replace(cfg, remat_policy="dots")
+    model = build_model(cfg, dtype=dtype)
+    b, s = shape.global_batch, shape.seq_len
+
+    params_avals = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    use_fsdp = fsdp if fsdp is not None else (shape.kind == "train")
+    p_shard = param_shardings(params_avals, mesh, fsdp=use_fsdp)
+    params = _with_shardings(params_avals, p_shard)
+    bspec = NamedSharding(mesh, batch_pspec(mesh, b))
+    extras = _extra_inputs(cfg, b, s, mesh, dtype)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=microbatches)
+        extra_fn = (lambda batch: {k: batch[k] for k in extras}) \
+            if extras else None
+        step = make_train_step(model, tcfg, extra_fn)
+        opt_avals = jax.eval_shape(lambda p: init_adamw(p), params_avals)
+        from repro.optim import AdamWState
+        opt_shard = AdamWState(step=NamedSharding(mesh, P()),
+                               mu=p_shard, nu=p_shard)
+        opt = _with_shardings(opt_avals, opt_shard)
+        batch = {
+            "tokens": _aval((b, s), jnp.int32, bspec),
+            "labels": _aval((b, s), jnp.int32, bspec),
+            **extras,
+        }
+        fn = step
+        args = (params, opt, batch)
+        in_sh = (p_shard, opt_shard,
+                 jax.tree.map(lambda a: a.sharding, batch))
+        return StepBundle(f"{arch}/{shape_name}/train",
+                          _with_rules(fn, mesh), args, in_sh, model, cfg)
+
+    if shape.kind == "prefill":
+        sp = _sp_for(cfg)
+
+        def prefill_step(params, tokens, extras):
+            return model.prefill(params, tokens, sp, method=method,
+                                 attn_impl="chunked", **extras)
+
+        tokens = _aval((b, s), jnp.int32, bspec)
+        args = (params, tokens, extras)
+        in_sh = (p_shard, bspec,
+                 jax.tree.map(lambda a: a.sharding, extras))
+        return StepBundle(f"{arch}/{shape_name}/prefill",
+                          _with_rules(prefill_step, mesh), args, in_sh,
+                          model, cfg)
+
+    # decode
+    window = 0
+    if shape_name == "long_500k" and cfg.family in ("dense", "vlm", "moe"):
+        window = cfg.sliding_window or LONG_DECODE_WINDOW
+
+    cache_avals = jax.eval_shape(
+        lambda: model.init_cache(b, s, dtype))
+    c_shard = cache_shardings(cache_avals, mesh, batch=b)
+    cache = _with_shardings(cache_avals, c_shard)
+    token = _aval((b, 1), jnp.int32, bspec)
+    pos_aval = _aval((), jnp.int32, NamedSharding(mesh, P()))
+    dec_extras = {}
+    if cfg.vlm.enabled:
+        dec_extras["positions"] = _aval(
+            (3, b, 1), jnp.int32,
+            NamedSharding(mesh, P(None, *batch_pspec(mesh, b))))
+
+    def decode_fn(params, token, cache, pos, extras):
+        return model.decode(params, token, cache, pos, window=window,
+                            **extras)
+
+    args = (params, token, cache, pos_aval, dec_extras)
+    in_sh = (p_shard, bspec, c_shard, NamedSharding(mesh, P()),
+             jax.tree.map(lambda a: a.sharding, dec_extras))
+    return StepBundle(f"{arch}/{shape_name}/decode",
+                      _with_rules(decode_fn, mesh), args, in_sh, model, cfg)

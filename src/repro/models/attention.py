@@ -1,0 +1,227 @@
+"""GQA attention layer: train / prefill / decode paths.
+
+The prefill path is where the paper lives: ``method`` selects the pattern
+policy — ``dense`` (FlashAttention-2 semantics), ``share`` (SharePrefill),
+``vertical_slash`` (MInference default config) or ``flex`` (FlexPrefill) —
+all consuming the same block-sparse attention implementation so comparisons
+isolate the pattern policy (paper §6.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import baselines
+from repro.core import share_attention as sa
+from repro.core.api import SharePrefill
+from repro.core.patterns import (
+    block_mask_density,
+    causal_block_mask,
+    sliding_window_block_mask,
+)
+from repro.distributed.sharding import shard
+from repro.kernels.chunked import chunked_attention, chunked_attention_fn
+from repro.kernels.ops import make_attention_fn
+from repro.kernels.ref import decode_attention_ref
+from repro.models import common
+
+PREFILL_METHODS = ("dense", "share", "vertical_slash", "flex")
+
+
+class AttnStats(NamedTuple):
+    num_shared: jnp.ndarray
+    num_dense: jnp.ndarray
+    num_vs: jnp.ndarray
+    block_density: jnp.ndarray
+
+    @staticmethod
+    def zero() -> "AttnStats":
+        z = jnp.zeros(())
+        return AttnStats(z, z, z, jnp.ones(()))
+
+
+def init_attention_layer(key: jax.Array, cfg: ModelConfig,
+                         dtype=jnp.float32):
+    return common.init_gqa_proj(
+        key, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+        cfg.resolved_head_dim, dtype)
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig):
+    """positions: (B, S) or (3, B, S) for M-RoPE."""
+    if cfg.vlm.enabled and positions.ndim == 3:
+        rot = lambda x: common.apply_mrope(
+            x, positions[:, :, None, :], cfg.rope_theta,
+            cfg.vlm.mrope_sections)
+        # x is (B, H, S, D); positions stream (3, B, 1, S) broadcasts over H
+        return rot(q), rot(k)
+    pos = positions[:, None, :]          # (B, 1, S) broadcast over heads
+    rot = lambda x: common.apply_rope(x, pos, cfg.rope_theta)
+    return rot(q), rot(k)
+
+
+# --------------------------------------------------------------------------
+# Train (dense or SWA, differentiable, O(N) memory)
+# --------------------------------------------------------------------------
+
+def attention_train(params, x: jnp.ndarray, cfg: ModelConfig,
+                    positions: jnp.ndarray,
+                    block_size: int = 128) -> jnp.ndarray:
+    q, k, v = common.gqa_qkv(params, x)
+    q, k = _rope_qk(q, k, positions, cfg)
+    kx = common.repeat_kv(k, cfg.gqa_groups)
+    vx = common.repeat_kv(v, cfg.gqa_groups)
+    n = x.shape[1]
+    bs = min(block_size, n)
+    out, _ = chunked_attention(
+        q, kx, vx, block_size=bs, causal=True,
+        window=cfg.sliding_window, sink=0)
+    out = shard(out, "batch", "heads")
+    return common.gqa_out(params, out)
+
+
+# --------------------------------------------------------------------------
+# Prefill (pattern policies; returns KV cache)
+# --------------------------------------------------------------------------
+
+def attention_prefill(
+    params,
+    x: jnp.ndarray,                     # (B, S, D)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    method: str,
+    sp: SharePrefill,
+    sp_state,                           # batched PivotalState (or None)
+    cluster_ids: Optional[jnp.ndarray],  # (H,) for this layer
+    attn_impl: str = "chunked",         # chunked | ref | kernel
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], object, AttnStats]:
+    b, n, _ = x.shape
+    q, k, v = common.gqa_qkv(params, x)
+    q, k = _rope_qk(q, k, positions, cfg)
+
+    bs = sp.cfg.block_size if sp.cfg.enabled else 128
+    bs = min(bs, n)
+    use_sparse = method != "dense" and sp.applicable(n)
+    nb = n // bs if n % bs == 0 else 0
+
+    extra = None
+    if cfg.sliding_window and nb:
+        extra = sliding_window_block_mask(
+            nb, max(cfg.sliding_window // bs, 1))
+
+    if not use_sparse:
+        kx = common.repeat_kv(k, cfg.gqa_groups)
+        vx = common.repeat_kv(v, cfg.gqa_groups)
+        out, _ = chunked_attention(
+            q, kx, vx, block_size=bs, causal=True,
+            window=cfg.sliding_window)
+        out = shard(out, "batch", "heads")
+        return common.gqa_out(params, out), (k, v), sp_state, AttnStats.zero()
+
+    if attn_impl == "kernel":
+        attention_fn = make_attention_fn(block_size=bs, impl="kernel")
+    elif attn_impl == "ref":
+        attention_fn = make_attention_fn(block_size=bs, impl="ref")
+    else:
+        attention_fn = chunked_attention_fn(block_size=bs)
+
+    if method == "share":
+        out, new_state, lstats = sa.batched_share_prefill_attention_layer(
+            q, k, v, sp_state, cluster_ids, sp.cfg, attention_fn,
+            extra_mask=extra)
+        out = shard(out, "batch", "heads")
+        stats = AttnStats(lstats.num_shared, lstats.num_dense,
+                          lstats.num_vs, lstats.block_density)
+        return common.gqa_out(params, out), (k, v), new_state, stats
+
+    # baseline policies: build masks, run the same sparse attention
+    kx = common.repeat_kv(k, cfg.gqa_groups)
+    vx = common.repeat_kv(v, cfg.gqa_groups)
+    gamma = sp.cfg.gamma
+    if method == "vertical_slash":
+        mask_fn = lambda qh, kh: baselines.minference_masks(
+            qh, kh, gamma=gamma, block_size=bs)
+    elif method == "flex":
+        mask_fn = lambda qh, kh: baselines.flexprefill_masks(
+            qh, kh, gamma=gamma, block_size=bs)
+    else:
+        raise ValueError(f"unknown prefill method {method!r}")
+    masks = jax.vmap(mask_fn)(q, kx)                    # (B, H, NB, NB)
+    masks = masks & causal_block_mask(nb)[None, None]
+    if extra is not None:
+        masks = masks & extra[None, None]
+    out, _ = jax.vmap(attention_fn)(q, kx, vx, masks)
+    out = shard(out, "batch", "heads")
+    h = q.shape[1]
+    stats = AttnStats(jnp.zeros(()), jnp.zeros(()),
+                      jnp.asarray(float(h)),
+                      jnp.mean(block_mask_density(masks)))
+    return common.gqa_out(params, out), (k, v), sp_state, stats
+
+
+# --------------------------------------------------------------------------
+# Decode (1 token vs a KV cache)
+# --------------------------------------------------------------------------
+
+def attention_decode(
+    params,
+    x: jnp.ndarray,                     # (B, 1, D)
+    cfg: ModelConfig,
+    cache_k: jnp.ndarray,               # (B, Hkv, S, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,                   # scalar int32 — write slot index
+    positions: jnp.ndarray,             # (B, 1) or (3, B, 1) rope positions
+    *,
+    window: int = 0,
+    sink: int = 0,
+    valid_mask: Optional[jnp.ndarray] = None,   # (S,) cache-slot validity
+    keep_mask: Optional[jnp.ndarray] = None,    # (B, H, S) sparse decode
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    b, _, _ = x.shape
+    s = cache_k.shape[2]
+    q, k, v = common.gqa_qkv(params, x)
+    q, k = _rope_qk(q, k, positions, cfg)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=2)
+    # keep head_dim model-sharded when kv_heads cannot shard ("heads" is
+    # skipped by the dedupe if "kv_heads" already took the model axis) —
+    # forcing hd replication here costs a 30 GB/device cache all-gather
+    # (§Perf iteration 3).
+    cache_k = shard(cache_k, "batch", "kv_heads", "seq", "heads")
+    cache_v = shard(cache_v, "batch", "kv_heads", "seq", "heads")
+
+    length_mask = valid_mask if valid_mask is not None \
+        else jnp.arange(s) <= pos
+    mask = length_mask
+    if window > 0:
+        pos_idx = jnp.arange(s)
+        mask = mask & (((pos_idx > pos - window) & (pos_idx <= pos))
+                       | (pos_idx < sink))
+
+    # GQA decode WITHOUT materializing the expanded cache (§Perf iter 3):
+    # fold query heads into (kv_head, group) and contract against the
+    # grouped cache directly — HBM traffic is the cache once, not ×groups —
+    # and accumulate in f32 via preferred_element_type instead of casting
+    # the cache (an f32 cache copy would be hoisted to full stacked shape).
+    g = cfg.gqa_groups
+    hkv = cache_k.shape[1]
+    hd = q.shape[-1]
+    qg = q.squeeze(2).reshape(b, hkv, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[None, None, None, :], logits, -jnp.inf)
+    if keep_mask is not None:
+        # decode-phase pattern sharing (beyond paper): per-head kv keep-sets
+        km = keep_mask.reshape(b, hkv, g, s)
+        logits = jnp.where(km, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", jnp.asarray(p, cache_v.dtype),
+                     cache_v, preferred_element_type=jnp.float32)
+    out = jnp.asarray(out, x.dtype).reshape(b, hkv * g, 1, hd)
+    return common.gqa_out(params, out), (cache_k, cache_v)

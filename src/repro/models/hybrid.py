@@ -1,0 +1,258 @@
+"""RecurrentGemma hybrid stack: (recurrent, recurrent, local-attention) × 12
+super-blocks + 2 trailing recurrent layers (38 layers, 1:2 ratio).
+
+Local-attention layers keep a ring-buffer KV cache of ``local_attn_window``
+slots (slot = position mod W), so decode memory is O(window) — this is what
+makes long_500k decode sub-quadratic for this family.  SharePrefill applies
+to the local-attention layers (window ∧ sparse mask — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import SharePrefill
+from repro.models import common
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnStats
+from repro.models.rglru import (
+    init_rglru_layer,
+    recurrent_block_decode,
+    recurrent_block_forward,
+)
+from repro.models.transformer import (
+    PrefillResult,
+    embed_tokens,
+    logits_from_hidden,
+)
+
+SUPER = 3       # layers per super-block: rec, rec, attn
+
+
+def _attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg,
+                               sliding_window=cfg.rglru.local_attn_window)
+
+
+def _counts(cfg: ModelConfig) -> Tuple[int, int]:
+    n_super = cfg.num_layers // SUPER
+    n_trail = cfg.num_layers - n_super * SUPER       # trailing recurrents
+    return n_super, n_trail
+
+
+def _init_sublayer(key, cfg, kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    mixer = (init_rglru_layer(k1, cfg, dtype) if kind == "recurrent"
+             else attn_mod.init_attention_layer(k1, cfg, dtype))
+    return {
+        "mixer": mixer,
+        "mlp": common.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+        "ln1": common.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def init_hybrid_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    n_super, n_trail = _counts(cfg)
+    ks = jax.random.split(key, 6)
+
+    def init_super(kk):
+        k1, k2, k3 = jax.random.split(kk, 3)
+        return {
+            "rec1": _init_sublayer(k1, cfg, "recurrent", dtype),
+            "rec2": _init_sublayer(k2, cfg, "recurrent", dtype),
+            "attn": _init_sublayer(k3, cfg, "attention", dtype),
+        }
+
+    params = {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": common.dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                     dtype),
+        "stack": common.stack_init(init_super, ks[2], n_super),
+    }
+    for i in range(n_trail):
+        params[f"trail_{i}"] = _init_sublayer(
+            jax.random.fold_in(ks[3], i), cfg, "recurrent", dtype)
+    return params
+
+
+def _sub_forward(layer, x, cfg, kind, positions, carry_state=None):
+    """Full-sequence sublayer. Returns (x, state)."""
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    if kind == "recurrent":
+        y, state = recurrent_block_forward(layer["mixer"], h, cfg)
+    else:
+        y = attn_mod.attention_train(layer["mixer"], h, _attn_cfg(cfg),
+                                     positions)
+        state = None
+    x = x + y
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    return x + common.mlp(layer["mlp"], h), state
+
+
+def forward_train(params, cfg: ModelConfig, tokens, positions=None,
+                  embeds=None):
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+    _, n_trail = _counts(cfg)
+
+    def body(x, layer):
+        x, _ = _sub_forward(layer["rec1"], x, cfg, "recurrent", positions)
+        x, _ = _sub_forward(layer["rec2"], x, cfg, "recurrent", positions)
+        x, _ = _sub_forward(layer["attn"], x, cfg, "attention", positions)
+        return x, None
+
+    body = common.maybe_remat(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    for i in range(n_trail):
+        x, _ = _sub_forward(params[f"trail_{i}"], x, cfg, "recurrent",
+                            positions)
+    return logits_from_hidden(params, cfg, x), {
+        "load_balance_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+
+
+def _ring_slots(start: int, length: int, w: int) -> jnp.ndarray:
+    return (jnp.arange(length) + start) % w
+
+
+def _attn_prefill_sub(layer, x, cfg, positions, sp, sp_state, ids, method,
+                      attn_impl):
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    y, (k, v), sp_state, stats = attn_mod.attention_prefill(
+        layer["mixer"], h, _attn_cfg(cfg), positions, method=method, sp=sp,
+        sp_state=sp_state, cluster_ids=ids, attn_impl=attn_impl)
+    x = x + y
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    x = x + common.mlp(layer["mlp"], h)
+
+    # ring-buffer the last W tokens (slot = global position mod W)
+    s = k.shape[2]
+    w = min(cfg.rglru.local_attn_window, s)
+    kw, vw = k[:, :, -w:], v[:, :, -w:]
+    wcap = cfg.rglru.local_attn_window
+    if s >= wcap:
+        slots = _ring_slots(s - wcap, wcap, wcap)
+        ck = jnp.zeros(k.shape[:2] + (wcap,) + k.shape[3:], k.dtype
+                       ).at[:, :, slots].set(kw)
+        cv = jnp.zeros_like(ck).at[:, :, slots].set(vw)
+    else:
+        pad = wcap - s
+        ck = jnp.pad(kw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(vw, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x, (ck, cv), sp_state, stats
+
+
+def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
+            method="share", attn_impl="chunked", positions=None,
+            embeds=None) -> PrefillResult:
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+    n_super, n_trail = _counts(cfg)
+
+    use_sp = sp.cfg.enabled and sp.applicable(s)
+    sp_state = sp.init_state(b, s) if use_sp else None
+    # one cluster-id row per super-block's attention layer
+    ids_xs = (sp.layer_cluster_ids()[:n_super] if use_sp
+              else jnp.zeros((n_super, max(cfg.num_heads, 1)), jnp.int32))
+
+    def body(carry, xs):
+        x, sp_state = carry
+        layer, ids = xs
+        x, st1 = _sub_forward(layer["rec1"], x, cfg, "recurrent", positions)
+        x, st2 = _sub_forward(layer["rec2"], x, cfg, "recurrent", positions)
+        x, kv, sp_state, stats = _attn_prefill_sub(
+            layer["attn"], x, cfg, positions, sp, sp_state, ids, method,
+            attn_impl)
+        return (x, sp_state), ((st1, st2, kv), stats)
+
+    (x, sp_state), (caches, stats) = jax.lax.scan(
+        body, (x, sp_state), (params["stack"], ids_xs))
+
+    trail_states = []
+    for i in range(n_trail):
+        x, st = _sub_forward(params[f"trail_{i}"], x, cfg, "recurrent",
+                             positions)
+        trail_states.append(st)
+
+    logits = logits_from_hidden(params, cfg, x[:, -1, :])
+    if n_super:
+        stats = AttnStats(*(jnp.mean(f) for f in stats))
+    else:
+        stats = AttnStats.zero()
+    return PrefillResult(logits, {"stack": caches, "prefix": trail_states},
+                         stats, sp_state)
+
+
+def _sub_decode(layer, x, cfg, kind, state, pos, positions):
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    if kind == "recurrent":
+        y, state = recurrent_block_decode(layer["mixer"], h, cfg,
+                                          state[0], state[1])
+    else:
+        ck, cv = state
+        w = ck.shape[2]
+        slot = pos % w
+        # ring buffer: once pos ≥ w every slot holds a live (windowed) entry
+        valid = (jnp.arange(w) <= pos) | jnp.full((w,), pos >= w)
+        y, (ck, cv) = attn_mod.attention_decode(
+            layer["mixer"], h, _attn_cfg(cfg), ck, cv, slot, positions,
+            window=0, sink=0, valid_mask=valid)
+        state = (ck, cv)
+    x = x + y
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    return x + common.mlp(layer["mlp"], h), state
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, positions=None,
+                *, window: int = 0, embeds=None):
+    b = token.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, token)
+    _, n_trail = _counts(cfg)
+
+    def body(x, xs):
+        layer, (st1, st2, kv) = xs
+        x, st1 = _sub_decode(layer["rec1"], x, cfg, "recurrent", st1, pos,
+                             positions)
+        x, st2 = _sub_decode(layer["rec2"], x, cfg, "recurrent", st2, pos,
+                             positions)
+        x, kv = _sub_decode(layer["attn"], x, cfg, "attention", kv, pos,
+                            positions)
+        return x, (st1, st2, kv)
+
+    x, caches = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+    trail = []
+    for i, st in enumerate(cache["prefix"]):
+        x, st = _sub_decode(params[f"trail_{i}"], x, cfg, "recurrent", st,
+                            pos, positions)
+        trail.append(st)
+    return logits_from_hidden(params, cfg, x[:, -1, :]), {
+        "stack": caches, "prefix": trail}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """Recurrent states are O(1); attention ring buffers are O(window)."""
+    n_super, n_trail = _counts(cfg)
+    w = cfg.rglru.lru_width
+    cw = cfg.rglru.conv_width
+    wloc = min(cfg.rglru.local_attn_window, cache_len)
+    hd = cfg.resolved_head_dim
+    rec = lambda: (jnp.zeros((batch, cw - 1, w), dtype),
+                   jnp.zeros((batch, w), jnp.float32))
+    kv = lambda: (jnp.zeros((batch, cfg.num_kv_heads, wloc, hd), dtype),
+                  jnp.zeros((batch, cfg.num_kv_heads, wloc, hd), dtype))
+    one = (rec(), rec(), kv())
+    stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape), one)
+    return {"stack": stack, "prefix": [rec() for _ in range(n_trail)]}

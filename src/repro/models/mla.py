@@ -1,0 +1,164 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a small latent c_kv (kv_lora_rank) plus one shared
+rotary key stream; per-head keys/values are up-projections of the latent.
+The KV cache stores only (c_kv, k_rope) — the memory win that makes 128-head
+attention affordable.  Decode uses the **absorbed** formulation (q_nope is
+pushed through W_uk so scores are taken directly against the latent cache);
+prefill decompresses so SharePrefill's per-head pattern logic sees ordinary
+per-head Q·K blocks (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import SharePrefill
+from repro.core import share_attention as sa
+from repro.distributed.sharding import shard
+from repro.kernels.chunked import chunked_attention, chunked_attention_fn
+from repro.models import common
+from repro.models.attention import AttnStats
+
+
+def init_mla_layer(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    params = {
+        "w_kv_down": common.dense_init(
+            ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": common.init_rmsnorm(m.kv_lora_rank, dtype),
+        "w_uk": common.dense_init(
+            ks[2], (m.kv_lora_rank, h, m.qk_nope_head_dim), dtype),
+        "w_uv": common.dense_init(
+            ks[3], (m.kv_lora_rank, h, m.v_head_dim), dtype),
+        "wo": common.dense_init(ks[4], (h, m.v_head_dim, d), dtype),
+    }
+    if m.q_lora_rank:
+        params["w_q_down"] = common.dense_init(
+            ks[5], (d, m.q_lora_rank), dtype)
+        params["q_norm"] = common.init_rmsnorm(m.q_lora_rank, dtype)
+        params["w_q_up"] = common.dense_init(
+            ks[6], (m.q_lora_rank, h, qk_dim), dtype)
+    else:
+        params["w_q"] = common.dense_init(ks[0], (d, h, qk_dim), dtype)
+    return params
+
+
+def _project_q(params, x, cfg: ModelConfig):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = common.rmsnorm(params["q_norm"], x @ params["w_q_down"],
+                            cfg.rms_norm_eps)
+        q = jnp.einsum("bsr,rhk->bhsk", cq, params["w_q_up"])
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, params["w_q"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = q[..., m.qk_nope_head_dim:]
+    return shard(q_nope, "batch", "heads"), shard(q_rope, "batch", "heads")
+
+
+def _project_kv_latent(params, x, cfg: ModelConfig, positions):
+    """x → (c_kv (B,S,R), k_rope (B,1,S,rope_dim)) with RoPE applied."""
+    m = cfg.mla
+    down = x @ params["w_kv_down"]
+    c_kv = common.rmsnorm(params["kv_norm"], down[..., : m.kv_lora_rank],
+                          cfg.rms_norm_eps)
+    k_rope = down[..., m.kv_lora_rank:][:, None, :, :]   # (B,1,S,rope)
+    k_rope = common.apply_rope(k_rope, positions[:, None, :], cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _decompress(params, c_kv, cfg: ModelConfig):
+    m = cfg.mla
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, params["w_uv"])
+    return shard(k_nope, "batch", "heads"), shard(v, "batch", "heads")
+
+
+def mla_train(params, x, cfg: ModelConfig, positions,
+              block_size: int = 128) -> jnp.ndarray:
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg)
+    q_rope = common.apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope, v = _decompress(params, c_kv, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1]
+                                  + (m.qk_rope_head_dim,))], axis=-1)
+    out, _ = chunked_attention(q, k, v, block_size=min(block_size, s),
+                               causal=True)
+    out = shard(out, "batch", "heads")
+    return jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+
+
+def mla_prefill(params, x, cfg: ModelConfig, positions, *,
+                method: str, sp: SharePrefill, sp_state,
+                cluster_ids: Optional[jnp.ndarray],
+                attn_impl: str = "chunked"):
+    """Returns (y, cache=(c_kv, k_rope), new_state, stats)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg)
+    q_rope = common.apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope, v = _decompress(params, c_kv, cfg)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1]
+                                  + (m.qk_rope_head_dim,))], axis=-1)
+
+    use_sparse = method == "share" and sp.applicable(s)
+    if use_sparse:
+        bs = min(sp.cfg.block_size, s)
+        attention_fn = chunked_attention_fn(block_size=bs)
+        out, new_state, lstats = sa.batched_share_prefill_attention_layer(
+            q, k, v, sp_state, cluster_ids, sp.cfg, attention_fn)
+        stats = AttnStats(lstats.num_shared, lstats.num_dense,
+                          lstats.num_vs, lstats.block_density)
+    else:
+        out, _ = chunked_attention(q, k, v, block_size=min(128, s),
+                                   causal=True)
+        new_state, stats = sp_state, AttnStats.zero()
+    out = shard(out, "batch", "heads")
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return y, (c_kv, k_rope[:, 0]), new_state, stats
+
+
+def mla_decode(params, x, cfg: ModelConfig,
+               cache_ckv: jnp.ndarray,          # (B, S, R)
+               cache_krope: jnp.ndarray,        # (B, S, rope_dim)
+               pos: jnp.ndarray, positions):
+    """Absorbed decode: score latent cache directly (perf note in DESIGN.md)."""
+    m = cfg.mla
+    b = x.shape[0]
+    s = cache_ckv.shape[1]
+    q_nope, q_rope = _project_q(params, x, cfg)          # (B,H,1,·)
+    q_rope = common.apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    c_new, k_rope_new = _project_kv_latent(params, x, cfg, positions)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_new, pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope_new[:, 0], pos, axis=1)
+    cache_ckv = shard(cache_ckv, "batch", "seq")
+
+    # absorb W_uk into q: (B,H,1,R) scores against latent directly
+    q_lat = jnp.einsum("bhqk,rhk->bhqr", q_nope, params["w_uk"])
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    logits = (jnp.einsum("bhqr,bsr->bhqs", q_lat, cache_ckv)
+              + jnp.einsum("bhqk,bsk->bhqs", q_rope, cache_krope)) * scale
+    length_mask = jnp.arange(s) <= pos
+    logits = jnp.where(length_mask[None, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(jnp.asarray(logits, jnp.float32), axis=-1)
+    # attend in latent space, then decompress through W_uv (absorbed)
+    lat = jnp.einsum("bhqs,bsr->bhqr", p, cache_ckv)
+    out = jnp.einsum("bhqr,rhk->bhqk", lat, params["w_uv"])
+    y = jnp.einsum("bhqk,hkd->bqd", jnp.asarray(out, x.dtype), params["wo"])
+    return y, (cache_ckv, cache_krope)

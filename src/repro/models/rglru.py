@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = a^(c·r_t),  a = σ(Λ)      per-channel learned decay, c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Full-sequence evaluation uses ``jax.lax.associative_scan`` over the linear
+recurrence (log-depth on TPU); decode is the O(1) step.  The block wraps the
+RG-LRU in the Griffin recurrent-block topology: linear → causal conv →
+RG-LRU, gated by a parallel GeLU branch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import common
+
+_C = 8.0
+
+
+def init_rglru_layer(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so a ∈ [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9 ** 2, maxval=0.999 ** 2)
+    lam = jnp.log(jnp.sqrt(u) / (1 - jnp.sqrt(u)))
+    return {
+        "w_x": common.dense_init(ks[0], (d, w), dtype),       # main branch
+        "w_gate": common.dense_init(ks[1], (d, w), dtype),    # GeLU branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru.conv_width, w))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": common.dense_init(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": common.dense_init(ks[5], (w, w), dtype),
+        "b_i": jnp.zeros((w,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": common.dense_init(ks[0], (w, d), dtype),
+    }
+
+
+def _causal_conv(params, u, conv_state=None):
+    w = params["conv_w"]
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = conv_state
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i: i + u.shape[1], :] * w[i] for i in range(width))
+    return out + params["conv_b"], up[:, -(width - 1):, :]
+
+
+def rglru_apply(params, x: jnp.ndarray, lam: jnp.ndarray,
+                h0: jnp.ndarray | None):
+    """RG-LRU recurrence. x: (B, S, W); lam: (W,). Returns (y, h_last)."""
+    r = jax.nn.sigmoid(jnp.asarray(x, jnp.float32) @ params["w_a"]
+                       + params["b_a"])
+    i = jax.nn.sigmoid(jnp.asarray(x, jnp.float32) @ params["w_i"]
+                       + params["b_i"])
+    log_sig_lam = -jax.nn.softplus(-jnp.asarray(lam, jnp.float32))  # log σ(Λ)
+    log_a = _C * r * log_sig_lam[None, None, :]          # (B,S,W) ≤ 0
+    a = jnp.exp(log_a)
+    gated = i * jnp.asarray(x, jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)           # fold initial state
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def recurrent_block_forward(params, x: jnp.ndarray, cfg: ModelConfig,
+                            conv_state=None, h0=None
+                            ) -> Tuple[jnp.ndarray, Tuple]:
+    """Griffin recurrent block (full sequence)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_x"]
+    u = shard(u, "batch", None, "ssm_inner")
+    u, new_conv = _causal_conv(params, u, conv_state)
+    h, h_last = rglru_apply(params, u, params["lam"], h0)
+    y = jnp.asarray(h, x.dtype) * gate
+    return y @ params["w_out"], (new_conv, h_last)
+
+
+def recurrent_block_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+                           conv_state: jnp.ndarray, h: jnp.ndarray):
+    """Single step. x: (B, 1, D); h: (B, W)."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    u = x @ params["w_x"]
+    u, new_conv = _causal_conv(params, u, conv_state)
+    u32 = jnp.asarray(u[:, 0], jnp.float32)
+    r = jax.nn.sigmoid(u32 @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(u32 @ params["w_i"] + params["b_i"])
+    log_sig_lam = -jax.nn.softplus(-jnp.asarray(params["lam"], jnp.float32))
+    log_a = _C * r * log_sig_lam[None, :]
+    a = jnp.exp(log_a)
+    h = a * h + jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) \
+        * (i * u32)
+    y = jnp.asarray(h[:, None, :], x.dtype) * gate
+    return y @ params["w_out"], (new_conv, h)

@@ -1,0 +1,190 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: intra-chunk attention-like quadratic term + inter-chunk
+linear recurrence over chunk states, scanned with ``lax.scan``.  Decode is the
+O(1) single-step recurrence h ← a·h + dt·B·x.  SharePrefill is inapplicable
+(attention-free — DESIGN.md §5); the arch runs without it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import common
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    return d_inner, nheads, s.head_dim, s.state_dim
+
+
+def init_ssm_layer(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, nh, p, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n          # conv over [x, B, C]
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj → [z, x, B, C, dt]
+        "w_in": common.dense_init(
+            ks[0], (d, 2 * d_inner + 2 * n + nh), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, conv_dim))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "out_norm": common.init_rmsnorm(d_inner, dtype),
+        "w_out": common.dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def _split_in(params, x, cfg: ModelConfig):
+    d_inner, nh, p, n = _dims(cfg)
+    zxbcdt = x @ params["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xs = zxbcdt[..., d_inner: 2 * d_inner]
+    bb = zxbcdt[..., 2 * d_inner: 2 * d_inner + n]
+    cc = zxbcdt[..., 2 * d_inner + n: 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, xs, bb, cc, dt
+
+
+def _causal_conv(params, u: jnp.ndarray,
+                 conv_state: jnp.ndarray | None = None):
+    """u: (B, S, C). Depthwise causal conv of width W.
+
+    Returns (out, new_conv_state (B, W-1, C))."""
+    w = params["conv_w"]                # (W, C)
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = conv_state
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i: i + u.shape[1], :] * w[i] for i in range(width))
+    out = jax.nn.silu(out + params["conv_b"])
+    return out, up[:, -(width - 1):, :]
+
+
+def _ssd_chunked(xh, bb, cc, dt, a, chunk: int):
+    """SSD scan. xh: (B,S,nh,P); bb/cc: (B,S,N); dt: (B,S,nh); a: (nh,)<0.
+
+    Returns y (B,S,nh,P)."""
+    b, s, nh, p = xh.shape
+    n = bb.shape[-1]
+    nc = s // chunk
+    r = lambda t: t.reshape(b, nc, chunk, *t.shape[2:])
+    xh, bb, cc, dt = r(xh), r(bb), r(cc), r(dt)
+
+    da = dt * a                                    # (B,NC,L,nh) log-decay
+    cum = jnp.cumsum(da, axis=2)
+    # intra-chunk: L_ij = exp(cum_i - cum_j) for i ≥ j
+    li = cum[:, :, :, None, :]                     # i
+    lj = cum[:, :, None, :, :]                     # j
+    seg = jnp.tril(jnp.ones((chunk, chunk)))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(seg > 0, li - lj, -jnp.inf))
+    cb = jnp.einsum("bzin,bzjn->bzij", cc, bb)     # (B,NC,L,L)
+    att = cb[..., None] * decay                    # (B,NC,L,L,nh)
+    y_intra = jnp.einsum("bzijh,bzjh,bzjhp->bzihp",
+                         att, dt, xh)
+
+    # chunk state: S_z = Σ_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    last = cum[:, :, -1:, :]
+    w_state = jnp.exp(last - cum) * dt             # (B,NC,L,nh)
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhnp", bb, w_state, xh)
+    chunk_decay = jnp.exp(last[:, :, 0, :])        # (B,NC,nh)
+
+    def scan_fn(h, inp):
+        st, dec = inp                              # (B,nh,N,P), (B,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                            # emit state BEFORE chunk
+
+    init = jnp.zeros((b, nh, n, p))
+    _, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)            # (B,NC,nh,N,P)
+
+    # inter-chunk: y_i += C_i · exp(cum_i) h_prev
+    y_inter = jnp.einsum("bzin,bzih,bzhnp->bzihp",
+                         cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, p)
+    return y
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence forward (train / prefill).
+
+    Returns (y (B,S,D), (conv_state, ssd_state)) for decode continuation."""
+    d_inner, nh, p, n = _dims(cfg)
+    b, s, _ = x.shape
+    z, xs, bb, cc, dt = _split_in(params, x, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(params, conv_in)
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner: d_inner + n]
+    cc = conv_out[..., d_inner + n:]
+
+    dt = jax.nn.softplus(jnp.asarray(dt, jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(jnp.asarray(params["a_log"], jnp.float32))
+    xh = xs.reshape(b, s, nh, p)
+    xh = shard(xh, "batch", None, "ssm_inner")
+
+    chunk = min(cfg.ssm.chunk_size, s)
+    if s % chunk:
+        chunk = s                                   # degenerate small case
+    y = _ssd_chunked(jnp.asarray(xh, jnp.float32),
+                     jnp.asarray(bb, jnp.float32),
+                     jnp.asarray(cc, jnp.float32), dt, a, chunk)
+    y = y + xh * params["d_skip"][None, None, :, None]
+
+    # final SSD state for decode: recompute the last-chunk recurrence end
+    da = dt * a
+    cum = jnp.cumsum(da, axis=1)
+    wall = jnp.exp(cum[:, -1:, :] - cum) * dt
+    ssd_state = jnp.einsum("bjn,bjh,bjhp->bhnp",
+                           jnp.asarray(bb, jnp.float32), wall,
+                           jnp.asarray(xh, jnp.float32))
+
+    y = y.reshape(b, s, d_inner)
+    y = common.rmsnorm(params["out_norm"], y * jax.nn.silu(z),
+                       cfg.rms_norm_eps)
+    out = jnp.asarray(y, x.dtype) @ params["w_out"]
+    return out, (conv_state, jnp.asarray(ssd_state, jnp.float32))
+
+
+def ssm_decode(params, x: jnp.ndarray, cfg: ModelConfig,
+               conv_state: jnp.ndarray, ssd_state: jnp.ndarray):
+    """Single-token step. x: (B, 1, D)."""
+    d_inner, nh, p, n = _dims(cfg)
+    b = x.shape[0]
+    z, xs, bb, cc, dt = _split_in(params, x, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, conv_state = _causal_conv(params, conv_in, conv_state)
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner: d_inner + n]
+    cc = conv_out[..., d_inner + n:]
+
+    dt = jax.nn.softplus(jnp.asarray(dt[:, 0], jnp.float32)
+                         + params["dt_bias"])          # (B,nh)
+    a = -jnp.exp(jnp.asarray(params["a_log"], jnp.float32))
+    decay = jnp.exp(dt * a)                            # (B,nh)
+    xh = xs[:, 0].reshape(b, nh, p)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", jnp.asarray(bb[:, 0], jnp.float32),
+                     dt, jnp.asarray(xh, jnp.float32))
+    ssd_state = ssd_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", jnp.asarray(cc[:, 0], jnp.float32),
+                   ssd_state)
+    y = y + jnp.asarray(xh, jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_inner)
+    y = common.rmsnorm(params["out_norm"], y * jax.nn.silu(z),
+                       cfg.rms_norm_eps)
+    out = jnp.asarray(y, x.dtype) @ params["w_out"]
+    return out, (conv_state, ssd_state)

@@ -1,0 +1,88 @@
+"""Mamba-2 decoder stack (attention-free)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.ssm import init_ssm_layer, ssm_decode, ssm_forward
+from repro.models.transformer import embed_tokens, logits_from_hidden
+
+
+def init_ssm_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": common.dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                     dtype),
+        "stack": common.stack_init(
+            lambda kk: {
+                "ssm": init_ssm_layer(kk, cfg, dtype),
+                "ln": common.init_rmsnorm(cfg.d_model, dtype),
+            }, ks[2], cfg.num_layers),
+    }
+
+
+def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  positions=None, embeds=None):
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+
+    def body(x, layer):
+        h = common.rmsnorm(layer["ln"], x, cfg.rms_norm_eps)
+        y, _ = ssm_forward(layer["ssm"], h, cfg)
+        return x + y, None
+
+    body = common.maybe_remat(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    return logits_from_hidden(params, cfg, x), {
+        "load_balance_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+
+
+def prefill(params, cfg: ModelConfig, tokens, sp, *, method="share",
+            attn_impl="chunked", positions=None, embeds=None):
+    from repro.models.attention import AttnStats
+    from repro.models.transformer import PrefillResult
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+
+    def body(x, layer):
+        h = common.rmsnorm(layer["ln"], x, cfg.rms_norm_eps)
+        y, state = ssm_forward(layer["ssm"], h, cfg)
+        return x + y, state
+
+    x, states = jax.lax.scan(body, x, params["stack"])
+    logits = logits_from_hidden(params, cfg, x[:, -1, :])
+    return PrefillResult(logits, {"stack": states, "prefix": []},
+                         AttnStats.zero(), None)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos,
+                positions=None, *, window: int = 0, embeds=None):
+    x = embeds if embeds is not None else embed_tokens(params, cfg, token)
+
+    def body(x, xs):
+        layer, state = xs
+        h = common.rmsnorm(layer["ln"], x, cfg.rms_norm_eps)
+        y, state = ssm_decode(layer["ssm"], h, cfg, state[0], state[1])
+        return x + y, state
+
+    x, states = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+    return logits_from_hidden(params, cfg, x[:, -1, :]), {
+        "stack": states, "prefix": []}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """SSM state is O(1) in sequence length — cache_len is ignored."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    conv = jnp.zeros((cfg.num_layers, batch, s.conv_width - 1, conv_dim),
+                     dtype)
+    ssd = jnp.zeros((cfg.num_layers, batch, nh, s.state_dim, s.head_dim),
+                    jnp.float32)
+    return {"stack": (conv, ssd), "prefix": []}

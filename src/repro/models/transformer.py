@@ -1,0 +1,308 @@
+"""Generic decoder-only transformer stack (dense / VLM / MoE / MLA families).
+
+Layers are scanned (``lax.scan`` over stacked params) so an 88-layer model
+lowers to one compact HLO loop; heterogeneous prefixes (DeepSeek-V2's dense
+first layer) are applied unscanned before the stack.  The prefill path
+threads the SharePrefill pivotal-pattern state through the scan carry —
+exactly the paper's layer-by-layer dictionary evolution (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import SharePrefill
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import common, mla, moe
+
+
+class PrefillResult(NamedTuple):
+    last_logits: jnp.ndarray        # (B, V)
+    cache: Any
+    stats: attn.AttnStats
+    sp_state: Any
+
+
+def _uses_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla.enabled
+
+
+def _uses_moe(cfg: ModelConfig) -> bool:
+    return cfg.moe.enabled
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, cfg: ModelConfig, *, moe_ffn: bool,
+               dtype=jnp.float32) -> Dict:
+    k1, k2 = jax.random.split(key)
+    if _uses_mla(cfg):
+        a = mla.init_mla_layer(k1, cfg, dtype)
+    else:
+        a = attn.init_attention_layer(k1, cfg, dtype)
+    ffn = (moe.init_moe_layer(k2, cfg, dtype) if moe_ffn
+           else common.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype))
+    return {
+        "attn": a,
+        "ffn": ffn,
+        "ln1": common.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def num_prefix_layers(cfg: ModelConfig) -> int:
+    """DeepSeek-V2: first layer uses a dense FFN; everything else scans."""
+    return 1 if (_uses_moe(cfg) and cfg.mla.enabled) else 0
+
+
+def init_decoder_params(key: jax.Array, cfg: ModelConfig,
+                        dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    n_prefix = num_prefix_layers(cfg)
+    n_stack = cfg.num_layers - n_prefix
+    params = {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "stack": common.stack_init(
+            lambda kk: init_layer(kk, cfg, moe_ffn=_uses_moe(cfg),
+                                  dtype=dtype),
+            ks[1], n_stack),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(
+            ks[2], (cfg.d_model, cfg.vocab_size), dtype)
+    for i in range(n_prefix):
+        params[f"prefix_{i}"] = init_layer(
+            jax.random.fold_in(ks[3], i), cfg, moe_ffn=False, dtype=dtype)
+    return params
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x: jnp.ndarray
+                       ) -> jnp.ndarray:
+    x = common.rmsnorm(params["final_norm"], x, cfg.rms_norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+    return shard(logits, "batch", None, "vocab")
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jnp.ndarray):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, "batch")
+
+
+# --------------------------------------------------------------------------
+# Per-layer bodies
+# --------------------------------------------------------------------------
+
+def _ffn_apply(layer, x, cfg: ModelConfig, moe_ffn: bool):
+    if moe_ffn:
+        y, aux = moe.moe_apply(layer["ffn"], x, cfg)
+        return y, (aux.load_balance_loss, aux.router_z_loss)
+    return common.mlp(layer["ffn"], x), (jnp.zeros(()), jnp.zeros(()))
+
+
+def layer_train(layer, x, cfg: ModelConfig, positions, *, moe_ffn: bool):
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    if _uses_mla(cfg):
+        a = mla.mla_train(layer["attn"], h, cfg, positions)
+    else:
+        a = attn.attention_train(layer["attn"], h, cfg, positions)
+    x = x + a
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    f, aux = _ffn_apply(layer, h, cfg, moe_ffn)
+    return x + f, aux
+
+
+def layer_prefill(layer, x, cfg: ModelConfig, positions, sp: SharePrefill,
+                  sp_state, cluster_ids, *, method: str, moe_ffn: bool,
+                  attn_impl: str):
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    if _uses_mla(cfg):
+        a, cache, sp_state, stats = mla.mla_prefill(
+            layer["attn"], h, cfg, positions, method=method, sp=sp,
+            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl)
+    else:
+        a, cache, sp_state, stats = attn.attention_prefill(
+            layer["attn"], h, cfg, positions, method=method, sp=sp,
+            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl)
+    x = x + a
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
+    return x + f, cache, sp_state, stats
+
+
+def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
+                 moe_ffn: bool, window: int = 0, keep_mask=None):
+    window = window or cfg.sliding_window      # native SWA (Mixtral)
+    h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+    if _uses_mla(cfg):
+        a, cache = mla.mla_decode(layer["attn"], h, cfg, cache[0], cache[1],
+                                  pos, positions)
+        a = a[:, None, :] if a.ndim == 2 else a
+    else:
+        a, cache = attn.attention_decode(
+            layer["attn"], h, cfg, cache[0], cache[1], pos, positions,
+            window=window, keep_mask=keep_mask)
+    x = x + a
+    h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+    f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
+    return x + f, cache
+
+
+# --------------------------------------------------------------------------
+# Full-model entry points
+# --------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  positions: Optional[jnp.ndarray] = None,
+                  embeds: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """tokens (B, S) → logits (B, S, V); VLM passes ``embeds``/3D positions."""
+    b, s = (embeds.shape[:2] if embeds is not None else tokens.shape)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+
+    moe_ffn = _uses_moe(cfg)
+    for i in range(num_prefix_layers(cfg)):
+        x, _ = layer_train(params[f"prefix_{i}"], x, cfg, positions,
+                           moe_ffn=False)
+
+    def body(carry, layer):
+        x, lb, zl = carry
+        x, (l1, l2) = layer_train(layer, x, cfg, positions, moe_ffn=moe_ffn)
+        return (x, lb + l1, zl + l2), None
+
+    body = common.maybe_remat(body, cfg.remat_policy)
+    (x, lb, zl), _ = jax.lax.scan(body, (x, jnp.zeros(()), jnp.zeros(())),
+                                  params["stack"])
+    n_stack = cfg.num_layers - num_prefix_layers(cfg)
+    aux = {"load_balance_loss": lb / max(n_stack, 1),
+           "router_z_loss": zl / max(n_stack, 1)}
+    return logits_from_hidden(params, cfg, x), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+            sp: SharePrefill, *, method: str = "share",
+            attn_impl: str = "chunked",
+            positions: Optional[jnp.ndarray] = None,
+            embeds: Optional[jnp.ndarray] = None) -> PrefillResult:
+    b, s = (embeds.shape[:2] if embeds is not None else tokens.shape)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)
+
+    sp_state = (sp.init_state(b, s)
+                if (sp.cfg.enabled and sp.applicable(s)) else None)
+    cluster_arr = (sp.layer_cluster_ids()
+                   if (sp.cfg.enabled and sp.applicable(s)) else None)
+    moe_ffn = _uses_moe(cfg)
+    n_prefix = num_prefix_layers(cfg)
+
+    prefix_caches = []
+    for i in range(n_prefix):
+        ids = cluster_arr[i] if cluster_arr is not None else None
+        x, cache, sp_state, _ = layer_prefill(
+            params[f"prefix_{i}"], x, cfg, positions, sp, sp_state, ids,
+            method=method, moe_ffn=False, attn_impl=attn_impl)
+        prefix_caches.append(cache)
+
+    def body(carry, xs):
+        x, sp_state = carry
+        layer, ids = xs
+        x, cache, sp_state, stats = layer_prefill(
+            layer, x, cfg, positions, sp, sp_state, ids,
+            method=method, moe_ffn=moe_ffn, attn_impl=attn_impl)
+        return (x, sp_state), (cache, stats)
+
+    n_stack = cfg.num_layers - n_prefix
+    ids_xs = (cluster_arr[n_prefix:] if cluster_arr is not None
+              else jnp.zeros((n_stack, max(cfg.num_heads, 1)), jnp.int32))
+    (x, sp_state), (caches, stats) = jax.lax.scan(
+        body, (x, sp_state), (params["stack"], ids_xs))
+
+    logits = logits_from_hidden(params, cfg, x[:, -1, :])
+    stats = attn.AttnStats(*(jnp.mean(f) for f in stats))
+    return PrefillResult(logits, {"prefix": prefix_caches, "stack": caches},
+                         stats, sp_state)
+
+
+def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
+                cache, pos: jnp.ndarray,
+                positions: Optional[jnp.ndarray] = None, *,
+                window: int = 0,
+                embeds: Optional[jnp.ndarray] = None,
+                sparse_keep: Optional[jnp.ndarray] = None,  # (L, B, H, S)
+                ):
+    """One decode step. token (B, 1) → logits (B, V), updated cache.
+
+    ``sparse_keep`` enables decode-phase pattern sharing (beyond paper):
+    per-layer/head token keep-masks derived from the prefill pattern
+    dictionary (repro.serving.sparse_decode)."""
+    b = (embeds.shape[0] if embeds is not None else token.shape[0])
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x = embeds if embeds is not None else embed_tokens(params, cfg, token)
+    moe_ffn = _uses_moe(cfg)
+    n_prefix = num_prefix_layers(cfg)
+
+    new_prefix = []
+    for i, c in enumerate(cache["prefix"]):
+        km = sparse_keep[i] if sparse_keep is not None else None
+        x, c = layer_decode(params[f"prefix_{i}"], x, cfg, c, pos, positions,
+                            moe_ffn=False, window=window, keep_mask=km)
+        new_prefix.append(c)
+
+    if sparse_keep is not None:
+        keep_xs = sparse_keep[n_prefix:]
+
+        def body(x, xs):
+            layer, c, km = xs
+            x, c = layer_decode(layer, x, cfg, c, pos, positions,
+                                moe_ffn=moe_ffn, window=window,
+                                keep_mask=km)
+            return x, c
+
+        x, new_caches = jax.lax.scan(
+            body, x, (params["stack"], cache["stack"], keep_xs))
+    else:
+        def body(x, xs):
+            layer, c = xs
+            x, c = layer_decode(layer, x, cfg, c, pos, positions,
+                                moe_ffn=moe_ffn, window=window)
+            return x, c
+
+        x, new_caches = jax.lax.scan(body, x,
+                                     (params["stack"], cache["stack"]))
+    logits = logits_from_hidden(params, cfg, x[:, -1, :])
+    return logits, {"prefix": new_prefix, "stack": new_caches}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """Empty KV cache pytree for decode-from-scratch / dry-run staging."""
+    n_prefix = num_prefix_layers(cfg)
+    n_stack = cfg.num_layers - n_prefix
+    if cfg.mla.enabled:
+        one = lambda: (jnp.zeros((batch, cache_len, cfg.mla.kv_lora_rank),
+                                 dtype),
+                       jnp.zeros((batch, cache_len,
+                                  cfg.mla.qk_rope_head_dim), dtype))
+    else:
+        hd = cfg.resolved_head_dim
+        one = lambda: (jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd),
+                                 dtype),
+                       jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd),
+                                 dtype))
+    stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_stack,) + x.shape), one())
+    return {"prefix": [one() for _ in range(n_prefix)], "stack": stack}

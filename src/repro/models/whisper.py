@@ -1,0 +1,218 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv frontend is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, T_enc, D).  We
+implement the transformer backbone: a bidirectional encoder over frames and a
+causal decoder with cross-attention.  Positions are fixed sinusoidal (no
+RoPE).  SharePrefill applies to the decoder self-attention (the pattern
+algebra also supports the encoder's non-causal masks — DESIGN.md §5); the
+cross-attention is left dense.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import SharePrefill
+from repro.kernels.chunked import chunked_attention
+from repro.kernels.ref import decode_attention_ref
+from repro.models import common
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnStats
+from repro.models.transformer import PrefillResult, logits_from_hidden
+
+
+def _init_xattn(key, cfg: ModelConfig, dtype):
+    return common.init_gqa_proj(key, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.resolved_head_dim,
+                                dtype)
+
+
+def init_whisper_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(kk):
+        k1, k2 = jax.random.split(kk)
+        return {
+            "attn": attn_mod.init_attention_layer(k1, cfg, dtype),
+            "mlp": common.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+            "ln1": common.init_rmsnorm(cfg.d_model, dtype),
+            "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    def dec_layer(kk):
+        k1, k2, k3 = jax.random.split(kk, 3)
+        return {
+            "self_attn": attn_mod.init_attention_layer(k1, cfg, dtype),
+            "cross_attn": _init_xattn(k2, cfg, dtype),
+            "mlp": common.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+            "ln1": common.init_rmsnorm(cfg.d_model, dtype),
+            "ln_x": common.init_rmsnorm(cfg.d_model, dtype),
+            "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+        }
+
+    return {
+        "embed": common.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_stack": common.stack_init(enc_layer, ks[1],
+                                       cfg.encdec.num_encoder_layers),
+        "enc_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "dec_stack": common.stack_init(dec_layer, ks[2], cfg.num_layers),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": common.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                     dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, T, D) stub frontend output → encoder states."""
+    t = frames.shape[1]
+    x = frames + common.sinusoidal_positions(t, cfg.d_model)[None].astype(frames.dtype)
+
+    def body(x, layer):
+        h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+        q, k, v = common.gqa_qkv(layer["attn"], h)
+        kx = common.repeat_kv(k, cfg.gqa_groups)
+        vx = common.repeat_kv(v, cfg.gqa_groups)
+        bs = 64 if t % 64 == 0 else t
+        o, _ = chunked_attention(q, kx, vx, block_size=bs, causal=False)
+        x = x + common.gqa_out(layer["attn"], o)
+        h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+        return x + common.mlp(layer["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return common.rmsnorm(params["enc_norm"], x, cfg.rms_norm_eps)
+
+
+def _cross_attend(layer, x, enc_kv, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bhsk", x, layer["cross_attn"]["wq"])
+    k, v = enc_kv
+    kx = common.repeat_kv(k, cfg.gqa_groups)
+    vx = common.repeat_kv(v, cfg.gqa_groups)
+    t = kx.shape[2]
+    bs = 64 if (x.shape[1] % 64 == 0 and t % 64 == 0) else 0
+    if bs:
+        o, _ = chunked_attention(q, kx, vx, block_size=bs, causal=False)
+    else:
+        o = jax.vmap(lambda qq, kk, vv: decode_attention_ref(
+            qq.reshape(qq.shape[0], -1, qq.shape[-1]), kk, vv))(q, kx, vx)
+    return common.gqa_out(layer["cross_attn"], o)
+
+
+def _enc_kv(layer, enc: jnp.ndarray):
+    k = jnp.einsum("btd,dhk->bhtk", enc, layer["cross_attn"]["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", enc, layer["cross_attn"]["wv"])
+    return k, v
+
+
+def forward_train(params, cfg: ModelConfig, tokens, positions=None,
+                  embeds=None):
+    """Teacher-forced decoder over tokens; ``embeds`` carries enc frames."""
+    b, s = tokens.shape
+    if embeds is None:
+        embeds = jnp.zeros((b, cfg.encdec.encoder_seq_len, cfg.d_model))
+    enc = encode(params, cfg, embeds)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + common.sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, layer):
+        h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+        y = attn_mod.attention_train(layer["self_attn"], h, cfg, positions)
+        x = x + y
+        h = common.rmsnorm(layer["ln_x"], x, cfg.rms_norm_eps)
+        x = x + _cross_attend(layer, h, _enc_kv(layer, enc), cfg)
+        h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+        return x + common.mlp(layer["mlp"], h), None
+
+    body = common.maybe_remat(body, cfg.remat_policy)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    return logits_from_hidden(params, cfg, x), {
+        "load_balance_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+
+
+def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
+            method="share", attn_impl="chunked", positions=None,
+            embeds=None) -> PrefillResult:
+    b, s = tokens.shape
+    if embeds is None:
+        embeds = jnp.zeros((b, cfg.encdec.encoder_seq_len, cfg.d_model))
+    enc = encode(params, cfg, embeds)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + common.sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+
+    use_sp = sp.cfg.enabled and sp.applicable(s)
+    sp_state = sp.init_state(b, s) if use_sp else None
+    ids_xs = (sp.layer_cluster_ids()[: cfg.num_layers] if use_sp
+              else jnp.zeros((cfg.num_layers, cfg.num_heads), jnp.int32))
+
+    def body(carry, xs):
+        x, sp_state = carry
+        layer, ids = xs
+        h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+        y, kv, sp_state, stats = attn_mod.attention_prefill(
+            layer["self_attn"], h, cfg, positions, method=method, sp=sp,
+            sp_state=sp_state, cluster_ids=ids, attn_impl=attn_impl)
+        x = x + y
+        h = common.rmsnorm(layer["ln_x"], x, cfg.rms_norm_eps)
+        enc_kv = _enc_kv(layer, enc)
+        x = x + _cross_attend(layer, h, enc_kv, cfg)
+        h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+        x = x + common.mlp(layer["mlp"], h)
+        return (x, sp_state), ((kv, enc_kv), stats)
+
+    (x, sp_state), (caches, stats) = jax.lax.scan(
+        body, (x, sp_state), (params["dec_stack"], ids_xs))
+    logits = logits_from_hidden(params, cfg, x[:, -1, :])
+    stats = AttnStats(*(jnp.mean(f) for f in stats))
+    return PrefillResult(logits, {"stack": caches, "prefix": []},
+                         stats, sp_state)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, positions=None,
+                *, window: int = 0, embeds=None):
+    b = token.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x = jnp.take(params["embed"], token, axis=0)
+    t = cfg.max_seq_len
+    pe = common.sinusoidal_positions(
+        cache["stack"][0][0][0].shape[2] + 1, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None].astype(x.dtype)
+
+    def body(x, xs):
+        layer, ((ck, cv), enc_kv) = xs
+        h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
+        y, (ck, cv) = attn_mod.attention_decode(
+            layer["self_attn"], h, cfg, ck, cv, pos, positions,
+            window=window)
+        x = x + y
+        h = common.rmsnorm(layer["ln_x"], x, cfg.rms_norm_eps)
+        x = x + _cross_attend(layer, h, enc_kv, cfg)
+        h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
+        x = x + common.mlp(layer["mlp"], h)
+        return x, ((ck, cv), enc_kv)
+
+    x, caches = jax.lax.scan(body, x, (params["dec_stack"], cache["stack"]))
+    return logits_from_hidden(params, cfg, x[:, -1, :]), {
+        "stack": caches, "prefix": []}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    hd = cfg.resolved_head_dim
+    t = cfg.encdec.encoder_seq_len
+    kv = (jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd), dtype),
+          jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd), dtype))
+    xkv = (jnp.zeros((batch, cfg.num_kv_heads, t, hd), dtype),
+           jnp.zeros((batch, cfg.num_kv_heads, t, hd), dtype))
+    one = (kv, xkv)
+    stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape),
+        one)
+    return {"stack": stack, "prefix": []}

@@ -1,0 +1,15 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_adamw,
+)
+from repro.optim.schedule import constant, inverse_sqrt, linear_warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_update", "clip_by_global_norm",
+    "global_norm", "init_adamw", "constant", "inverse_sqrt",
+    "linear_warmup_cosine",
+]

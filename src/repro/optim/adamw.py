@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Self-contained (no optax offline); the state is a pytree matching params so
+pjit shards optimizer state identically to the parameters (ZeRO-1 falls out
+of the same PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def init_adamw(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: AdamWState,
+                 lr_scale: jnp.ndarray | float = 1.0
+                 ) -> Tuple[Any, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if cfg.grad_clip_norm > 0:
+        grads, norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        norm = global_norm(grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = cfg.learning_rate * lr_scale
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        n = cfg.b2 * n + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** t)
+        nh = n / (1 - cfg.b2 ** t)
+        delta = mh / (jnp.sqrt(nh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_n = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_n = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_n), norm

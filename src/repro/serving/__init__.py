@@ -1,0 +1,5 @@
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.sampling import SamplingConfig, sample_token
+
+__all__ = ["EngineConfig", "Request", "ServingEngine", "SamplingConfig",
+           "sample_token"]

@@ -1,0 +1,33 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0        # 0 → greedy
+    top_k: int = 0                  # 0 → full distribution
+    top_p: float = 1.0
+
+
+def sample_token(key: jax.Array, logits: jnp.ndarray,
+                 cfg: SamplingConfig) -> jnp.ndarray:
+    """logits (B, V) → tokens (B,)."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = jnp.asarray(logits, jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < cfg.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,70 @@
+"""Decode-phase pattern sharing (beyond-paper — the paper's §8 future work).
+
+The paper applies sparse patterns only during prefill and decodes densely.
+Our roofline analysis (EXPERIMENTS.md §Roofline) shows decode is
+*memory-bound* — KV-cache reads dominate — so the pattern dictionary built
+during prefill is exactly the right lever: a head whose cluster has a pivot
+attends only to that pivot's kv-block set (plus all post-prefill tokens),
+cutting cache traffic by the block density.
+
+Heads without a valid pivot (noise clusters / excluded sparse heads) decode
+densely — safe fallback, same spirit as Algorithm 4.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import SharePrefill
+from repro.core.pattern_dict import PivotalState
+
+
+def decode_keep_blocks(sp: SharePrefill, sp_state: PivotalState,
+                       num_layers: int, num_heads: int) -> jnp.ndarray:
+    """Per-head kv-block keep sets from the post-prefill pattern dictionary.
+
+    Args:
+      sp_state: batched PivotalState from PrefillResult (leaves (B, C, ...)).
+
+    Returns:
+      (L, B, H, NB) bool — True = this kv block stays visible in decode.
+      Heads whose cluster has no pivot keep everything (dense fallback).
+    """
+    ids = jnp.asarray(sp.cluster_ids[:num_layers, :num_heads])   # (L, H)
+    safe = jnp.clip(ids, 0, sp_state.masks.shape[1] - 1)
+
+    def per_sample(masks, valid):
+        # masks (C, NB, NB); a decode query is a "future last row", so the
+        # pivot's LAST query-block row (the paper's own representative ã —
+        # Algorithm 2) is the keep-set; the final block stays for locality
+        cover = masks[:, -1, :]                        # (C, NB)
+        cover = cover.at[:, -1].set(True)
+        keep = cover[safe]                             # (L, H, NB)
+        ok = valid[safe] & (ids >= 0)                  # (L, H)
+        return jnp.where(ok[..., None], keep, True)
+
+    out = jax.vmap(per_sample)(sp_state.masks, sp_state.valid)   # (B,L,H,NB)
+    return jnp.moveaxis(out, 0, 1)                               # (L,B,H,NB)
+
+
+def keep_blocks_to_token_mask(keep: jnp.ndarray, block_size: int,
+                              cache_len: int,
+                              prefill_len: int) -> jnp.ndarray:
+    """(…, NB) block keep-set → (…, cache_len) token mask; positions written
+    after prefill are always visible."""
+    tok = jnp.repeat(keep, block_size, axis=-1)        # (…, NB*bs)
+    pad = cache_len - tok.shape[-1]
+    if pad > 0:
+        tok = jnp.pad(tok, [(0, 0)] * (tok.ndim - 1) + [(0, pad)],
+                      constant_values=True)
+    post = jnp.arange(cache_len) >= prefill_len
+    return tok | post
+
+
+def decode_traffic_fraction(keep: jnp.ndarray) -> float:
+    """Modeled KV-cache read fraction vs dense decode (the memory-term
+    lever: decode_32k roofline × this fraction)."""
+    return float(jnp.mean(keep.astype(jnp.float32)))

@@ -1,0 +1,35 @@
+"""Training losses."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Token-level CE. logits (B, S, V), labels (B, S)."""
+    logits = jnp.asarray(logits, jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    total = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / total
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / total
+    return loss, {"ce_loss": loss, "accuracy": acc,
+                  "perplexity": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def total_loss(logits, labels, aux, *, lb_weight: float = 0.01,
+               z_weight: float = 1e-3, mask=None):
+    ce, metrics = cross_entropy(logits, labels, mask)
+    loss = (ce + lb_weight * aux.get("load_balance_loss", 0.0)
+            + z_weight * aux.get("router_z_loss", 0.0))
+    metrics["total_loss"] = loss
+    metrics["load_balance_loss"] = aux.get("load_balance_loss",
+                                           jnp.zeros(()))
+    return loss, metrics

@@ -1,0 +1,75 @@
+"""Baseline pattern policies + the paper's §3 critique of pooled estimation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import (
+    flash_attention_mask,
+    flexprefill_masks,
+    minference_masks,
+    pooled_block_scores,
+)
+from repro.core.patterns import causal_block_mask
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_flash_mask_is_dense_causal():
+    m = np.asarray(flash_attention_mask(3, 8))
+    assert (m == np.asarray(causal_block_mask(8))[None]).all()
+
+
+def test_minference_masks_valid():
+    h, n, d, bs = 2, 256, 32, 64
+    q = jax.random.normal(KEY, (h, n, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (h, n, d))
+    m = np.asarray(minference_masks(q, k, gamma=0.9, block_size=bs))
+    causal = np.asarray(causal_block_mask(n // bs))
+    assert (m <= causal[None]).all()
+    assert all(m[i].diagonal().all() for i in range(h))
+
+
+def test_flexprefill_masks_valid():
+    h, n, d, bs = 2, 256, 32, 64
+    q = jax.random.normal(KEY, (h, n, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (h, n, d))
+    m = np.asarray(flexprefill_masks(q, k, gamma=0.9, block_size=bs))
+    causal = np.asarray(causal_block_mask(n // bs))
+    assert (m <= causal[None]).all()
+    assert all(m[i].diagonal().all() for i in range(h))
+
+
+def test_pooling_overestimation_token_alignment():
+    """Paper §3 example 1: Q=[0,0,1], K=[0,1,0] (1-d, 3 tokens).
+    pool(Q)·pool(K) = 1/9 appears significant, but the token-aligned scores
+    q_i·k_i are all zero — pooling disregards position alignment and
+    OVERESTIMATES the block."""
+    q = np.asarray([0.0, 0.0, 1.0])
+    k = np.asarray([0.0, 1.0, 0.0])
+    pooled = q.mean() * k.mean()
+    aligned = q * k                     # token-aligned products
+    assert pooled == pytest.approx(1 / 9)
+    assert aligned.sum() == 0.0         # ground truth: nothing there
+
+
+def test_pooling_underestimation_smoothing():
+    """Paper §3 example 2: Q=[0,0,1], K=[0,-1,1] — pooling smooths the
+    high/low values to pool(Q)·pool(K)=0, below the actual average
+    pool(Q·K) = 1/3 > 0 — UNDERESTIMATION."""
+    q = np.asarray([0.0, 0.0, 1.0])
+    k = np.asarray([0.0, -1.0, 1.0])
+    pooled = q.mean() * k.mean()
+    actual = (q * k).mean()
+    assert pooled == 0.0
+    assert actual > 0.0
+
+
+
+def test_pooled_block_scores_row_stochastic():
+    n, d, bs = 256, 32, 64
+    q = jax.random.normal(KEY, (n, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    s = np.asarray(pooled_block_scores(q, k, bs))
+    np.testing.assert_allclose(s.sum(-1), 1.0, atol=1e-5)
+    assert (s[np.triu_indices(n // bs, 1)] == 0).all()

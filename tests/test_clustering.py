@@ -1,0 +1,88 @@
+"""Offline clustering pipeline: autoencoder, agglomerative clustering,
+Jaccard similarity (paper §5.2 / Appendix A.4 / Figure 2b)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import (
+    agglomerative_cluster,
+    cluster_heads,
+    jaccard_similarity_matrix,
+    pool_map,
+    train_autoencoder,
+    encode,
+)
+
+
+def test_agglomerative_recovers_blobs():
+    rng = np.random.default_rng(0)
+    centers = np.asarray([[0, 0], [10, 0], [0, 10]], float)
+    x = np.concatenate([c + rng.normal(0, 0.3, (20, 2)) for c in centers])
+    labels = agglomerative_cluster(x, distance_threshold=3.0)
+    assert len(np.unique(labels)) == 3
+    for g in range(3):
+        grp = labels[g * 20: (g + 1) * 20]
+        assert (grp == grp[0]).all()
+
+
+def test_agglomerative_threshold_extremes():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(10, 4))
+    one = agglomerative_cluster(x, distance_threshold=1e9)
+    assert len(np.unique(one)) == 1
+    alone = agglomerative_cluster(x, distance_threshold=1e-9)
+    assert len(np.unique(alone)) == 10
+
+
+def test_pool_map_shapes():
+    m = jnp.ones((3, 64, 64))
+    p = pool_map(m, 32)
+    assert p.shape == (3, 32, 32)
+    m2 = jnp.ones((3, 16, 16))          # smaller than target → upsampled
+    p2 = pool_map(m2, 32)
+    assert p2.shape == (3, 32, 32)
+
+
+def test_autoencoder_reconstructs():
+    rng = np.random.default_rng(2)
+    maps = jnp.asarray(rng.random((12, 32, 32)) < 0.2, jnp.float32)
+    params = train_autoencoder(maps, epochs=120, seed=0)
+    z = encode(params, maps)
+    assert z.shape == (12, 64)
+    assert np.isfinite(np.asarray(z)).all()
+
+
+def test_cluster_heads_end_to_end():
+    """Two ground-truth pattern families across (L=2, H=4) heads must land
+    in two clusters with consistent ids."""
+    rng = np.random.default_rng(3)
+    nb = 16
+    fam_a = np.tril(np.ones((nb, nb))) * (rng.random((nb, nb)) < 0.3)
+    fam_b = np.zeros((nb, nb))
+    fam_b[:, 0] = 1.0
+    np.fill_diagonal(fam_b, 1.0)
+    maps = np.zeros((2, 4, nb, nb))
+    for l in range(2):
+        for h in range(4):
+            fam = fam_a if h % 2 == 0 else fam_b
+            noise = rng.random((nb, nb)) * 0.05
+            maps[l, h] = fam + noise
+    res = cluster_heads(jnp.asarray(maps), distance_threshold=0.5,
+                        min_cluster_size=2, ae_epochs=150)
+    ids = res.cluster_ids
+    assert ids.shape == (2, 4)
+    even = {ids[l, h] for l in range(2) for h in range(4) if h % 2 == 0}
+    odd = {ids[l, h] for l in range(2) for h in range(4) if h % 2 == 1}
+    assert len(even) == 1 and len(odd) == 1
+    assert even != odd
+
+
+def test_jaccard_similarity_matrix():
+    m = np.zeros((3, 4, 4), bool)
+    m[0, :2] = True
+    m[1, :2] = True
+    m[2, 2:] = True
+    j = jaccard_similarity_matrix(m)
+    assert j[0, 1] == 1.0
+    assert j[0, 2] == 0.0
+    assert np.allclose(np.diag(j), 1.0)

@@ -1,0 +1,262 @@
+"""SharePrefill core semantics: Algorithms 1-5 faithfulness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SharePrefillConfig
+from repro.core import pattern_dict as pdict
+from repro.core.api import SharePrefill
+from repro.core.construct import block_softmax, construct_pivotal_pattern
+from repro.core.determine import (
+    determine_sparse_pattern,
+    first_head_in_cluster,
+    pooled_block_estimate,
+)
+from repro.core.patterns import causal_block_mask
+from repro.core.share_attention import share_prefill_attention_layer
+from repro.core.vertical_slash import (
+    search_vertical_slash_pattern,
+    strip_scores,
+    vertical_slash_direction_scores,
+)
+from repro.kernels.ops import make_attention_fn
+
+KEY = jax.random.PRNGKey(3)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 5: vertical-slash search
+# --------------------------------------------------------------------------
+
+def test_strip_scores_causal_rows_sum_to_one():
+    q = jax.random.normal(KEY, (256, 32))
+    k = jax.random.normal(jax.random.PRNGKey(4), (256, 32))
+    s = np.asarray(strip_scores(q, k, 64))
+    assert s.shape == (64, 256)
+    np.testing.assert_allclose(s.sum(-1), 1.0, atol=1e-5)
+    # strict causality: row r (global 192+r) has zero mass beyond itself
+    for r in (0, 31, 63):
+        assert s[r, 193 + r:].sum() == pytest.approx(0.0, abs=1e-7)
+
+
+def test_direction_scores_conserve_mass():
+    q = jax.random.normal(KEY, (256, 32))
+    k = jax.random.normal(jax.random.PRNGKey(4), (256, 32))
+    strip = strip_scores(q, k, 64)
+    a_v, a_s = vertical_slash_direction_scores(strip)
+    total = float(jnp.sum(strip))
+    assert float(jnp.sum(a_v)) == pytest.approx(total, rel=1e-5)
+    assert float(jnp.sum(a_s)) == pytest.approx(total, rel=1e-5)
+
+
+def test_vertical_slash_detects_sink_column():
+    """A strong attention sink (huge key norm at position 0) must produce an
+    active first block column — the signature vertical pattern."""
+    n, d, bs = 256, 32, 64
+    q = jax.random.normal(KEY, (n, d))
+    k = jax.random.normal(jax.random.PRNGKey(5), (n, d)) * 0.05
+    k = k.at[0].set(10.0 * q.mean(0))            # sink token
+    mask = np.asarray(search_vertical_slash_pattern(q, k, 0.9, bs))
+    assert mask[:, 0].all()                      # vertical at block 0
+    assert mask.diagonal().all()                 # local diagonal kept
+    assert (mask <= np.asarray(causal_block_mask(n // bs))).all()
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2: pivotal construction
+# --------------------------------------------------------------------------
+
+def test_block_softmax_ignores_neg_inf():
+    a = jnp.asarray([[0.0, -jnp.inf], [1.0, 1.0]])
+    s = np.asarray(block_softmax(a))
+    np.testing.assert_allclose(s[0], [1.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(s[1], [0.5, 0.5], atol=1e-6)
+
+
+def test_construct_pivotal_selects_heavy_blocks():
+    nb = 8
+    a = jnp.full((nb, nb), -jnp.inf)
+    causal = np.tril(np.ones((nb, nb), bool))
+    base = jnp.where(jnp.asarray(causal), -2.0, -jnp.inf)
+    base = base.at[5, 2].set(8.0).at[7, 1].set(8.0)   # two hot blocks
+    mask, rep = construct_pivotal_pattern(base, gamma=0.9)
+    m = np.asarray(mask)
+    assert m[5, 2] and m[7, 1]
+    assert m.diagonal().all()                    # safety diagonal
+    assert rep.shape == (nb,)
+    assert float(jnp.sum(rep)) == pytest.approx(1.0, abs=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 3: pattern decision
+# --------------------------------------------------------------------------
+
+def _uniformish(h, nb):
+    return jnp.full((h, nb), 1.0 / nb)
+
+
+def test_decision_shared_when_similar_and_valid():
+    h, nb = 4, 16
+    a_hat = _uniformish(h, nb)
+    ids = jnp.asarray([0, 0, 1, -1])
+    reps = _uniformish(h, nb)
+    valid = jnp.asarray([True, True, False, False])
+    d = determine_sparse_pattern(a_hat, ids, reps, valid, delta=0.3, tau=0.2)
+    assert bool(d.use_shared[0]) and bool(d.use_shared[1])
+    assert bool(d.use_dense[2])                  # first head of pivotless c1
+    assert bool(d.use_vs[3])                     # noise → vertical slash
+    assert not bool(d.use_dense[3])
+
+
+def test_decision_sparse_head_excluded():
+    """d_sparse ≥ δ → vertical slash even if a pivot exists (paper §5.2,
+    'exclude highly sparse heads')."""
+    h, nb = 2, 16
+    spike = jnp.zeros((h, nb)).at[:, 0].set(1.0)
+    ids = jnp.asarray([0, 0])
+    d = determine_sparse_pattern(spike, ids, _uniformish(h, nb),
+                                 jnp.asarray([True, True]),
+                                 delta=0.3, tau=0.2)
+    assert bool(d.use_vs.all())
+
+
+def test_decision_dissimilar_falls_back():
+    h, nb = 2, 16
+    a_hat = _uniformish(h, nb)
+    far = jnp.zeros((h, nb)).at[:, 0].set(1.0)    # pivot rep very different
+    ids = jnp.asarray([0, 0])
+    d = determine_sparse_pattern(a_hat, ids, far, jnp.asarray([True, True]),
+                                 delta=0.5, tau=0.2)
+    assert bool(d.use_vs.all())
+
+
+def test_first_head_in_cluster():
+    ids = jnp.asarray([3, 1, 3, 1, 2])
+    f = np.asarray(first_head_in_cluster(ids))
+    assert f.tolist() == [True, True, False, False, True]
+
+
+def test_pooled_block_estimate_is_distribution():
+    strip = jax.nn.softmax(jax.random.normal(KEY, (64, 256)), axis=-1)
+    a = pooled_block_estimate(strip, 64)
+    assert a.shape == (4,)
+    assert float(jnp.sum(a)) == pytest.approx(1.0, abs=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Pattern dictionary
+# --------------------------------------------------------------------------
+
+def test_pattern_dict_lookup_update():
+    st = pdict.init_pivotal_state(3, 4)
+    ids = jnp.asarray([0, 1, -1])
+    masks, reps, valid = pdict.lookup(st, ids)
+    assert not bool(valid.any())                 # nothing valid initially
+
+    new_masks = jnp.ones((3, 4, 4), bool)
+    new_reps = jnp.full((3, 4), 0.25)
+    st2 = pdict.update(st, ids, new_masks, new_reps,
+                       jnp.asarray([True, False, True]))
+    assert bool(st2.valid[0])
+    assert not bool(st2.valid[1])                # head 1 did not run dense
+    assert not bool(st2.valid[2])                # noise never updates
+    _, _, valid2 = pdict.lookup(st2, ids)
+    assert bool(valid2[0]) and not bool(valid2[1]) and not bool(valid2[2])
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1: full layer orchestration
+# --------------------------------------------------------------------------
+
+def _layer_inputs(h=4, hkv=2, n=256, d=32):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (h, n, d))
+    k = jax.random.normal(ks[1], (hkv, n, d))
+    v = jax.random.normal(ks[2], (hkv, n, d))
+    return q, k, v
+
+
+def test_layer_flow_dense_then_share():
+    """Layer 1: pivotless clusters run dense (first head) / VS; layer 2 with
+    the updated dict shares — the paper's core mechanism."""
+    cfg = SharePrefillConfig(block_size=64, min_seq_blocks=2, tau=0.9,
+                             delta=0.99)
+    q, k, v = _layer_inputs()
+    ids = jnp.asarray([0, 0, 1, 1])
+    st = pdict.init_pivotal_state(2, 4)
+    fn = make_attention_fn(block_size=64, impl="ref")
+    out1, st1, s1 = share_prefill_attention_layer(q, k, v, st, ids, cfg, fn)
+    assert float(s1.num_dense) == 2.0            # one per cluster
+    assert float(s1.num_shared) == 0.0
+    assert bool(st1.valid.all())
+    out2, st2, s2 = share_prefill_attention_layer(q, k, v, st1, ids, cfg, fn)
+    assert float(s2.num_shared) == 4.0           # all heads share now
+    assert float(s2.num_dense) == 0.0
+    assert not np.isnan(np.asarray(out2)).any()
+
+
+def test_tau_zero_disables_sharing():
+    """Ablation 'Ours w/o sharing' (paper Table 2): τ=0 → no shared heads."""
+    cfg = SharePrefillConfig(block_size=64, min_seq_blocks=2, tau=0.0,
+                             delta=0.99)
+    q, k, v = _layer_inputs()
+    ids = jnp.asarray([0, 0, 1, 1])
+    st = pdict.init_pivotal_state(2, 4)
+    fn = make_attention_fn(block_size=64, impl="ref")
+    _, st1, s1 = share_prefill_attention_layer(q, k, v, st, ids, cfg, fn)
+    _, _, s2 = share_prefill_attention_layer(q, k, v, st1, ids, cfg, fn)
+    assert float(s2.num_shared) == 0.0
+
+
+def test_delta_zero_forces_vertical_slash():
+    """δ=0 marks every head 'highly sparse' → all vertical-slash, dict never
+    populates."""
+    cfg = SharePrefillConfig(block_size=64, min_seq_blocks=2, tau=0.9,
+                             delta=0.0)
+    q, k, v = _layer_inputs()
+    ids = jnp.asarray([0, 0, 1, 1])
+    st = pdict.init_pivotal_state(2, 4)
+    fn = make_attention_fn(block_size=64, impl="ref")
+    _, st1, s1 = share_prefill_attention_layer(q, k, v, st, ids, cfg, fn)
+    assert float(s1.num_vs) == 4.0
+    assert not bool(st1.valid.any())
+
+
+def test_shared_output_close_to_dense():
+    """Accuracy preservation: shared-pattern output ≈ dense output (the
+    paper's Table 1 claim, at unit scale).  Clusters here are exact (same
+    head duplicated) so sharing should be near-lossless."""
+    from repro.kernels.ref import dense_attention_ref
+    cfg = SharePrefillConfig(block_size=64, min_seq_blocks=2, tau=0.9,
+                             delta=0.99, gamma=0.98)
+    h, n, d = 4, 512, 32
+    ks = jax.random.split(KEY, 3)
+    qh = jax.random.normal(ks[0], (1, n, d))
+    kh = jax.random.normal(ks[1], (1, n, d))
+    vh = jax.random.normal(ks[2], (1, n, d))
+    q = jnp.repeat(qh, h, 0)          # identical heads → identical patterns
+    k = jnp.repeat(kh, h, 0)
+    v = jnp.repeat(vh, h, 0)
+    ids = jnp.zeros((h,), jnp.int32)
+    st = pdict.init_pivotal_state(1, n // 64)
+    fn = make_attention_fn(block_size=64, impl="ref")
+    _, st1, _ = share_prefill_attention_layer(q, k, v, st, ids, cfg, fn)
+    out2, _, s2 = share_prefill_attention_layer(q, k, v, st1, ids, cfg, fn)
+    assert float(s2.num_shared) == h
+    dense = dense_attention_ref(q, k, v)
+    err = float(jnp.max(jnp.abs(out2 - dense)))
+    base = float(jnp.max(jnp.abs(dense)))
+    assert err / base < 0.15          # γ=0.98 keeps ≈ all attention mass
+
+
+def test_share_prefill_api():
+    sp = SharePrefill.trivial(SharePrefillConfig(block_size=64,
+                                                 min_seq_blocks=2), 2, 4)
+    assert sp.applicable(256)
+    assert not sp.applicable(100)     # not block-aligned
+    assert not sp.applicable(64)      # too few blocks
+    assert sp.num_clusters == 4       # head-index-tied default clusters
+    assert (sp.cluster_ids[0] == sp.cluster_ids[1]).all()
+    st = sp.init_state(2, 256)
+    assert st.masks.shape == (2, 4, 4, 4)

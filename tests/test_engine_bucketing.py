@@ -1,0 +1,58 @@
+"""Serving-engine request bucketing and compiled-program reuse."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, sample
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServingEngine
+
+CFG = get_smoke_config("internlm2-1.8b")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, model.default_share_prefill()
+
+
+def _req(uid, n, max_new=2):
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=n, global_batch=1)
+    return Request(uid=uid, prompt=sample(dcfg, uid)["tokens"],
+                   max_new_tokens=max_new)
+
+
+def test_bucket_selection(setup):
+    model, params, sp = setup
+    e = ServingEngine(model, params, sp,
+                      EngineConfig(seq_buckets=(128, 256, 512)))
+    assert e._bucket(100) == 128
+    assert e._bucket(128) == 128
+    assert e._bucket(129) == 256
+    assert e._bucket(9999) == 512       # clamp to the largest bucket
+
+
+def test_mixed_lengths_grouped_and_served(setup):
+    model, params, sp = setup
+    e = ServingEngine(model, params, sp,
+                      EngineConfig(method="dense", max_batch=4,
+                                   seq_buckets=(128, 256)))
+    reqs = [_req(0, 100), _req(1, 256), _req(2, 120), _req(3, 200)]
+    e.serve(reqs)
+    for r in reqs:
+        assert r.output_tokens is not None and len(r.output_tokens) == 2
+    # two buckets → two compiled prefill programs
+    assert len(e._prefill_cache) == 2
+
+
+def test_compiled_program_reuse(setup):
+    model, params, sp = setup
+    e = ServingEngine(model, params, sp,
+                      EngineConfig(method="dense", max_batch=2,
+                                   seq_buckets=(128,)))
+    e.serve([_req(0, 128), _req(1, 128)])
+    n = len(e._prefill_cache)
+    e.serve([_req(2, 128), _req(3, 128)])
+    assert len(e._prefill_cache) == n    # same shapes → no recompile

@@ -1,0 +1,183 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.patterns import causal_block_mask
+from repro.kernels import (
+    block_sparse_attention,
+    block_sparse_attention_ref,
+    build_block_tables,
+    scatter_block_stats,
+)
+from repro.kernels.chunked import chunked_attention
+
+KEYS = jax.random.split(jax.random.PRNGKey(7), 8)
+
+
+def _random_mask(key, h, nb, density=0.5):
+    m = jax.random.bernoulli(key, density, (h, nb, nb))
+    m = m | jnp.eye(nb, dtype=bool)[None]
+    return m & causal_block_mask(nb)[None]
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("h,n,d,bs", [
+    (1, 128, 32, 64),
+    (2, 256, 64, 64),
+    (4, 256, 128, 128),
+    (3, 384, 80, 128),       # non-square-ish head dim, 3 blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_oracle(h, n, d, bs, dtype):
+    if n % bs:
+        pytest.skip("seq not block-aligned")
+    nb = n // bs
+    q = _rand(KEYS[0], (h, n, d), dtype)
+    k = _rand(KEYS[1], (h, n, d), dtype)
+    v = _rand(KEYS[2], (h, n, d), dtype)
+    mask = _random_mask(KEYS[3], h, nb)
+
+    o_ref, a_ref = block_sparse_attention_ref(
+        q, k, v, mask, block_size=bs)
+    o_k, a_k = block_sparse_attention(
+        q, k, v, mask, block_size=bs, impl="kernel", interpret=True)
+
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+    fin = np.isfinite(np.asarray(a_ref))
+    assert (fin == np.isfinite(np.asarray(a_k))).all()
+    np.testing.assert_allclose(np.asarray(a_k)[fin], np.asarray(a_ref)[fin],
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_kernel_gqa_grouping(groups):
+    h, n, d, bs = 4, 256, 64, 64
+    hkv = h // groups
+    nb = n // bs
+    q = _rand(KEYS[0], (h, n, d), jnp.float32)
+    k = _rand(KEYS[1], (hkv, n, d), jnp.float32)
+    v = _rand(KEYS[2], (hkv, n, d), jnp.float32)
+    mask = _random_mask(KEYS[4], h, nb)
+    kx = jnp.repeat(k, groups, 0)
+    vx = jnp.repeat(v, groups, 0)
+    o_ref, _ = block_sparse_attention_ref(q, kx, vx, mask, block_size=bs)
+    o_k, _ = block_sparse_attention(q, k, v, mask, block_size=bs,
+                                    impl="kernel")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_separate_v_dim():
+    """MLA-style: value head dim ≠ qk head dim."""
+    h, n, d, dv, bs = 2, 256, 48, 96, 64
+    nb = n // bs
+    q = _rand(KEYS[0], (h, n, d), jnp.float32)
+    k = _rand(KEYS[1], (h, n, d), jnp.float32)
+    v = _rand(KEYS[2], (h, n, dv), jnp.float32)
+    mask = _random_mask(KEYS[5], h, nb)
+    o_ref, _ = block_sparse_attention_ref(q, k, v, mask, block_size=bs)
+    o_k, _ = block_sparse_attention(q, k, v, mask, block_size=bs,
+                                    impl="kernel")
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_dense_mask_equals_flash_semantics():
+    """With an all-causal mask the sparse kernel IS dense flash attention."""
+    from repro.kernels.ref import dense_attention_ref
+    h, n, d, bs = 2, 256, 64, 64
+    nb = n // bs
+    q = _rand(KEYS[0], (h, n, d), jnp.float32)
+    k = _rand(KEYS[1], (h, n, d), jnp.float32)
+    v = _rand(KEYS[2], (h, n, d), jnp.float32)
+    mask = jnp.broadcast_to(causal_block_mask(nb)[None], (h, nb, nb))
+    o_k, _ = block_sparse_attention(q, k, v, mask, block_size=bs,
+                                    impl="kernel")
+    o_d = dense_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_d),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_matches_ref_with_mask():
+    h, n, d, bs = 2, 256, 64, 64
+    nb = n // bs
+    q = _rand(KEYS[0], (h, n, d), jnp.float32)
+    k = _rand(KEYS[1], (h, n, d), jnp.float32)
+    v = _rand(KEYS[2], (h, n, d), jnp.float32)
+    mask = _random_mask(KEYS[6], h, nb)
+    o_ref, a_ref = block_sparse_attention_ref(q, k, v, mask, block_size=bs)
+    o_c, a_c = chunked_attention(q[None], k[None], v[None], block_size=bs,
+                                 block_mask=mask[None], collect_stats=True)
+    np.testing.assert_allclose(np.asarray(o_c[0]), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+    fin = np.isfinite(np.asarray(a_ref))
+    assert (fin == np.isfinite(np.asarray(a_c[0]))).all()
+    np.testing.assert_allclose(np.asarray(a_c[0])[fin],
+                               np.asarray(a_ref)[fin], atol=1e-4, rtol=1e-4)
+
+
+def test_chunked_sliding_window():
+    h, n, d, bs, w = 2, 256, 32, 64, 64
+    q = _rand(KEYS[0], (h, n, d), jnp.float32)
+    k = _rand(KEYS[1], (h, n, d), jnp.float32)
+    v = _rand(KEYS[2], (h, n, d), jnp.float32)
+    o_c, _ = chunked_attention(q[None], k[None], v[None], block_size=bs,
+                               window=w)
+    # manual windowed reference
+    scale = 1.0 / np.sqrt(d)
+    logits = np.einsum("hqd,hkd->hqk", np.asarray(q), np.asarray(k)) * scale
+    qpos = np.arange(n)[:, None]
+    kpos = np.arange(n)[None, :]
+    valid = (kpos <= qpos) & ((qpos - kpos) < w)
+    logits = np.where(valid, logits, -np.inf)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o_ref = np.einsum("hqk,hkd->hqd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(o_c[0]), o_ref, atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_build_block_tables_roundtrip():
+    nb = 8
+    key = KEYS[7]
+    mask = jax.random.bernoulli(key, 0.4, (3, nb, nb))
+    mask = (mask | jnp.eye(nb, dtype=bool)[None]) & causal_block_mask(nb)
+    idx, cnt = build_block_tables(mask)
+    m, c = np.asarray(mask), np.asarray(cnt)
+    assert (c == m.sum(-1)).all()
+    for h in range(3):
+        for i in range(nb):
+            active = set(np.nonzero(m[h, i])[0].tolist())
+            listed = set(np.asarray(idx)[h, i, : c[h, i]].tolist())
+            assert active == listed
+            # padding repeats the last active index (DMA-elision contract)
+            if c[h, i] < nb and c[h, i] > 0:
+                last = np.asarray(idx)[h, i, c[h, i] - 1]
+                assert (np.asarray(idx)[h, i, c[h, i]:] == last).all()
+
+
+def test_scatter_block_stats_padding_safe():
+    nb = 4
+    mask = jnp.asarray([[[True, False, False, False],
+                         [True, True, False, False],
+                         [False, True, True, False],
+                         [True, False, True, True]]])
+    idx, cnt = build_block_tables(mask)
+    w = idx.shape[-1]
+    compact = jnp.where(
+        jnp.arange(w)[None, None, :] < cnt[..., None],
+        jnp.arange(w, dtype=jnp.float32)[None, None, :] + 1.0,
+        -jnp.inf)
+    full = scatter_block_stats(compact, idx, nb)
+    m = np.asarray(mask[0])
+    f = np.asarray(full[0])
+    assert (np.isfinite(f) == m).all()

@@ -1,0 +1,77 @@
+"""MoE dispatch invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models.moe import _capacity, _group_size, init_moe_layer, moe_apply
+
+CFG = get_smoke_config("mixtral-8x22b")
+KEY = jax.random.PRNGKey(0)
+
+
+def test_moe_output_shape_finite():
+    params = init_moe_layer(KEY, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, CFG.d_model))
+    y, aux = moe_apply(params, x, CFG)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux.load_balance_loss) >= 1.0 - 1e-5   # ≥ 1 by Cauchy-Schwarz
+    np.testing.assert_allclose(float(aux.expert_load.sum()),
+                               np.asarray(aux.expert_load).sum())
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    """With capacity_factor → tiny, most tokens are dropped but outputs stay
+    finite (dropped tokens pass through the residual stream)."""
+    cfg = dataclasses.replace(
+        CFG, moe=dataclasses.replace(CFG.moe, capacity_factor=0.01))
+    params = init_moe_layer(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, cfg.d_model))
+    y, _ = moe_apply(params, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    # with C = top_k minimum, output magnitude is much smaller than input
+    assert float(jnp.mean(jnp.abs(y))) < float(jnp.mean(jnp.abs(x)))
+
+
+def test_moe_router_determinism():
+    params = init_moe_layer(KEY, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, CFG.d_model))
+    y1, _ = moe_apply(params, x, CFG)
+    y2, _ = moe_apply(params, x, CFG)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_deepseek_shared_experts_always_active():
+    """Zeroing the router must leave the shared-expert path intact."""
+    cfg = get_smoke_config("deepseek-v2-236b")
+    params = init_moe_layer(KEY, cfg)
+    assert "shared" in params
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 32, cfg.d_model))
+    params_zero = dict(params)
+    params_zero["router"] = jnp.full_like(params["router"], -1e9)
+    y, _ = moe_apply(params_zero, x, cfg)
+    # router logits all equal → top-k still routes; instead compare against
+    # shared-only output by zeroing expert weights
+    params_noexp = dict(params)
+    for k in ("w_gate", "w_up", "w_down"):
+        params_noexp[k] = jnp.zeros_like(params[k])
+    y_shared, _ = moe_apply(params_noexp, x, cfg)
+    assert float(jnp.mean(jnp.abs(y_shared))) > 0.0
+
+
+@given(st.integers(1, 5000))
+@settings(max_examples=20, deadline=None)
+def test_group_size_divides(s):
+    g = _group_size(s)
+    assert s % g == 0 and 1 <= g <= 2048
+
+
+def test_capacity_formula():
+    assert _capacity(2048, CFG) == int(
+        2048 * CFG.moe.top_k * CFG.moe.capacity_factor / CFG.moe.num_experts)
+    assert _capacity(1, CFG) == CFG.moe.top_k     # floor at top_k

@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) for the pattern algebra and JSD — the
+system's core invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import jsd
+from repro.core.patterns import (
+    block_mask_density,
+    causal_block_mask,
+    cumulative_topk_mask,
+    expand_block_mask,
+    slash_block_mask,
+    sliding_window_block_mask,
+    vertical_block_mask,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def prob_vectors(draw, max_n=32):
+    n = draw(st.integers(2, max_n))
+    raw = draw(st.lists(st.floats(1e-3, 1.0), min_size=n, max_size=n))
+    v = np.asarray(raw, np.float64)
+    return v / v.sum()
+
+
+@given(prob_vectors())
+@settings(**SETTINGS)
+def test_jsd_self_zero(p):
+    assert float(jsd.js_divergence(jnp.asarray(p), jnp.asarray(p))) == \
+        pytest.approx(0.0, abs=1e-5)
+
+
+@given(prob_vectors(), prob_vectors())
+@settings(**SETTINGS)
+def test_jsd_symmetric_bounded(p, q):
+    n = min(len(p), len(q))
+    p, q = p[:n] / p[:n].sum(), q[:n] / q[:n].sum()
+    d1 = float(jsd.js_divergence(jnp.asarray(p), jnp.asarray(q)))
+    d2 = float(jsd.js_divergence(jnp.asarray(q), jnp.asarray(p)))
+    assert d1 == pytest.approx(d2, abs=1e-5)
+    assert -1e-6 <= d1 <= 1.0 + 1e-6          # base-2 JSD ∈ [0, 1]
+
+
+@given(st.integers(2, 64))
+@settings(**SETTINGS)
+def test_jsd_uniform_distance_of_onehot(n):
+    """A fully concentrated head is maximally far from uniform — the
+    'highly sparse head' the paper excludes (δ)."""
+    p = np.zeros(n)
+    p[0] = 1.0
+    d = float(jsd.js_distance_to_uniform(jnp.asarray(p)))
+    assert d > 0.5                              # >> δ = 0.3
+
+
+@given(prob_vectors(), st.floats(0.05, 0.99))
+@settings(**SETTINGS)
+def test_cumulative_topk_minimality(p, gamma):
+    """Selected set reaches γ mass; dropping its smallest member must not."""
+    keep = np.asarray(cumulative_topk_mask(jnp.asarray(p), gamma))
+    mass = p[keep].sum()
+    assert mass >= gamma - 1e-6
+    if keep.sum() > 1:
+        smallest = np.argmin(np.where(keep, p, np.inf))
+        assert mass - p[smallest] < gamma + 1e-9
+
+
+@given(prob_vectors())
+@settings(**SETTINGS)
+def test_cumulative_topk_selects_descending(p):
+    """Every selected element ≥ every unselected element."""
+    keep = np.asarray(cumulative_topk_mask(jnp.asarray(p), 0.7))
+    if keep.all() or not keep.any():
+        return
+    assert p[keep].min() >= p[~keep].max() - 1e-12
+
+
+@given(st.integers(2, 16))
+@settings(**SETTINGS)
+def test_causal_block_mask_props(nb):
+    m = np.asarray(causal_block_mask(nb))
+    assert m.diagonal().all()
+    assert not np.triu(m, 1).any()
+    assert np.tril(m).sum() == m.sum()
+
+
+@given(st.integers(2, 16), st.integers(1, 8))
+@settings(**SETTINGS)
+def test_sliding_window_is_causal_subset(nb, w):
+    sw = np.asarray(sliding_window_block_mask(nb, w, sink_blocks=1))
+    causal = np.asarray(causal_block_mask(nb))
+    assert (sw <= causal).all()
+    assert sw.diagonal().all()                  # local block always kept
+    assert sw[:, 0].all()                       # sink column kept
+
+
+@given(st.integers(2, 12))
+@settings(**SETTINGS)
+def test_vertical_slash_masks_shapes(nb):
+    cols = np.zeros(nb, bool)
+    cols[0] = True
+    offs = np.zeros(nb, bool)
+    offs[0] = True
+    vm = np.asarray(vertical_block_mask(nb, jnp.asarray(cols)))
+    sm = np.asarray(slash_block_mask(nb, jnp.asarray(offs)))
+    causal = np.asarray(causal_block_mask(nb))
+    assert (vm <= causal).all() and (sm <= causal).all()
+    assert (sm == np.eye(nb, dtype=bool)).all()   # offset 0 = diagonal
+    assert vm[:, 0].all()                         # column 0 fully active
+
+
+def test_expand_block_mask():
+    m = jnp.asarray([[True, False], [False, True]])
+    e = np.asarray(expand_block_mask(m, 2))
+    assert e.shape == (4, 4)
+    assert e[:2, :2].all() and e[2:, 2:].all()
+    assert not e[:2, 2:].any() and not e[2:, :2].any()
+
+
+def test_block_mask_density_range():
+    nb = 8
+    causal = causal_block_mask(nb)
+    assert float(block_mask_density(causal)) == pytest.approx(1.0)
+    diag = jnp.eye(nb, dtype=bool)
+    expected = nb / (nb * (nb + 1) / 2)
+    assert float(block_mask_density(diag)) == pytest.approx(expected)

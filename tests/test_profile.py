@@ -1,0 +1,74 @@
+"""Profiling utilities (offline-phase capture + traced prefill)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.api import SharePrefill
+from repro.core.profile import (
+    capture_block_attention_maps,
+    run_prefill_traced,
+)
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (1, 256), 0, cfg.vocab_size)
+    return cfg, model, params, tokens
+
+
+def test_capture_maps_shape_and_normalization(setup):
+    cfg, model, params, tokens = setup
+    maps = capture_block_attention_maps(params, cfg, tokens, block_size=64)
+    nb = 256 // 64
+    assert maps.shape == (cfg.num_layers, cfg.num_heads, nb, nb)
+    # rows are attention distributions over kv blocks (causal)
+    sums = maps.sum(-1)
+    np.testing.assert_allclose(sums, 1.0, atol=1e-4)
+    # strictly causal: upper triangle zero
+    assert (maps[..., np.triu_indices(nb, 1)[0], np.triu_indices(nb, 1)[1]]
+            == 0).all()
+
+
+def test_traced_prefill_matches_jitted(setup):
+    """The python-loop trace must produce the same logits as the jitted
+    scan-based prefill (same math, different control flow)."""
+    cfg, model, params, tokens = setup
+    sp = model.default_share_prefill()
+    tr = run_prefill_traced(params, cfg, tokens, sp, method="share")
+    res = model.prefill(params, tokens, sp, method="share")
+    np.testing.assert_allclose(tr.last_logits,
+                               np.asarray(res.last_logits),
+                               atol=2e-3, rtol=2e-3)
+    assert len(tr.per_layer) == cfg.num_layers
+
+
+def test_traced_prefill_baseline_methods(setup):
+    cfg, model, params, tokens = setup
+    sp = model.default_share_prefill()
+    for method in ("dense", "vertical_slash", "flex"):
+        tr = run_prefill_traced(params, cfg, tokens, sp, method=method,
+                                want_masks=True)
+        assert np.isfinite(tr.last_logits).all()
+        d = np.mean([r["block_density"] for r in tr.per_layer])
+        assert 0 < d <= 1.0
+        if method == "dense":
+            assert d == pytest.approx(1.0)
+        assert len(tr.masks) == cfg.num_layers
+
+
+def test_traced_full_logits(setup):
+    cfg, model, params, tokens = setup
+    sp = model.default_share_prefill()
+    tr = run_prefill_traced(params, cfg, tokens, sp, method="dense",
+                            want_full_logits=True)
+    assert tr.full_logits.shape == (1, 256, cfg.vocab_size)
+    np.testing.assert_allclose(tr.full_logits[0, -1], tr.last_logits[0],
+                               atol=1e-5)

@@ -1,0 +1,82 @@
+"""Serving engine: batched requests end-to-end on a tiny model."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, sample
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServingEngine
+
+CFG = get_smoke_config("granite-3-2b")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(KEY)
+    sp = model.default_share_prefill()
+    return model, params, sp
+
+
+def _requests(n, seq=256, max_new=4):
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=seq,
+                      global_batch=1, task="retrieval")
+    return [Request(uid=i, prompt=sample(dcfg, i)["tokens"],
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def test_engine_serves_batch(setup):
+    model, params, sp = setup
+    engine = ServingEngine(model, params, sp,
+                           EngineConfig(method="share", max_batch=2,
+                                        seq_buckets=(256,)))
+    reqs = _requests(3)
+    engine.serve(reqs)
+    for r in reqs:
+        assert r.output_tokens is not None
+        assert len(r.output_tokens) == r.max_new_tokens
+        assert r.prefill_s > 0
+        assert r.pattern_stats["block_density"] > 0
+
+
+def test_engine_greedy_deterministic(setup):
+    model, params, sp = setup
+    out = []
+    for _ in range(2):
+        engine = ServingEngine(model, params, sp,
+                               EngineConfig(method="share",
+                                            seq_buckets=(256,)))
+        reqs = _requests(1)
+        engine.serve(reqs)
+        out.append(reqs[0].output_tokens.copy())
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+def test_share_vs_dense_outputs_close(setup):
+    """Accuracy preservation at system level: greedy decode tokens from the
+    sparse-prefill engine should largely agree with the dense engine."""
+    model, params, sp = setup
+    outs = {}
+    for method in ("dense", "share"):
+        engine = ServingEngine(model, params, sp,
+                               EngineConfig(method=method,
+                                            seq_buckets=(256,)))
+        reqs = _requests(2, max_new=8)
+        engine.serve(reqs)
+        outs[method] = np.stack([r.output_tokens for r in reqs])
+    agree = (outs["dense"] == outs["share"]).mean()
+    assert agree >= 0.5        # random-weight model; structural agreement
+
+
+def test_grow_cache():
+    cache = {"stack": (jnp.zeros((2, 1, 4, 64, 8)),
+                       jnp.zeros((2, 1, 4, 64, 8))),
+             "prefix": [], "other": jnp.zeros((3,))}
+    grown = ServingEngine.grow_cache(cache, 64, 16)
+    assert grown["stack"][0].shape == (2, 1, 4, 80, 8)
+    assert grown["other"].shape == (3,)

@@ -1,0 +1,96 @@
+"""Decode-phase pattern sharing (beyond-paper extension)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.api import SharePrefill
+from repro.core.pattern_dict import PivotalState
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving.sparse_decode import (
+    decode_keep_blocks,
+    decode_traffic_fraction,
+    keep_blocks_to_token_mask,
+)
+from repro.data import DataConfig, sample
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _state(b, c, nb, valid_clusters):
+    masks = jnp.zeros((b, c, nb, nb), bool)
+    masks = masks.at[:, :, :, 0].set(True)       # pivots keep block 0
+    masks = masks.at[:, :, jnp.arange(nb), jnp.arange(nb)].set(True)
+    reps = jnp.full((b, c, nb), 1.0 / nb)
+    valid = jnp.zeros((b, c), bool)
+    for v in valid_clusters:
+        valid = valid.at[:, v].set(True)
+    return PivotalState(masks, reps, valid)
+
+
+def test_keep_blocks_valid_vs_fallback():
+    cfg_sp = get_smoke_config("granite-3-2b").share_prefill
+    sp = SharePrefill.from_clustering(
+        cfg_sp, np.asarray([[0, 1], [1, 0]], np.int32), 2)
+    st = _state(b=1, c=2, nb=4, valid_clusters=[0])
+    keep = decode_keep_blocks(sp, st, num_layers=2, num_heads=2)
+    assert keep.shape == (2, 1, 2, 4)
+    k = np.asarray(keep)
+    # layer 0 head 0 → cluster 0 (valid): keep = pivot LAST ROW
+    # (col0 sink + final diagonal block) — blocks 1, 2 dropped
+    assert k[0, 0, 0].tolist() == [True, False, False, True]
+    # layer 0 head 1 → cluster 1 (invalid): dense fallback
+    assert k[0, 0, 1].all()
+
+
+def test_keep_blocks_sparse_when_pivot_sparse():
+    cfg_sp = get_smoke_config("granite-3-2b").share_prefill
+    sp = SharePrefill.from_clustering(
+        cfg_sp, np.asarray([[0]], np.int32), 1)
+    nb = 8
+    masks = jnp.zeros((1, 1, nb, nb), bool).at[:, :, :, :2].set(True)
+    st = PivotalState(masks, jnp.full((1, 1, nb), 1 / nb),
+                      jnp.ones((1, 1), bool))
+    keep = decode_keep_blocks(sp, st, 1, 1)
+    k = np.asarray(keep[0, 0, 0])
+    # last-row blocks {0, 1} plus the always-kept final block
+    assert k[:2].all() and k[-1] and not k[2:-1].any()
+    assert decode_traffic_fraction(keep) == pytest.approx(3 / 8)
+
+
+def test_token_mask_post_prefill_always_visible():
+    keep = jnp.zeros((1, 4), bool).at[:, 0].set(True)
+    tok = keep_blocks_to_token_mask(keep, block_size=8, cache_len=40,
+                                    prefill_len=32)
+    t = np.asarray(tok[0])
+    assert t[:8].all()                 # kept block
+    assert not t[8:32].any()           # dropped prefill blocks
+    assert t[32:].all()                # post-prefill decode slots
+
+
+def test_engine_sparse_decode_end_to_end():
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    sp = model.default_share_prefill()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                      global_batch=1, task="retrieval")
+    outs = {}
+    for sparse in (False, True):
+        engine = ServingEngine(
+            model, params, sp,
+            EngineConfig(method="share", seq_buckets=(256,),
+                         decode_sparse=sparse))
+        reqs = [Request(uid=0, prompt=sample(dcfg, 7)["tokens"],
+                        max_new_tokens=6)]
+        engine.serve(reqs)
+        outs[sparse] = reqs[0]
+        assert reqs[0].output_tokens is not None
+    assert "decode_traffic_fraction" in outs[True].pattern_stats
+    frac = outs[True].pattern_stats["decode_traffic_fraction"]
+    assert 0.0 < frac <= 1.0
+    # greedy decode should agree substantially between dense/sparse decode
+    agree = (outs[True].output_tokens == outs[False].output_tokens).mean()
+    assert agree >= 0.5

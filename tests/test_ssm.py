@@ -1,0 +1,94 @@
+"""Mamba-2 SSD correctness: chunked scan vs naive recurrence; decode
+continuation equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.ssm import (
+    _dims,
+    _split_in,
+    _causal_conv,
+    init_ssm_layer,
+    ssm_decode,
+    ssm_forward,
+)
+
+CFG = get_smoke_config("mamba2-370m")
+KEY = jax.random.PRNGKey(0)
+
+
+def _naive_ssd(params, x, cfg):
+    """Token-by-token recurrence h ← diag(a)h + dt·B⊗x, y = C·h + D·x."""
+    d_inner, nh, p, n = _dims(cfg)
+    b, s, _ = x.shape
+    z, xs, bb, cc, dt = _split_in(params, x, cfg)
+    conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_out, _ = _causal_conv(params, conv_in)
+    xs = conv_out[..., :d_inner]
+    bb = conv_out[..., d_inner: d_inner + n]
+    cc = conv_out[..., d_inner + n:]
+    dt = jax.nn.softplus(jnp.asarray(dt, jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(jnp.asarray(params["a_log"], jnp.float32))
+    xh = np.asarray(xs, np.float64).reshape(b, s, nh, p)
+    bbn = np.asarray(bb, np.float64)
+    ccn = np.asarray(cc, np.float64)
+    dtn = np.asarray(dt, np.float64)
+    an = np.asarray(a, np.float64)
+
+    h = np.zeros((b, nh, n, p))
+    ys = np.zeros((b, s, nh, p))
+    for t in range(s):
+        decay = np.exp(dtn[:, t] * an)                       # (B,nh)
+        upd = np.einsum("bn,bh,bhp->bhnp", bbn[:, t], dtn[:, t], xh[:, t])
+        h = h * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bn,bhnp->bhp", ccn[:, t], h)
+    ys += xh * np.asarray(params["d_skip"])[None, None, :, None]
+    return ys, h
+
+
+def _inner_y(params, x, cfg):
+    """Run ssm_forward but return pre-gating SSD output for comparison."""
+    # replicate ssm_forward up to y (duplicating internals keeps the public
+    # function clean)
+    return None
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    params = init_ssm_layer(KEY, CFG)
+    b, s = 2, 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, CFG.d_model)) * 0.5
+    out, (conv_state, ssd_state) = ssm_forward(params, x, CFG)
+    assert not np.isnan(np.asarray(out)).any()
+    _, h_naive = _naive_ssd(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(ssd_state), h_naive,
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_ssd_decode_continues_forward():
+    """forward(x[:, :s]) + decode(x[:, s]) ≡ forward(x[:, :s+1]) last token."""
+    params = init_ssm_layer(KEY, CFG)
+    b, s = 1, 64
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s + 1, CFG.d_model)) * 0.5
+    out_full, _ = ssm_forward(params, x, CFG)
+    out_pre, state = ssm_forward(params, x[:, :s], CFG)
+    out_dec, _ = ssm_decode(params, x[:, s:], CFG, state[0], state[1])
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_full[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunk_size_invariance():
+    import dataclasses
+    params = init_ssm_layer(KEY, CFG)
+    b, s = 1, 128
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, s, CFG.d_model)) * 0.5
+    cfg32 = dataclasses.replace(
+        CFG, ssm=dataclasses.replace(CFG.ssm, chunk_size=32))
+    cfg128 = dataclasses.replace(
+        CFG, ssm=dataclasses.replace(CFG.ssm, chunk_size=128))
+    o32, _ = ssm_forward(params, x, cfg32)
+    o128, _ = ssm_forward(params, x, cfg128)
+    np.testing.assert_allclose(np.asarray(o32), np.asarray(o128),
+                               atol=2e-4, rtol=2e-4)
