@@ -1,16 +1,31 @@
 """Figure 5 proxy: prefill latency vs context length per method.
 
-Two latency views (this container is CPU-only, TPU is the target):
+Three latency views (this container is CPU-only, TPU is the target):
 
   * **modeled TPU latency** — computed-block density × dense-attention FLOPs
     / peak MXU throughput + pattern-search overhead (block-granular model,
     the quantity the Pallas splash kernel realizes on hardware);
-  * **measured CPU wall-clock** of the jitted prefill (relative ordering
-    only; CPU cannot skip blocks, so dense≈sparse in wall time — reported
-    for transparency, the density column is the speedup proxy).
+  * **measured CPU wall-clock** of the jitted dense-chunked prefill
+    (relative ordering only);
+  * **measured CPU wall-clock of the sparse execution path** — the same
+    prefill routed through ``attn_impl="sparse"``, i.e. the Pallas
+    block-skipping kernel in interpret mode.  On CPU the interpreter adds
+    per-step overhead, so the density column (blocks actually skipped)
+    remains the speedup proxy; on TPU the same program skips those blocks'
+    MXU work and DMA.
+
+``run()`` also emits the ``BENCH_prefill.json`` trajectory artifact at the
+repo root: per context length, tokens/s for dense-chunked vs sparse-kernel
+prefill at matched density, plus total/skipped block counts.
+
+CLI: ``python -m benchmarks.bench_latency [--method share]`` restricts the
+table to one method and prints a blocks-skipped summary.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -31,6 +46,9 @@ from benchmarks.common import (
 LENGTHS = (512, 1024, 2048)
 REPEATS = 2
 
+ARTIFACT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_prefill.json")
+
 
 def attention_flops(cfg, seq: int) -> float:
     """Dense causal attention FLOPs per layer-stack prefill (one sample)."""
@@ -39,38 +57,103 @@ def attention_flops(cfg, seq: int) -> float:
     return cfg.num_layers * h * (2 * seq * seq * d) * 2 * 0.5  # QK + PV, causal
 
 
-def run() -> dict:
+def _block_budget(cfg, seq: int, density: float) -> dict:
+    """Causal block counts over the whole layer stack at a given density."""
+    nb = seq // BLOCK
+    per_head = nb * (nb + 1) // 2
+    total = cfg.num_layers * cfg.num_heads * per_head
+    computed = int(round(density * total))
+    return {"blocks_total": total, "blocks_computed": computed,
+            "blocks_skipped": total - computed}
+
+
+def _timed(fn, *args) -> float:
+    fn(*args).block_until_ready()                 # compile + warmup
+    t0 = time.time()
+    for _ in range(REPEATS):
+        fn(*args).block_until_ready()
+    return (time.time() - t0) / REPEATS
+
+
+def run(methods=METHODS) -> dict:
     cfg, model, params = get_bench_model()
     sp = get_clustering()
     t0 = time.time()
     table = {}
+    trajectory = []
     for seq in LENGTHS:
         toks = jnp.asarray(prompt_for("lm", seq, 50)[None])
         table[seq] = {}
-        for m in METHODS:
+        for m in methods:
             # density from the traced run
             tr = run_prefill_traced(params, cfg, toks, sp, method=m)
             density = float(np.mean([r["block_density"]
                                      for r in tr.per_layer]))
-            # wall-clock of the jitted prefill
-            fn = jax.jit(lambda p, t: model.prefill(
-                p, t, sp, method=m, attn_impl="chunked").last_logits)
-            fn(params, toks).block_until_ready()      # compile + warmup
-            t1 = time.time()
-            for _ in range(REPEATS):
-                fn(params, toks).block_until_ready()
-            wall = (time.time() - t1) / REPEATS
+            # wall-clock of the jitted prefill: dense-chunked vs sparse path
+            # (method="dense" ignores attn_impl — one measurement suffices)
+            wall = {}
+            impls = ("chunked",) if m == "dense" else ("chunked", "sparse")
+            for impl in impls:
+                fn = jax.jit(lambda p, t, impl=impl, m=m: model.prefill(
+                    p, t, sp, method=m, attn_impl=impl).last_logits)
+                wall[impl] = _timed(fn, params, toks)
+            wall.setdefault("sparse", wall["chunked"])
 
             fl = attention_flops(cfg, seq)
-            table[seq][METHOD_LABELS[m]] = {
+            budget = _block_budget(cfg, seq, density)
+            row = {
                 "block_density": density,
                 "modeled_tpu_attn_s": density * fl / PEAK_FLOPS_BF16,
                 "modeled_speedup_vs_dense": 1.0 / max(density, 1e-6),
-                "cpu_wall_s": wall,
+                "cpu_wall_chunked_s": wall["chunked"],
+                "cpu_wall_sparse_s": wall["sparse"],
+                **budget,
             }
-    return {"latency": table, "wall_s": time.time() - t0}
+            table[seq][METHOD_LABELS[m]] = row
+            if m == "share":
+                trajectory.append({
+                    "seq": seq,
+                    "block_size": BLOCK,
+                    "block_density": density,
+                    "tokens_per_s_chunked": seq / wall["chunked"],
+                    "tokens_per_s_sparse": seq / wall["sparse"],
+                    **budget,
+                })
+    result = {"latency": table, "wall_s": time.time() - t0}
+    if trajectory:
+        artifact = {
+            "bench": "prefill",
+            "method": "share",
+            "model": cfg.name,
+            "num_layers": cfg.num_layers,
+            "num_heads": cfg.num_heads,
+            "num_kv_heads": cfg.num_kv_heads,
+            "backend": jax.default_backend(),
+            "points": trajectory,
+        }
+        with open(ARTIFACT_PATH, "w") as f:
+            json.dump(artifact, f, indent=1)
+        result["artifact"] = ARTIFACT_PATH
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--method", choices=METHODS,
+                    help="restrict to one pattern policy")
+    args = ap.parse_args()
+    methods = (args.method,) if args.method else METHODS
+    res = run(methods)
+    print(json.dumps(res, indent=1))
+    for seq, rows in res["latency"].items():
+        for label, row in rows.items():
+            if "blocks_skipped" in row:
+                print(f"seq={seq} {label}: blocks_skipped="
+                      f"{row['blocks_skipped']}/{row['blocks_total']} "
+                      f"(density={row['block_density']:.3f})")
+    if "artifact" in res:
+        print(f"wrote {res['artifact']}")
 
 
 if __name__ == "__main__":
-    import json
-    print(json.dumps(run(), indent=1))
+    main()

@@ -36,7 +36,9 @@ def _derived(name: str, res: dict) -> str:
         if name == "latency":
             seq = max(res["latency"])
             ours = res["latency"][seq]["Ours (SharePrefill)"]
-            return f"speedup@{seq}={ours['modeled_speedup_vs_dense']:.2f}x"
+            return (f"speedup@{seq}={ours['modeled_speedup_vs_dense']:.2f}x"
+                    f";skipped={ours['blocks_skipped']}"
+                    f"/{ours['blocks_total']}")
         if name == "pattern_dist":
             t = res["distribution"]["retrieval"]["totals"]
             return (f"dense={t['dense']:.0f};shared={t['shared']:.0f}"
@@ -74,7 +76,7 @@ def main() -> None:
         "accuracy": bench_accuracy.run,              # Table 1
         "ablation": bench_ablation.run,              # Table 2
         "perplexity": bench_perplexity.run,          # Figure 4
-        "latency": bench_latency.run,                # Figure 5
+        "latency": bench_latency.run,                # Figure 5 (+ BENCH_prefill.json)
         "pattern_dist": bench_pattern_dist.run,      # Figure 6
         "pooling": bench_pooling_estimation.run,     # §3 critique
         "decode_sharing": bench_decode_sharing.run,  # beyond-paper (§8 f.w.)

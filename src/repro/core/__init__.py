@@ -16,10 +16,12 @@ from repro.core.pattern_dict import PivotalState, init_pivotal_state
 from repro.core.share_attention import (
     LayerStats,
     batched_share_prefill_attention_layer,
+    gqa_head_vmap,
     share_prefill_attention_layer,
 )
 
 __all__ = [
     "SharePrefill", "PivotalState", "init_pivotal_state", "LayerStats",
     "share_prefill_attention_layer", "batched_share_prefill_attention_layer",
+    "gqa_head_vmap",
 ]

@@ -75,16 +75,18 @@ class SharePrefill:
         self,
         layer_idx_or_ids,
         q: jnp.ndarray,                 # (B, H, N, D)
-        k: jnp.ndarray,                 # (B, Hkv, N, D)
+        k: jnp.ndarray,                 # (B, Hkv, N, D) — un-expanded heads
         v: jnp.ndarray,
         state: PivotalState,
-        attention_fn: sa.AttentionFn,
+        attention_fn: Optional[sa.AttentionFn] = None,
         extra_mask: Optional[jnp.ndarray] = None,
     ) -> Tuple[jnp.ndarray, PivotalState, sa.LayerStats]:
         """Run one layer of SharePrefill attention.
 
         ``layer_idx_or_ids`` is either a static int (cluster ids are looked up
         host-side) or a traced (H,) int32 array (the scan-xs path).
+        ``attention_fn=None`` selects the sparse execution backend
+        (:func:`repro.kernels.sparse_attention_fn` at ``cfg.block_size``).
         """
         if isinstance(layer_idx_or_ids, int):
             ids = jnp.asarray(self.cluster_ids[layer_idx_or_ids])

@@ -33,13 +33,19 @@ def flash_attention_mask(num_heads: int, nb: int) -> jnp.ndarray:
                             (num_heads, nb, nb))
 
 
+def minference_head_mask(qh: jnp.ndarray, kh: jnp.ndarray, *, gamma: float,
+                         block_size: int) -> jnp.ndarray:
+    """MInference default config for a single head (qh, kh: (N, D))."""
+    return search_vertical_slash_pattern(qh, kh, gamma, block_size)
+
+
 def minference_masks(q: jnp.ndarray, k: jnp.ndarray, *, gamma: float,
                      block_size: int) -> jnp.ndarray:
     """MInference default config: vertical-slash per head, indices estimated
     from the last query block each call (q, k: (H, N, D))."""
     return jax.vmap(
-        lambda qh, kh: search_vertical_slash_pattern(
-            qh, kh, gamma, block_size))(q, k)
+        lambda qh, kh: minference_head_mask(
+            qh, kh, gamma=gamma, block_size=block_size))(q, k)
 
 
 def pooled_block_scores(q: jnp.ndarray, k: jnp.ndarray,
@@ -61,14 +67,20 @@ def pooled_block_scores(q: jnp.ndarray, k: jnp.ndarray,
     return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
 
 
+def flexprefill_head_mask(qh: jnp.ndarray, kh: jnp.ndarray, *, gamma: float,
+                          block_size: int) -> jnp.ndarray:
+    """FlexPrefill block mask for a single head (qh, kh: (N, D))."""
+    scores = pooled_block_scores(qh, kh, block_size)
+    keep = cumulative_topk_mask(scores, gamma)                # per-row γ
+    nb = scores.shape[0]
+    keep = keep | jnp.eye(nb, dtype=bool)                     # local block
+    return keep & causal_block_mask(nb)
+
+
 def flexprefill_masks(q: jnp.ndarray, k: jnp.ndarray, *, gamma: float,
                       block_size: int) -> jnp.ndarray:
     """Query-aware block mask per head: per q-block cumulative-γ selection
     over pooled block scores (q, k: (H, N, D))."""
-    def one_head(qh, kh):
-        scores = pooled_block_scores(qh, kh, block_size)
-        keep = cumulative_topk_mask(scores, gamma)            # per-row γ
-        nb = scores.shape[0]
-        keep = keep | jnp.eye(nb, dtype=bool)                 # local block
-        return keep & causal_block_mask(nb)
-    return jax.vmap(one_head)(q, k)
+    return jax.vmap(
+        lambda qh, kh: flexprefill_head_mask(
+            qh, kh, gamma=gamma, block_size=block_size))(q, k)

@@ -23,7 +23,10 @@ from repro.configs.base import ModelConfig
 from repro.core import pattern_dict as pdict
 from repro.core.api import SharePrefill
 from repro.core.construct import block_softmax
-from repro.core.share_attention import share_prefill_attention_layer
+from repro.core.share_attention import (
+    gqa_head_vmap,
+    share_prefill_attention_layer,
+)
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
 from repro.models import common
 from repro.models.transformer import (
@@ -38,10 +41,10 @@ def _layer_slice(stack, l: int):
 
 
 def _layer_qkv(layer, x, cfg: ModelConfig, positions):
-    from repro.models.attention import _rope_qk
+    from repro.models.attention import rope_qk
     h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
     q, k, v = common.gqa_qkv(layer["attn"], h)
-    q, k = _rope_qk(q, k, positions, cfg)
+    q, k = rope_qk(q, k, positions, cfg)
     return q, k, v
 
 
@@ -121,9 +124,9 @@ def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
               + [_layer_slice(params["stack"], l)
                  for l in range(cfg.num_layers - n_prefix)])
     for li, layer in enumerate(layers):
+        # K/V stay un-expanded (Hkv heads) — masks are built per kv-head
+        # group and every attention backend consumes the grouping natively
         q, k, v = _layer_qkv(layer, x, cfg, positions)
-        kx = common.repeat_kv(k, cfg.gqa_groups)
-        vx = common.repeat_kv(v, cfg.gqa_groups)
         h = q.shape[1]
         if method == "share":
             ids = jnp.asarray(sp.cluster_ids[li]) if sp.cfg.enabled else \
@@ -141,15 +144,19 @@ def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
                 mask = jnp.broadcast_to(causal_block_mask(nb)[None],
                                         (h, nb, nb))
             elif method == "vertical_slash":
-                mask = baselines.minference_masks(
-                    q[0], kx[0], gamma=sp.cfg.gamma, block_size=bs)
+                mask = gqa_head_vmap(
+                    lambda qh, kh: baselines.minference_head_mask(
+                        qh, kh, gamma=sp.cfg.gamma, block_size=bs),
+                    q[0], k[0])
             elif method == "flex":
-                mask = baselines.flexprefill_masks(
-                    q[0], kx[0], gamma=sp.cfg.gamma, block_size=bs)
+                mask = gqa_head_vmap(
+                    lambda qh, kh: baselines.flexprefill_head_mask(
+                        qh, kh, gamma=sp.cfg.gamma, block_size=bs),
+                    q[0], k[0])
             else:
                 raise ValueError(method)
             mask = mask & causal_block_mask(nb)[None]
-            out, _ = attention_fn(q[0], kx[0], vx[0], mask)
+            out, _ = attention_fn(q[0], k[0], v[0], mask)
             out = out[None]
             rec = {"num_shared": 0.0, "num_dense": 0.0,
                    "num_vs": float(h),

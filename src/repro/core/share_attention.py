@@ -12,10 +12,15 @@ For a single sample and one layer's heads:
 
 The function is pure; the pivotal dictionary is threaded as a
 :class:`PivotalState` carry through the model's ``lax.scan`` over layers.
+
+GQA is native end-to-end: K/V stay ``(Hkv, N, D)`` — the strip estimation
+vmaps per kv-head group and the sparse kernel resolves ``h // group`` in its
+BlockSpec index_map, so the ``H/Hkv`` redundant K/V copies the old
+``jnp.repeat`` expansion materialized are never built.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,13 +30,14 @@ from repro.core import pattern_dict as pdict
 from repro.core.construct import construct_pivotal_pattern
 from repro.core.determine import determine_sparse_pattern, pooled_block_estimate
 from repro.core.patterns import block_mask_density, causal_block_mask
-from repro.core.vertical_slash import (
-    search_vertical_slash_from_strip,
-    strip_scores,
-)
+from repro.core.vertical_slash import search_vertical_slash_from_strip
+from repro.kernels import compute_strips, sparse_attention_fn
+from repro.kernels.ops import gqa_head_vmap  # noqa: F401 (public re-export)
 
-# attention_fn: (q (H,N,D), k (H,N,D), v (H,N,D), mask (H,NB,NB))
-#               -> (out (H,N,D), a_tilde (H,NB,NB))
+# attention_fn: (q (H,N,D), k (Hkv,N,D), v (Hkv,N,Dv), mask (H,NB,NB))
+#               -> (out (H,N,Dv), a_tilde (H,NB,NB))
+# K/V arrive un-expanded; implementations either consume the GQA grouping
+# natively (the Pallas kernel) or expand internally (the chunked fallback).
 AttentionFn = Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
 
 
@@ -46,32 +52,25 @@ class LayerStats(NamedTuple):
     d_sim_mean: jnp.ndarray
 
 
-def _expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
-    """GQA: repeat kv heads to match query heads."""
-    h_kv = x.shape[0]
-    if h_kv == num_q_heads:
-        return x
-    return jnp.repeat(x, num_q_heads // h_kv, axis=0)
-
-
 def share_prefill_attention_layer(
     q: jnp.ndarray,                 # (H, N, D)
-    k: jnp.ndarray,                 # (Hkv, N, D)
+    k: jnp.ndarray,                 # (Hkv, N, D) — un-expanded GQA heads
     v: jnp.ndarray,                 # (Hkv, N, D)
     state: pdict.PivotalState,
     cluster_ids: jnp.ndarray,       # (H,) int32, -1 = noise
     cfg: SharePrefillConfig,
-    attention_fn: AttentionFn,
+    attention_fn: Optional[AttentionFn] = None,
     extra_mask: jnp.ndarray | None = None,  # (NB, NB) e.g. sliding window
+    strip_impl: str = "auto",       # auto | pallas | jnp (Algorithm-3 pass)
 ) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
     h, n, d = q.shape
     bs = cfg.block_size
     nb = n // bs
-    kx = _expand_kv(k, h)
-    vx = _expand_kv(v, h)
+    if attention_fn is None:
+        attention_fn = sparse_attention_fn(block_size=bs)
 
     # -- Algorithm 3: estimate + decide ------------------------------------
-    strips = jax.vmap(lambda qh, kh: strip_scores(qh, kh, bs))(q, kx)
+    strips = compute_strips(q, k, block_size=bs, impl=strip_impl)
     a_hat = jax.vmap(lambda s: pooled_block_estimate(s, bs))(strips)
 
     pivot_masks, pivot_reps, pivot_valid = pdict.lookup(state, cluster_ids)
@@ -93,7 +92,7 @@ def share_prefill_attention_layer(
         masks = masks & extra_mask[None]
 
     # -- sparse attention + Ã (Algorithm 1 line 8) ---------------------------
-    out, a_tilde = attention_fn(q, kx, vx, masks)
+    out, a_tilde = attention_fn(q, k, v, masks)
 
     # -- Algorithm 2: construct + update dictionary --------------------------
     new_masks, new_reps = jax.vmap(
@@ -114,19 +113,21 @@ def share_prefill_attention_layer(
 
 def batched_share_prefill_attention_layer(
     q: jnp.ndarray,                 # (B, H, N, D)
-    k: jnp.ndarray,                 # (B, Hkv, N, D)
+    k: jnp.ndarray,                 # (B, Hkv, N, D) — un-expanded GQA heads
     v: jnp.ndarray,
     state: pdict.PivotalState,      # batched: leaves carry leading B dim
     cluster_ids: jnp.ndarray,       # (H,)
     cfg: SharePrefillConfig,
-    attention_fn: AttentionFn,
+    attention_fn: Optional[AttentionFn] = None,
     extra_mask: jnp.ndarray | None = None,
+    strip_impl: str = "auto",
 ) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
     """vmap over the batch; each sample carries its own pattern dictionary
     (patterns are input-dependent — paper observation 2 is about *similarity
     structure*, not the patterns themselves)."""
     fn = lambda qb, kb, vb, st: share_prefill_attention_layer(
-        qb, kb, vb, st, cluster_ids, cfg, attention_fn, extra_mask)
+        qb, kb, vb, st, cluster_ids, cfg, attention_fn, extra_mask,
+        strip_impl)
     out, new_state, stats = jax.vmap(fn)(q, k, v, state)
     stats = jax.tree.map(jnp.mean, stats)
     return out, new_state, stats

@@ -18,21 +18,9 @@ from repro.core.patterns import (
     slash_block_mask,
     vertical_block_mask,
 )
-
-
-def strip_scores(q: jnp.ndarray, k: jnp.ndarray,
-                 block_size: int) -> jnp.ndarray:
-    """softmax(Q̂ Kᵀ/√d) for the last query block; (block_size, N)."""
-    n, d = k.shape
-    q_hat = q[-block_size:, :]
-    logits = (q_hat @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
-    # causal: row r of the strip is global query N - block_size + r
-    rows = jnp.arange(block_size) + (n - block_size)
-    cols = jnp.arange(n)
-    logits = jnp.where(cols[None, :] <= rows[:, None], logits, -jnp.inf)
-    logits = jnp.asarray(logits, jnp.float32)
-    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
-    return p / jnp.sum(p, axis=-1, keepdims=True)
+# strip_scores lives with its Pallas twin now (re-exported for back-compat);
+# the kernels package must not depend on repro.core.
+from repro.kernels.strip import strip_scores  # noqa: F401
 
 
 def vertical_slash_direction_scores(a_hat: jnp.ndarray):

@@ -1,24 +1,99 @@
-"""Pallas TPU kernels for the paper's compute hot-spot (block-sparse prefill
-attention) plus pure-jnp oracles.
+"""Pallas TPU kernels for the paper's compute hot-spots plus pure-jnp oracles.
 
   block_sparse_attn.py  pl.pallas_call + BlockSpec splash-style kernel
+  strip.py              flash-style strip-score kernel (Algorithm-3 pass)
+  indices.py            mask ⇄ (indices, counts) staging + Ã scatter
   ops.py                jit'd wrappers (index staging, Ã scatter)
   ref.py                pure-jnp oracles the kernels are validated against
+
+``sparse_attention_fn`` is the default SharePrefill attention backend: the
+block-skipping Pallas kernel, compiled on TPU / interpreted elsewhere, with
+a dense-chunked fallback on shapes the kernel cannot take.
 """
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.indices import (
+    build_block_tables,
+    cap_block_mask,
+    compact_block_mask,
+    scatter_block_stats,
+)
 from repro.kernels.ops import (
     block_sparse_attention,
-    build_block_tables,
+    expand_kv,
+    gqa_head_vmap,
     make_attention_fn,
-    scatter_block_stats,
 )
 from repro.kernels.ref import (
     block_sparse_attention_ref,
     decode_attention_ref,
     dense_attention_ref,
 )
+from repro.kernels.strip import compute_strips, strip_scores_pallas
+
+
+def sparse_attention_fn(*, block_size: int, causal: bool = True,
+                        width: Optional[int] = None,
+                        interpret: Optional[bool] = None):
+    """Bind the sparse execution path as an AttentionFn.
+
+    The returned callable satisfies the :data:`repro.core.share_attention.
+    AttentionFn` protocol — ``(q (H,N,D), k (Hkv,N,D), v (Hkv,N,Dv),
+    masks (H,NB,NB)) -> (out (H,N,Dv), Ã (H,NB,NB))`` — and is GQA-native:
+    grouped K/V are consumed as-is, the kernel's BlockSpec index_map resolves
+    ``h // group``.
+
+    ``interpret=None`` auto-selects by backend: compiled on TPU, interpret
+    mode elsewhere (the CPU container runs the same kernel through the Pallas
+    interpreter, so the execution path exercised in tests is the one deployed
+    on hardware).
+
+    Mask-grid contract: the ``(H, NB, NB)`` masks must tile the sequence —
+    each block row governs exactly ``N / NB`` tokens.  When that granularity
+    is ``block_size`` the Pallas kernel runs; any other tiling granularity
+    (e.g. a mask built at a finer block size) falls back to the dense
+    chunked path at ``N // NB`` tokens per block.  A mask whose grid does
+    not divide ``N`` at all is a caller error and raises ``ValueError`` —
+    the backend never stretches mask bits over token ranges they were not
+    estimated for.  ``width`` forwards the static per-row block budget W
+    (see :mod:`repro.kernels.indices`) on both paths.
+    """
+    from repro.kernels.chunked import chunked_attention_fn
+
+    it = interpret if interpret is not None \
+        else jax.default_backend() != "tpu"
+
+    def fn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           masks: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        n = q.shape[1]
+        nb = masks.shape[-1]
+        if nb * block_size == n:
+            return block_sparse_attention(
+                q, k, v, masks, block_size=block_size, causal=causal,
+                impl="kernel", interpret=it, width=width)
+        # chunked fallback: applicable() failed upstream or the mask was
+        # built at a different granularity — run dense, same semantics
+        if nb == 0 or n % nb:
+            raise ValueError(
+                f"mask grid {nb} does not tile sequence length {n}")
+        if width is not None:
+            # apply the same W-cap truncation the kernel path would
+            masks = cap_block_mask(masks, width)
+        return chunked_attention_fn(block_size=n // nb,
+                                    causal=causal)(q, k, v, masks)
+
+    return fn
+
 
 __all__ = [
-    "block_sparse_attention", "build_block_tables", "make_attention_fn",
-    "scatter_block_stats", "block_sparse_attention_ref",
+    "block_sparse_attention", "build_block_tables", "cap_block_mask",
+    "compact_block_mask", "compute_strips", "expand_kv", "gqa_head_vmap",
+    "make_attention_fn", "scatter_block_stats", "sparse_attention_fn",
+    "strip_scores_pallas", "block_sparse_attention_ref",
     "decode_attention_ref", "dense_attention_ref",
 ]

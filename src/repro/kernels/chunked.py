@@ -1,23 +1,47 @@
 """Chunked exact attention in pure JAX (flash-style lax.scan over q blocks).
 
 This is the O(N)-memory attention used (a) as the differentiable training
-attention, (b) as the dry-run lowering path where XLA:CPU cannot express
-data-dependent block skipping (DESIGN.md §3), and (c) as the large-N variant
-of the block-sparse oracle.  Semantics match :mod:`repro.kernels.ref`
-exactly; tests assert allclose between the two and against the Pallas kernel.
+attention, (b) as the numerical fallback of the sparse execution path
+(:func:`repro.kernels.sparse_attention_fn`) on shapes the Pallas kernel
+cannot take — non-block-aligned sequences, too-few blocks — and (c) as the
+large-N variant of the block-sparse oracle.  Semantics match
+:mod:`repro.kernels.ref` exactly; tests assert allclose between the two and
+against the Pallas kernel.
 
 Accepts an optional block mask: masked blocks contribute nothing to the
-softmax and carry −inf in the emitted Ã (matching the sparse kernel), but the
-FLOPs are still issued — on TPU the Pallas kernel is the one that skips.
+softmax and carry −inf in the emitted Ã, token-for-token identical to the
+Pallas block-sparse kernel — but as a *dense* path it issues the FLOPs for
+every block.  It is the oracle and the fallback, not the hot path: the
+default SharePrefill backend is ``repro.kernels.sparse_attention_fn``, whose
+Pallas kernel skips inactive blocks (compute *and* DMA) on TPU.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = float("-inf")
+
+# below this block size, the divisor fallback pads instead of shrinking
+_MIN_FALLBACK_BLOCK = 16
+
+
+def largest_divisor_block(n: int, nkv: int, block_size: int) -> int:
+    """Largest common divisor of ``n`` and ``nkv`` that is ≤ ``block_size``.
+
+    The naive ``while n % bs: bs -= 1`` fallback degrades to ``bs == 1`` for
+    prime-ish sequence lengths — an O(N)-iteration scan of 1-row blocks.
+    Searching the divisors of gcd(n, nkv) from ``block_size`` down finds the
+    best block in O(block_size) host-side work at trace time.
+    """
+    g = math.gcd(n, nkv)
+    for bs in range(min(block_size, g), 0, -1):
+        if g % bs == 0:
+            return bs
+    return 1
 
 
 def chunked_attention(
@@ -35,20 +59,42 @@ def chunked_attention(
     """Exact attention, scanned over query blocks.
 
     Returns ``(out (B,H,N,Dv), a_tilde (B,H,NBq,NBkv) | None)``.
+
+    When no block mask is given and no usable divisor of ``N`` exists (see
+    :func:`largest_divisor_block`), the inputs are zero-padded to the
+    requested block.  ``out`` is sliced back to ``N``; ``a_tilde`` then
+    follows the *padded* block grid — padded queries/keys are excluded from
+    every block mean (rows/blocks touching only padding are −inf), but
+    callers that need an exact N-aligned grid should pass block-aligned
+    inputs.
     """
     b, h, n, d = q.shape
     nkv = k.shape[2]
+    n_orig, nkv_orig = n, nkv
+    pad_q = pad_kv = 0
     if block_mask is None:
-        # no mask to respect — free to shrink the block until it divides
-        while n % block_size or nkv % block_size:
-            block_size -= 1
+        # no mask to respect — shrink to the largest divisor, or, when only
+        # a degenerate block divides (prime-ish N), pad to the requested
+        # block instead of scanning 1-row blocks
+        best = largest_divisor_block(n, nkv, block_size)
+        if best >= min(block_size, _MIN_FALLBACK_BLOCK):
+            block_size = best
+        else:
+            pad_q = -n % block_size
+            pad_kv = -nkv % block_size
+            if pad_q or pad_kv:
+                q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+                n, nkv = n + pad_q, nkv + pad_kv
     nbq = n // block_size
     nbkv = nkv // block_size
     scale = 1.0 / (d ** 0.5)
     q32 = jnp.asarray(q, jnp.float32)
     k32 = jnp.asarray(k, jnp.float32)
     v32 = jnp.asarray(v, jnp.float32)
-    offset = nkv - n                      # query i is global position i+offset
+    # query i is global position i+offset (original, pre-pad alignment)
+    offset = nkv_orig - n_orig
 
     kpos = jnp.arange(nkv)
 
@@ -58,6 +104,11 @@ def chunked_attention(
         logits = jnp.einsum("bhqd,bhkd->bhqk", qb, k32) * scale
         qpos = i * block_size + jnp.arange(block_size) + offset
         valid = jnp.ones((block_size, nkv), dtype=bool)
+        if pad_kv:
+            valid &= kpos[None, :] < nkv_orig
+        if pad_q:
+            # padded query rows must not leak into collect_stats block means
+            valid &= qpos[:, None] < nkv_orig
         if causal:
             valid &= kpos[None, :] <= qpos[:, None]
         if window > 0:
@@ -89,18 +140,22 @@ def chunked_attention(
 
     _, (blocks, stats) = jax.lax.scan(body, None, jnp.arange(nbq))
     out = jnp.moveaxis(blocks, 0, 2).reshape(b, h, n, -1)
+    if pad_q:
+        out = out[:, :, :n_orig]
     if collect_stats:
         a_tilde = jnp.moveaxis(stats, 0, 2)                   # (B,H,NBq,NBkv)
         return out, a_tilde
     return out, None
 
 
-def chunked_attention_fn(*, block_size: int):
+def chunked_attention_fn(*, block_size: int, causal: bool = True):
     """AttentionFn adapter for repro.core.share_attention (single sample,
-    (H, N, D) operands, always collects Ã)."""
-    def fn(q, kx, vx, masks):
+    (H, N, D) q and un-expanded (Hkv, N, D) k/v, always collects Ã)."""
+    def fn(q, k, v, masks):
+        from repro.kernels.ops import expand_kv
+        k, v = expand_kv(k, v, q.shape[0])
         out, a_tilde = chunked_attention(
-            q[None], kx[None], vx[None], block_size=block_size,
-            causal=True, block_mask=masks[None], collect_stats=True)
+            q[None], k[None], v[None], block_size=block_size,
+            causal=causal, block_mask=masks[None], collect_stats=True)
         return out[0], a_tilde[0]
     return fn

@@ -1,0 +1,108 @@
+"""Mask ⇄ splash-index staging for the block-sparse Pallas kernel.
+
+The SharePrefill orchestration produces dense per-head boolean block masks
+``(H, NBq, NBkv)``; the Pallas kernel consumes *compact index lists*.  This
+module owns the contract between the two:
+
+Mask → indices contract
+-----------------------
+``compact_block_mask`` turns a block mask into ``(indices, counts)``:
+
+  * ``indices`` — ``(…, NBq, W)`` int32: for each query block row, the active
+    kv-block ids in **ascending order**, padded by *repeating the last kept
+    id*.  Padded grid steps therefore re-address the block of the previous
+    step and the Pallas TPU pipeline elides their DMA (DESIGN.md §3); the
+    kernel's ``w < count`` guard skips their compute.
+  * ``counts`` — ``(…, NBq)`` int32: number of *kept* active blocks per row.
+
+The static width cap ``W``
+--------------------------
+``W = indices.shape[-1]`` bounds the kernel's sequential grid axis — the
+kernel issues exactly ``W`` steps per (head, q-block) regardless of the
+data-dependent population, which keeps the program shape static under jit.
+
+  * ``width=None`` (default) sets ``W = NBkv``: lossless for any mask.
+  * ``width=W < NBkv`` caps the per-row block budget.  Rows with more than
+    ``W`` active blocks are **truncated to the W highest-index (most recent)
+    active blocks** — this always preserves the diagonal/local band, which
+    dominates the softmax for causal attention, at the cost of possibly
+    dropping low-index vertical (sink) blocks.  Choose
+    ``W ≥ max_row_population`` (e.g. ``ceil(density_cap · NBkv)``) whenever
+    exact numerics are required; the cap is a latency/VMEM budget knob for
+    serving, not a default.
+
+Inverse scatter
+---------------
+``scatter_block_stats`` is the inverse map: the kernel emits its fused
+block-averaged QK logits compactly as ``(H, NBq, W)`` (one slot per visited
+step, −inf on skipped steps); scattering through ``indices`` with ``max``
+reconstructs the full ``(H, NBq, NBkv)`` Ã with −inf background — the layout
+Algorithm 2 (pivotal-pattern construction) consumes.  ``max`` makes the
+scatter padding-safe: a padded step repeats an active id but carries −inf,
+so the real visited value wins.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def compact_block_mask(block_mask: jnp.ndarray,
+                       width: Optional[int] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(…, NBq, NBkv) bool mask → ``(indices (…, NBq, W), counts (…, NBq))``.
+
+    See the module docstring for the padding and ``width``-cap contract.
+    """
+    nb_kv = block_mask.shape[-1]
+    w = nb_kv if width is None else max(1, min(int(width), nb_kv))
+    cols = jnp.arange(nb_kv, dtype=jnp.int32)
+    # active columns sort before inactive ones, each group ascending
+    key = jnp.where(block_mask, cols, cols + nb_kv)
+    order = jnp.argsort(key, axis=-1).astype(jnp.int32)
+    counts = jnp.sum(block_mask, axis=-1).astype(jnp.int32)
+    kept = jnp.minimum(counts, w)
+    # under a cap, keep the W highest-index actives: ranks [counts-W, counts)
+    start = jnp.maximum(counts - w, 0)
+    ws = jnp.arange(w, dtype=jnp.int32)
+    pos = jnp.minimum(start[..., None] + ws, nb_kv - 1)
+    gathered = jnp.take_along_axis(order, pos, axis=-1)
+    last_kept = jnp.take_along_axis(
+        order, jnp.maximum(counts - 1, 0)[..., None], axis=-1)
+    indices = jnp.where(ws < kept[..., None], gathered, last_kept)
+    return indices, kept
+
+
+def cap_block_mask(block_mask: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Boolean form of the W cap: keep each row's ``width`` highest-index
+    active blocks — exactly the truncation :func:`compact_block_mask`
+    applies (same clamp of ``width`` to [1, NBkv]), expressed as a mask
+    (used by the dense fallback so capped numerics agree across backends)."""
+    w = max(1, min(int(width), block_mask.shape[-1]))
+    counts = jnp.sum(block_mask, axis=-1, keepdims=True)
+    rank = jnp.cumsum(block_mask, axis=-1)       # 1-based rank among actives
+    return block_mask & (rank > counts - w)
+
+
+def scatter_block_stats(stats_compact: jnp.ndarray,  # (H, NBq, W)
+                        indices: jnp.ndarray,        # (H, NBq, W)
+                        nb_kv: int) -> jnp.ndarray:
+    """Compact per-step kernel stats → full (H, NBq, NBkv) Ã, −inf background.
+
+    The inverse of :func:`compact_block_mask` for the kernel's fused stats
+    output (module docstring, "Inverse scatter").
+    """
+    h, nbq, _ = stats_compact.shape
+    full = jnp.full((h, nbq, nb_kv), NEG_INF, jnp.float32)
+    h_ix = jnp.arange(h)[:, None, None]
+    q_ix = jnp.arange(nbq)[None, :, None]
+    return full.at[h_ix, q_ix, indices].max(stats_compact)
+
+
+def build_block_tables(block_mask: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Back-compat alias: lossless (uncapped) :func:`compact_block_mask`."""
+    return compact_block_mask(block_mask, width=None)

@@ -1,63 +1,69 @@
 """Jitted wrappers around the attention kernels.
 
-``block_sparse_attention`` is the AttentionFn consumed by
+``block_sparse_attention`` is an AttentionFn-shaped entry point consumed by
 :mod:`repro.core.share_attention`: it takes per-head block masks, stages the
-splash index tables in-graph, dispatches to the Pallas kernel (or the jnp
-oracle), and scatters the compact block-stats back into the full Ã layout.
+splash index tables in-graph (:mod:`repro.kernels.indices`), dispatches to
+the Pallas kernel (or the jnp oracle), and scatters the compact block-stats
+back into the full Ã layout.  Prefer :func:`repro.kernels.sparse_attention_fn`
+for orchestration code — it adds backend auto-selection and a chunked
+fallback on incompatible shapes.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as ref_ops
 from repro.kernels.block_sparse_attn import block_sparse_attention_kernel
+from repro.kernels.indices import (
+    build_block_tables,
+    compact_block_mask,
+    scatter_block_stats,
+)
 
-NEG_INF = float("-inf")
+__all__ = [
+    "block_sparse_attention", "build_block_tables", "compact_block_mask",
+    "expand_kv", "gqa_head_vmap", "make_attention_fn",
+    "scatter_block_stats",
+]
 
 
-def build_block_tables(block_mask: jnp.ndarray
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(…, NBq, NBkv) bool mask → splash index tables.
+def gqa_head_vmap(fn, q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """vmap ``fn(q_head, kv_head)`` over query heads without repeating K.
 
-    Returns ``(indices, counts)``: active kv-block ids ascending, padded by
-    *repeating the last active id* so padded grid steps re-address the same
-    block and the TPU pipeline elides their DMA (DESIGN.md §3).
+    q is ``(H, …)``, k is ``(Hkv, …)``: q reshapes to ``(Hkv, group, …)``
+    and nested vmaps share (not copy) each kv head across its group;
+    results come back stacked over H.
     """
-    nb_kv = block_mask.shape[-1]
-    cols = jnp.arange(nb_kv, dtype=jnp.int32)
-    # active columns sort before inactive ones, each group ascending
-    key = jnp.where(block_mask, cols, cols + nb_kv)
-    order = jnp.argsort(key, axis=-1).astype(jnp.int32)
-    counts = jnp.sum(block_mask, axis=-1).astype(jnp.int32)
-    last_active = jnp.take_along_axis(
-        order, jnp.maximum(counts - 1, 0)[..., None], axis=-1)
-    w = jnp.arange(nb_kv, dtype=jnp.int32)
-    indices = jnp.where(w < counts[..., None], order, last_active)
-    return indices, counts
+    h, h_kv = q.shape[0], k.shape[0]
+    if h == h_kv:
+        return jax.vmap(fn)(q, k)
+    group = h // h_kv
+    qg = q.reshape(h_kv, group, *q.shape[1:])
+    out = jax.vmap(jax.vmap(fn, in_axes=(0, None)), in_axes=(0, 0))(qg, k)
+    return out.reshape(h, *out.shape[2:])
 
 
-def scatter_block_stats(stats_compact: jnp.ndarray,  # (H, NBq, W)
-                        indices: jnp.ndarray,        # (H, NBq, W)
-                        nb_kv: int) -> jnp.ndarray:
-    """Compact per-step stats → full (H, NBq, NBkv) Ã with −inf background.
+def expand_kv(k: jnp.ndarray, v: jnp.ndarray, num_q_heads: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Repeat (Hkv, …) K/V to match query heads — for dense backends only.
 
-    Padded steps carry −inf, and scattering with ``max`` keeps the real value
-    when a padded step repeats an active block id.
+    The GQA-expansion contract in one place: the sparse kernel never needs
+    this (its index_map resolves ``h // group``); the chunked/ref paths do.
     """
-    h, nbq, _ = stats_compact.shape
-    full = jnp.full((h, nbq, nb_kv), NEG_INF, jnp.float32)
-    h_ix = jnp.arange(h)[:, None, None]
-    q_ix = jnp.arange(nbq)[None, :, None]
-    return full.at[h_ix, q_ix, indices].max(stats_compact)
+    h_kv = k.shape[0]
+    if h_kv == num_q_heads:
+        return k, v
+    group = num_q_heads // h_kv
+    return jnp.repeat(k, group, axis=0), jnp.repeat(v, group, axis=0)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_size", "causal", "impl",
-                                    "interpret"))
+                                    "interpret", "width"))
 def block_sparse_attention(
     q: jnp.ndarray,             # (H, N, Dqk)
     k: jnp.ndarray,             # (H or Hkv, N, Dqk)
@@ -68,16 +74,14 @@ def block_sparse_attention(
     causal: bool = True,
     impl: str = "kernel",       # "kernel" | "ref"
     interpret: bool = True,
+    width: Optional[int] = None,  # static per-row block budget W (None = NB)
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Block-sparse attention + fused Ã for a single sample."""
     if impl == "ref":
-        h = q.shape[0]
-        if k.shape[0] != h:
-            k = jnp.repeat(k, h // k.shape[0], axis=0)
-            v = jnp.repeat(v, h // v.shape[0], axis=0)
+        k, v = expand_kv(k, v, q.shape[0])
         return ref_ops.block_sparse_attention_ref(
             q, k, v, block_mask, block_size=block_size, causal=causal)
-    indices, counts = build_block_tables(block_mask)
+    indices, counts = compact_block_mask(block_mask, width=width)
     out, stats_compact = block_sparse_attention_kernel(
         q, k, v, indices, counts, block_size=block_size, causal=causal,
         interpret=interpret)
@@ -87,10 +91,11 @@ def block_sparse_attention(
 
 
 def make_attention_fn(*, block_size: int, impl: str = "ref",
-                      interpret: bool = True, causal: bool = True):
+                      interpret: bool = True, causal: bool = True,
+                      width: Optional[int] = None):
     """Bind an AttentionFn for repro.core.share_attention."""
     def fn(q, k, v, masks):
         return block_sparse_attention(
             q, k, v, masks, block_size=block_size, causal=causal,
-            impl=impl, interpret=interpret)
+            impl=impl, interpret=interpret, width=width)
     return fn

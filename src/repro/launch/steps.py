@@ -139,8 +139,11 @@ def build_step(arch: str, shape_name: str, mesh: Mesh, *,
         sp = _sp_for(cfg)
 
         def prefill_step(params, tokens, extras):
+            # "auto" resolves to chunked on this CPU lowering host (the
+            # Pallas interpreter would unroll its grid into the HLO) and to
+            # the compiled sparse kernel when lowering on TPU
             return model.prefill(params, tokens, sp, method=method,
-                                 attn_impl="chunked", **extras)
+                                 attn_impl="auto", **extras)
 
         tokens = _aval((b, s), jnp.int32, bspec)
         args = (params, tokens, extras)

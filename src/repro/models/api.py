@@ -68,7 +68,7 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
     if cfg.family in ("dense", "vlm", "moe"):
         fwd = lambda p, tokens, positions=None, embeds=None: \
             transformer.forward_train(p, cfg, tokens, positions, embeds)
-        pf = lambda p, tokens, sp, method="share", attn_impl="chunked", \
+        pf = lambda p, tokens, sp, method="share", attn_impl="auto", \
             positions=None, embeds=None: transformer.prefill(
                 p, cfg, tokens, sp, method=method, attn_impl=attn_impl,
                 positions=positions, embeds=embeds)
@@ -81,7 +81,7 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
     else:
         fwd = lambda p, tokens, positions=None, embeds=None: \
             mod.forward_train(p, cfg, tokens, positions, embeds)
-        pf = lambda p, tokens, sp, method="share", attn_impl="chunked", \
+        pf = lambda p, tokens, sp, method="share", attn_impl="auto", \
             positions=None, embeds=None: mod.prefill(
                 p, cfg, tokens, sp, method=method, attn_impl=attn_impl,
                 positions=positions, embeds=embeds)

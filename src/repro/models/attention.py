@@ -4,7 +4,12 @@ The prefill path is where the paper lives: ``method`` selects the pattern
 policy — ``dense`` (FlashAttention-2 semantics), ``share`` (SharePrefill),
 ``vertical_slash`` (MInference default config) or ``flex`` (FlexPrefill) —
 all consuming the same block-sparse attention implementation so comparisons
-isolate the pattern policy (paper §6.1).
+isolate the pattern policy (paper §6.1).  ``attn_impl`` selects that
+implementation: ``auto`` (default — the block-skipping Pallas kernel
+compiled on TPU, dense chunked elsewhere), ``sparse`` (the kernel
+unconditionally, interpret mode off-TPU), ``chunked`` (dense pure-JAX),
+``ref`` / ``kernel`` (validation pins).  Sparse prefill consumes K/V
+un-expanded — ``(B, Hkv, N, D)`` — end to end.
 """
 from __future__ import annotations
 
@@ -23,12 +28,37 @@ from repro.core.patterns import (
     sliding_window_block_mask,
 )
 from repro.distributed.sharding import shard
+from repro.kernels import sparse_attention_fn
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
 from repro.kernels.ops import make_attention_fn
 from repro.kernels.ref import decode_attention_ref
 from repro.models import common
 
 PREFILL_METHODS = ("dense", "share", "vertical_slash", "flex")
+PREFILL_ATTN_IMPLS = ("auto", "sparse", "chunked", "ref", "kernel")
+
+
+def resolve_attention_fn(attn_impl: str, block_size: int) -> sa.AttentionFn:
+    """Map an ``attn_impl`` name to an AttentionFn backend.
+
+    ``auto`` is the serving-safe policy: the compiled sparse kernel on TPU,
+    dense chunked elsewhere — jitting the Pallas *interpreter* at large
+    sequence lengths unrolls its grid into the HLO, so interpret mode stays
+    a validation tool unless asked for explicitly via ``sparse``.
+    """
+    if attn_impl == "auto":
+        attn_impl = ("sparse" if jax.default_backend() == "tpu"
+                     else "chunked")
+    if attn_impl == "sparse":
+        return sparse_attention_fn(block_size=block_size)
+    if attn_impl == "kernel":
+        return make_attention_fn(block_size=block_size, impl="kernel")
+    if attn_impl == "ref":
+        return make_attention_fn(block_size=block_size, impl="ref")
+    if attn_impl == "chunked":
+        return chunked_attention_fn(block_size=block_size)
+    raise ValueError(f"unknown attn_impl {attn_impl!r}; "
+                     f"expected one of {PREFILL_ATTN_IMPLS}")
 
 
 class AttnStats(NamedTuple):
@@ -50,8 +80,8 @@ def init_attention_layer(key: jax.Array, cfg: ModelConfig,
         cfg.resolved_head_dim, dtype)
 
 
-def _rope_qk(q, k, positions, cfg: ModelConfig):
-    """positions: (B, S) or (3, B, S) for M-RoPE."""
+def rope_qk(q, k, positions, cfg: ModelConfig):
+    """Rotate q/k by (M-)RoPE. positions: (B, S) or (3, B, S) for M-RoPE."""
     if cfg.vlm.enabled and positions.ndim == 3:
         rot = lambda x: common.apply_mrope(
             x, positions[:, :, None, :], cfg.rope_theta,
@@ -63,6 +93,10 @@ def _rope_qk(q, k, positions, cfg: ModelConfig):
     return rot(q), rot(k)
 
 
+# back-compat alias (callers should migrate to the public name)
+_rope_qk = rope_qk
+
+
 # --------------------------------------------------------------------------
 # Train (dense or SWA, differentiable, O(N) memory)
 # --------------------------------------------------------------------------
@@ -71,7 +105,7 @@ def attention_train(params, x: jnp.ndarray, cfg: ModelConfig,
                     positions: jnp.ndarray,
                     block_size: int = 128) -> jnp.ndarray:
     q, k, v = common.gqa_qkv(params, x)
-    q, k = _rope_qk(q, k, positions, cfg)
+    q, k = rope_qk(q, k, positions, cfg)
     kx = common.repeat_kv(k, cfg.gqa_groups)
     vx = common.repeat_kv(v, cfg.gqa_groups)
     n = x.shape[1]
@@ -97,11 +131,11 @@ def attention_prefill(
     sp: SharePrefill,
     sp_state,                           # batched PivotalState (or None)
     cluster_ids: Optional[jnp.ndarray],  # (H,) for this layer
-    attn_impl: str = "chunked",         # chunked | ref | kernel
+    attn_impl: str = "auto",            # auto | sparse | chunked | ref | kernel
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], object, AttnStats]:
     b, n, _ = x.shape
     q, k, v = common.gqa_qkv(params, x)
-    q, k = _rope_qk(q, k, positions, cfg)
+    q, k = rope_qk(q, k, positions, cfg)
 
     bs = sp.cfg.block_size if sp.cfg.enabled else 128
     bs = min(bs, n)
@@ -122,12 +156,7 @@ def attention_prefill(
         out = shard(out, "batch", "heads")
         return common.gqa_out(params, out), (k, v), sp_state, AttnStats.zero()
 
-    if attn_impl == "kernel":
-        attention_fn = make_attention_fn(block_size=bs, impl="kernel")
-    elif attn_impl == "ref":
-        attention_fn = make_attention_fn(block_size=bs, impl="ref")
-    else:
-        attention_fn = chunked_attention_fn(block_size=bs)
+    attention_fn = resolve_attention_fn(attn_impl, bs)
 
     if method == "share":
         out, new_state, lstats = sa.batched_share_prefill_attention_layer(
@@ -138,23 +167,23 @@ def attention_prefill(
                           lstats.num_vs, lstats.block_density)
         return common.gqa_out(params, out), (k, v), new_state, stats
 
-    # baseline policies: build masks, run the same sparse attention
-    kx = common.repeat_kv(k, cfg.gqa_groups)
-    vx = common.repeat_kv(v, cfg.gqa_groups)
+    # baseline policies: build masks (GQA-grouped — K is never repeated),
+    # run the same sparse attention on un-expanded K/V
     gamma = sp.cfg.gamma
     if method == "vertical_slash":
-        mask_fn = lambda qh, kh: baselines.minference_masks(
+        head_mask_fn = lambda qh, kh: baselines.minference_head_mask(
             qh, kh, gamma=gamma, block_size=bs)
     elif method == "flex":
-        mask_fn = lambda qh, kh: baselines.flexprefill_masks(
+        head_mask_fn = lambda qh, kh: baselines.flexprefill_head_mask(
             qh, kh, gamma=gamma, block_size=bs)
     else:
         raise ValueError(f"unknown prefill method {method!r}")
-    masks = jax.vmap(mask_fn)(q, kx)                    # (B, H, NB, NB)
+    masks = jax.vmap(lambda qs, ks: sa.gqa_head_vmap(head_mask_fn, qs, ks)
+                     )(q, k)                            # (B, H, NB, NB)
     masks = masks & causal_block_mask(nb)[None, None]
     if extra is not None:
         masks = masks & extra[None, None]
-    out, _ = jax.vmap(attention_fn)(q, kx, vx, masks)
+    out, _ = jax.vmap(attention_fn)(q, k, v, masks)
     out = shard(out, "batch", "heads")
     h = q.shape[1]
     stats = AttnStats(jnp.zeros(()), jnp.zeros(()),
@@ -184,7 +213,7 @@ def attention_decode(
     b, _, _ = x.shape
     s = cache_k.shape[2]
     q, k, v = common.gqa_qkv(params, x)
-    q, k = _rope_qk(q, k, positions, cfg)
+    q, k = rope_qk(q, k, positions, cfg)
 
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=2)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=2)

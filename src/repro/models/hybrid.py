@@ -150,7 +150,7 @@ def _attn_prefill_sub(layer, x, cfg, positions, sp, sp_state, ids, method,
 
 
 def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
-            method="share", attn_impl="chunked", positions=None,
+            method="share", attn_impl="auto", positions=None,
             embeds=None) -> PrefillResult:
     b, s = tokens.shape
     if positions is None:

@@ -19,9 +19,9 @@ from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
 from repro.core import share_attention as sa
 from repro.distributed.sharding import shard
-from repro.kernels.chunked import chunked_attention, chunked_attention_fn
+from repro.kernels.chunked import chunked_attention
 from repro.models import common
-from repro.models.attention import AttnStats
+from repro.models.attention import AttnStats, resolve_attention_fn
 
 
 def init_mla_layer(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32):
@@ -102,7 +102,7 @@ def mla_train(params, x, cfg: ModelConfig, positions,
 def mla_prefill(params, x, cfg: ModelConfig, positions, *,
                 method: str, sp: SharePrefill, sp_state,
                 cluster_ids: Optional[jnp.ndarray],
-                attn_impl: str = "chunked"):
+                attn_impl: str = "auto"):
     """Returns (y, cache=(c_kv, k_rope), new_state, stats)."""
     m = cfg.mla
     b, s, _ = x.shape
@@ -118,7 +118,7 @@ def mla_prefill(params, x, cfg: ModelConfig, positions, *,
     use_sparse = method == "share" and sp.applicable(s)
     if use_sparse:
         bs = min(sp.cfg.block_size, s)
-        attention_fn = chunked_attention_fn(block_size=bs)
+        attention_fn = resolve_attention_fn(attn_impl, bs)
         out, new_state, lstats = sa.batched_share_prefill_attention_layer(
             q, k, v, sp_state, cluster_ids, sp.cfg, attention_fn)
         stats = AttnStats(lstats.num_shared, lstats.num_dense,

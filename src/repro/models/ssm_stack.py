@@ -43,7 +43,7 @@ def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 
 def prefill(params, cfg: ModelConfig, tokens, sp, *, method="share",
-            attn_impl="chunked", positions=None, embeds=None):
+            attn_impl="auto", positions=None, embeds=None):
     from repro.models.attention import AttnStats
     from repro.models.transformer import PrefillResult
     x = embeds if embeds is not None else embed_tokens(params, cfg, tokens)

@@ -193,7 +193,7 @@ def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
             sp: SharePrefill, *, method: str = "share",
-            attn_impl: str = "chunked",
+            attn_impl: str = "auto",
             positions: Optional[jnp.ndarray] = None,
             embeds: Optional[jnp.ndarray] = None) -> PrefillResult:
     b, s = (embeds.shape[:2] if embeds is not None else tokens.shape)

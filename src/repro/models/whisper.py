@@ -135,7 +135,7 @@ def forward_train(params, cfg: ModelConfig, tokens, positions=None,
 
 
 def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
-            method="share", attn_impl="chunked", positions=None,
+            method="share", attn_impl="auto", positions=None,
             embeds=None) -> PrefillResult:
     b, s = tokens.shape
     if embeds is None:

@@ -43,7 +43,9 @@ class Request:
 class EngineConfig:
     max_batch: int = 8
     method: str = "share"               # prefill pattern policy
-    attn_impl: str = "chunked"
+    # "auto": sparse kernel on TPU, chunked elsewhere (resolved by
+    # repro.models.attention.resolve_attention_fn)
+    attn_impl: str = "auto"
     seq_buckets: tuple = (512, 2048, 8192, 32768)
     decode_extra: int = 128             # decode headroom beyond the prompt
     decode_sparse: bool = False         # decode-phase pattern sharing

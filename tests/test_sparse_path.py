@@ -1,0 +1,164 @@
+"""End-to-end sparse execution path: the default SharePrefill attention
+backend (`repro.kernels.sparse_attention_fn`) must be numerically equivalent
+to the dense chunked oracle — outputs AND scattered Ã — on GQA shapes with
+un-expanded (Hkv, N, D) K/V, across block densities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SharePrefillConfig
+from repro.core import pattern_dict as pdict
+from repro.core.api import SharePrefill
+from repro.core.patterns import causal_block_mask
+from repro.core.share_attention import (
+    batched_share_prefill_attention_layer,
+    gqa_head_vmap,
+    init_batched_state,
+    share_prefill_attention_layer,
+)
+from repro.kernels import sparse_attention_fn
+from repro.kernels.chunked import chunked_attention_fn
+
+KEY = jax.random.PRNGKey(11)
+H, HKV, N, D, BS = 4, 2, 256, 32, 64
+NB = N // BS
+
+
+def _qkv(h=H, hkv=HKV, n=N, d=D):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (h, n, d))
+    k = jax.random.normal(ks[1], (hkv, n, d))
+    v = jax.random.normal(ks[2], (hkv, n, d))
+    return q, k, v
+
+
+def _mask(density, h=H, nb=NB):
+    m = jax.random.bernoulli(jax.random.PRNGKey(int(density * 100)),
+                             density, (h, nb, nb))
+    m = m | jnp.eye(nb, dtype=bool)[None]
+    return m & causal_block_mask(nb)[None]
+
+
+@pytest.mark.parametrize("density", [0.1, 0.5, 1.0])
+def test_sparse_backend_matches_chunked(density):
+    """Acceptance: allclose on outputs and on scattered Ã at block densities
+    {0.1, 0.5, 1.0}, un-expanded K/V."""
+    q, k, v = _qkv()
+    masks = _mask(density)
+    o_s, a_s = sparse_attention_fn(block_size=BS)(q, k, v, masks)
+    o_c, a_c = chunked_attention_fn(block_size=BS)(q, k, v, masks)
+    np.testing.assert_allclose(np.asarray(o_s), np.asarray(o_c),
+                               atol=2e-5, rtol=2e-5)
+    fin = np.isfinite(np.asarray(a_c))
+    assert (fin == np.isfinite(np.asarray(a_s))).all()
+    np.testing.assert_allclose(np.asarray(a_s)[fin], np.asarray(a_c)[fin],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_layer_default_backend_is_sparse_and_matches_chunked():
+    """share_prefill_attention_layer with attention_fn=None runs the sparse
+    backend and matches an explicit chunked run bit-for-bit in semantics."""
+    cfg = SharePrefillConfig(block_size=BS, min_seq_blocks=2, tau=0.9,
+                             delta=0.99)
+    q, k, v = _qkv()
+    ids = jnp.asarray([0, 0, 1, 1])
+    st = pdict.init_pivotal_state(2, NB)
+    out_s, st_s, stats_s = share_prefill_attention_layer(
+        q, k, v, st, ids, cfg)                       # default → sparse
+    out_c, st_c, stats_c = share_prefill_attention_layer(
+        q, k, v, st, ids, cfg, chunked_attention_fn(block_size=BS))
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_c),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(float(stats_s.block_density),
+                               float(stats_c.block_density), atol=1e-6)
+    # the dictionary state built from the scattered Ã must agree too
+    np.testing.assert_allclose(np.asarray(st_s.reps), np.asarray(st_c.reps),
+                               atol=1e-4, rtol=1e-4)
+    assert (np.asarray(st_s.masks) == np.asarray(st_c.masks)).all()
+
+
+def test_batched_layer_unexpanded_kv():
+    """The batched wrapper takes (B, Hkv, N, D) K/V and the default sparse
+    backend under vmap."""
+    cfg = SharePrefillConfig(block_size=BS, min_seq_blocks=2, tau=0.9,
+                             delta=0.99)
+    b = 2
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, H, N, D))
+    k = jax.random.normal(ks[1], (b, HKV, N, D))
+    v = jax.random.normal(ks[2], (b, HKV, N, D))
+    ids = jnp.asarray([0, 0, 1, 1])
+    st = init_batched_state(b, 2, NB)
+    out, new_st, stats = batched_share_prefill_attention_layer(
+        q, k, v, st, ids, cfg)
+    assert out.shape == (b, H, N, D)
+    assert not np.isnan(np.asarray(out)).any()
+    out_c, _, _ = batched_share_prefill_attention_layer(
+        q, k, v, st, ids, cfg, chunked_attention_fn(block_size=BS))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_c),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_api_layer_attention_default_backend():
+    """SharePrefill.layer_attention with no attention_fn uses the sparse
+    backend on un-expanded K/V."""
+    cfg = SharePrefillConfig(block_size=BS, min_seq_blocks=2)
+    sp = SharePrefill.trivial(cfg, num_layers=1, num_heads=H)
+    b = 1
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, H, N, D))
+    k = jax.random.normal(ks[1], (b, HKV, N, D))
+    v = jax.random.normal(ks[2], (b, HKV, N, D))
+    st = sp.init_state(b, N)
+    out, new_st, stats = sp.layer_attention(0, q, k, v, st)
+    assert out.shape == (b, H, N, D)
+    assert not np.isnan(np.asarray(out)).any()
+
+
+def test_sparse_fn_chunked_fallback_on_misaligned_grid():
+    """A mask built at a different granularity routes to the chunked path."""
+    q, k, v = _qkv()
+    masks = _mask(0.5, nb=N // 32)                   # 32-wide grid, bs=64
+    fn = sparse_attention_fn(block_size=BS)
+    o, a = fn(q, k, v, masks)
+    o_c, a_c = chunked_attention_fn(block_size=32)(q, k, v, masks)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_c),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_head_vmap_matches_expanded():
+    """gqa_head_vmap(fn, q, k) == vmap(fn)(q, repeat(k))."""
+    q, k, _ = _qkv()
+    fn = lambda qh, kh: qh @ kh.T
+    got = gqa_head_vmap(fn, q, k)
+    kx = jnp.repeat(k, H // HKV, axis=0)
+    want = jax.vmap(fn)(q, kx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_width_cap_execution_matches_capped_mask():
+    """width=W through the kernel AND through the chunked fallback must both
+    equal the chunked oracle run on the explicitly W-capped mask."""
+    from repro.kernels import cap_block_mask
+
+    q, k, v = _qkv()
+    # kernel path: mask grid tiles N at the bound block size
+    masks = _mask(0.9)
+    o_k, a_k = sparse_attention_fn(block_size=BS, width=2)(q, k, v, masks)
+    m_cap = cap_block_mask(masks, 2)
+    o_r, a_r = chunked_attention_fn(block_size=BS)(q, k, v, m_cap)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    fin = np.isfinite(np.asarray(a_r))
+    assert (fin == np.isfinite(np.asarray(a_k))).all()
+    np.testing.assert_allclose(np.asarray(a_k)[fin], np.asarray(a_r)[fin],
+                               atol=1e-4, rtol=1e-4)
+    # fallback path: mask at a finer grid than the bound block size
+    masks32 = _mask(0.7, nb=N // 32)
+    o_f, _ = sparse_attention_fn(block_size=BS, width=3)(q, k, v, masks32)
+    o_fr, _ = chunked_attention_fn(block_size=32)(
+        q, k, v, cap_block_mask(masks32, 3))
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_fr),
+                               atol=2e-5, rtol=2e-5)
