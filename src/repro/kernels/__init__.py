@@ -2,6 +2,8 @@
 
   block_sparse_attn.py  pl.pallas_call + BlockSpec splash-style kernel
   strip.py              flash-style strip-score kernel (Algorithm-3 pass)
+  decode_attn.py        flash-decode kernels + DecodePlan block-table
+                        contract (batched block-skipping serving path)
   indices.py            mask ⇄ (indices, counts) staging + Ã scatter
   ops.py                jit'd wrappers (index staging, Ã scatter)
   ref.py                pure-jnp oracles the kernels are validated against
@@ -17,6 +19,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attn import (
+    DecodePlan,
+    flash_decode,
+    flash_decode_plan,
+    flash_decode_sparse,
+    flash_decode_sparse_batched,
+    resolve_decode_impl,
+)
 from repro.kernels.indices import (
     build_block_tables,
     cap_block_mask,
@@ -91,9 +101,11 @@ def sparse_attention_fn(*, block_size: int, causal: bool = True,
 
 
 __all__ = [
-    "block_sparse_attention", "build_block_tables", "cap_block_mask",
-    "compact_block_mask", "compute_strips", "expand_kv", "gqa_head_vmap",
-    "make_attention_fn", "scatter_block_stats", "sparse_attention_fn",
+    "DecodePlan", "block_sparse_attention", "build_block_tables",
+    "cap_block_mask", "compact_block_mask", "compute_strips", "expand_kv",
+    "flash_decode", "flash_decode_plan", "flash_decode_sparse",
+    "flash_decode_sparse_batched", "gqa_head_vmap", "make_attention_fn",
+    "resolve_decode_impl", "scatter_block_stats", "sparse_attention_fn",
     "strip_scores_pallas", "block_sparse_attention_ref",
     "decode_attention_ref", "dense_attention_ref",
 ]

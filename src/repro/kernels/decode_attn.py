@@ -1,26 +1,38 @@
-"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+"""Pallas TPU flash-decode kernels: query tokens vs a long KV cache.
 
 Decode is memory-bound (EXPERIMENTS.md §Roofline: every decode_32k /
-long_500k pair), so the kernel streams the grouped KV cache HBM→VMEM exactly
-once, keeps the GQA query block resident, and supports:
+long_500k pair), so these kernels stream the grouped KV cache HBM→VMEM at
+most once, keep the GQA query block resident, and support:
 
   * grouped-query attention without cache expansion (q reshaped to
     (Hkv, G, D); the cache is read once, not ×G);
-  * a per-(kv-head, group) token ``keep`` mask — the decode-phase pattern
-    sharing extension: masked-out cache blocks still stream on this simple
-    variant, but the block-skip variant below prunes whole kv blocks whose
-    keep-mask is empty via scalar-prefetched block tables (same splash
-    machinery as the prefill kernel);
+  * block-skipping via scalar-prefetched block tables — the decode-phase
+    pattern-sharing extension: kv blocks outside the keep-set are never
+    streamed (same splash machinery as the prefill kernel);
   * running-max online softmax over sequential kv blocks.
 
-Grid: ``(Hkv, S/bs)`` with the kv axis sequential.  Validated against
-:func:`repro.kernels.ref.decode_attention_ref` / the grouped einsum in
-interpret mode.
+Three entry points, from validation to production:
+
+  ``flash_decode``          single-sample (Hkv, S/bs) grid, dense streaming,
+                            per-head token ``keep`` mask (validation kernel).
+  ``flash_decode_sparse``   single-sample block-skipping variant; rebuilds
+                            its block table from the token mask on every call
+                            (validation of the skipping machinery only).
+  ``flash_decode_plan``     the serving path: batched (B, Hkv, W) grid
+                            consuming a prebuilt :class:`DecodePlan` layer
+                            slice — tables are built **once per batch**
+                            (``repro.serving.decode_plan``), not per decode
+                            step, and the backend auto-dispatches: compiled
+                            Pallas kernel on TPU, grouped-einsum fallback
+                            elsewhere (mirroring ``sparse_attention_fn``).
+
+Validated against :func:`repro.kernels.ref.decode_attention_ref` / the
+grouped einsum in interpret mode.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,54 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = float("-inf")
+
+DECODE_IMPLS = ("auto", "kernel", "einsum")
+
+
+class DecodePlan(NamedTuple):
+    """Splash block tables for sparse decode — the kernel-side contract.
+
+    Built once per served batch (``repro.serving.decode_plan``) from the
+    post-prefill pattern dictionary; leaves may carry a leading layer axis
+    (``(L, B, …)``, sliced per layer by the decode scan) or be a single
+    layer's slice (``(B, …)``).
+
+      indices:    (…, B, Hkv, W)  int32 — per-(batch, kv-head) active block
+                  ids, ascending, padded by repeating the last kept id (the
+                  Pallas pipeline elides the repeated DMA).
+      counts:     (…, B, Hkv)     int32 — kept entries per table row.
+      keep_heads: (…, B, Hkv, NB, G) bool — per-*query-head* block keep bits
+                  refining the union table within each GQA group (a visited
+                  block can still be masked for some of the group's heads).
+
+    Everything is O(B·Hkv·NB) per layer — the O(B·H·S) token keep-mask the
+    engine used to thread through every decode step is gone.
+    """
+
+    indices: jnp.ndarray
+    counts: jnp.ndarray
+    keep_heads: jnp.ndarray
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    """Backend-auto: compile the kernel on TPU, interpret elsewhere."""
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+def resolve_decode_impl(impl: str) -> str:
+    """Map a decode ``impl`` name to a concrete backend.
+
+    ``auto`` is the serving-safe policy: the compiled block-skipping kernel
+    on TPU, the grouped-einsum fallback elsewhere — jitting the Pallas
+    *interpreter* at serving cache lengths unrolls its grid into the HLO, so
+    interpret mode stays a validation tool unless asked for via ``kernel``.
+    """
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "einsum"
+    if impl not in DECODE_IMPLS:
+        raise ValueError(f"unknown decode impl {impl!r}; "
+                         f"expected one of {DECODE_IMPLS}")
+    return impl
 
 
 def _kernel(q_ref, k_ref, v_ref, mask_ref,      # VMEM tiles
@@ -78,7 +138,7 @@ def flash_decode(
     mask: jnp.ndarray,          # (H, S) bool — length ∧ window ∧ keep
     *,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Returns (H, Dv)."""
     h, d = q.shape
@@ -108,7 +168,7 @@ def flash_decode(
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
     )(qg, cache_k, cache_v, maskg)
     return out.reshape(h, dv)
 
@@ -161,11 +221,16 @@ def flash_decode_sparse(
     mask: jnp.ndarray,          # (H, S) bool — already includes keep-set
     *,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Block-skipping variant: kv blocks whose keep-mask is all-False for a
     kv-head group are never streamed (scalar-prefetched block tables — the
-    decode analogue of the prefill splash kernel)."""
+    decode analogue of the prefill splash kernel).
+
+    NOTE: rebuilds the block-table argsort from the token mask on every call
+    — fine for validation, wrong for serving.  The serving path is
+    :func:`flash_decode_plan`, which consumes tables built once per batch.
+    """
     h, d = q.shape
     hkv, s, dv = cache_v.shape
     g = h // hkv
@@ -211,6 +276,180 @@ def flash_decode_sparse(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((hkv, g, dv), q.dtype),
-        interpret=interpret,
+        interpret=_auto_interpret(interpret),
     )(indices, counts, qg, cache_k, cache_v, maskg)
     return out.reshape(h, dv)
+
+
+# --------------------------------------------------------------------------
+# Batched serving kernel: (B, Hkv, W) grid over prebuilt DecodePlan tables
+# --------------------------------------------------------------------------
+
+def _batched_kernel(idx_ref, cnt_ref,             # scalar prefetch (SMEM)
+                    q_ref, k_ref, v_ref, keep_ref, val_ref,   # VMEM tiles
+                    out_ref, acc_ref, m_ref, l_ref,
+                    *, scale: float, w_steps: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(w < cnt_ref[b, h])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (bs, D)
+        v = v_ref[0, 0].astype(jnp.float32)      # (bs, Dv)
+        keep = keep_ref[0, 0, 0]                 # (G,) per-head block keep
+        tok = val_ref[0]                         # (bs,) slot validity
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ok = keep[:, None] & tok[None, :]        # (G, bs)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe), 0.0)
+        p = jnp.where(ok, jnp.exp(s - safe), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, 1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(w == w_steps - 1)
+    def _finalize():
+        # kv-heads with an empty keep-set (counts == 0) emit zeros: l stays 0
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def flash_decode_sparse_batched(
+    q: jnp.ndarray,             # (B, H, D) one token per sequence
+    cache_k: jnp.ndarray,       # (B, Hkv, S, D)
+    cache_v: jnp.ndarray,       # (B, Hkv, S, Dv)
+    indices: jnp.ndarray,       # (B, Hkv, W) int32 block table
+    counts: jnp.ndarray,        # (B, Hkv) int32
+    keep_heads: jnp.ndarray,    # (B, Hkv, NB, G) bool per-head block keep
+    valid: jnp.ndarray,         # (B, S) bool slot validity (length ∧ ragged)
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched GQA block-skipping flash decode over prebuilt tables.
+
+    Grid ``(B, Hkv, W)`` with the W axis sequential; the block tables are
+    scalar-prefetched to SMEM so the K/V BlockSpec index_map skips
+    masked-out kv blocks — they are never streamed HBM→VMEM — and padded
+    steps repeat the previous block id (DMA elided).  The table argsort is
+    NOT rebuilt here: tables come from :func:`repro.serving.decode_plan.
+    build_decode_plan`, once per batch.
+
+    A kv-head whose table is empty (``counts == 0``) emits zeros for its
+    whole query group — the caller guarantees non-empty keep-sets (the plan
+    always keeps the dense recent tail).
+
+    Returns (B, H, Dv).
+    """
+    b, h, d = q.shape
+    _, hkv, s, dv = cache_v.shape
+    g = h // hkv
+    nb = keep_heads.shape[2]
+    block_kv = s // nb
+    w_steps = indices.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_batched_kernel, scale=scale, w_steps=w_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, w_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, w, idx, cnt: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, w, idx, cnt:
+                         (b_, h_, idx[b_, h_, w], 0)),
+            pl.BlockSpec((1, 1, block_kv, dv),
+                         lambda b_, h_, w, idx, cnt:
+                         (b_, h_, idx[b_, h_, w], 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, h_, w, idx, cnt:
+                         (b_, h_, idx[b_, h_, w], 0)),
+            pl.BlockSpec((1, block_kv),
+                         lambda b_, h_, w, idx, cnt: (b_, idx[b_, h_, w])),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, h_, w, idx, cnt: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        interpret=_auto_interpret(interpret),
+    )(indices, counts, qg, cache_k, cache_v, keep_heads, valid)
+    return out.reshape(b, h, dv)
+
+
+def decode_plan_einsum(
+    q: jnp.ndarray,             # (B, H, D)
+    cache_k: jnp.ndarray,       # (B, Hkv, S, D)
+    cache_v: jnp.ndarray,       # (B, Hkv, S, Dv)
+    keep_heads: jnp.ndarray,    # (B, Hkv, NB, G) bool
+    valid: jnp.ndarray,         # (B, S) bool
+) -> jnp.ndarray:
+    """Grouped-einsum fallback consuming the same DecodePlan semantics.
+
+    Contracts the full cache (no block skipping — CPU is a correctness
+    path), masking with the per-head block keep bits expanded to token
+    granularity *transiently, per layer* — nothing O(L·B·H·S) is ever
+    threaded between steps.  Rows with no visible key emit zeros, matching
+    the kernel's empty-table behavior.
+    """
+    b, h, d = q.shape
+    _, hkv, s, dv = cache_v.shape
+    g = h // hkv
+    nb = keep_heads.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    km = jnp.repeat(jnp.moveaxis(keep_heads, -1, -2), s // nb, axis=-1)
+    ok = km & valid[:, None, None, :]            # (B, Hkv, G, S)
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(ok, jnp.exp(logits - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bksd->bkgd",
+                     jnp.asarray(p / denom, cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    return jnp.asarray(out, q.dtype).reshape(b, h, dv)
+
+
+def flash_decode_plan(
+    q: jnp.ndarray,             # (B, H, D)
+    cache_k: jnp.ndarray,       # (B, Hkv, S, D)
+    cache_v: jnp.ndarray,       # (B, Hkv, S, Dv)
+    plan: DecodePlan,           # one layer's slice — (B, …) leaves
+    valid: jnp.ndarray,         # (B, S) bool
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Backend-auto sparse decode over a prebuilt plan (see
+    :func:`resolve_decode_impl`).  Returns (B, H, Dv)."""
+    impl = resolve_decode_impl(impl)
+    if impl == "kernel":
+        return flash_decode_sparse_batched(
+            q, cache_k, cache_v, plan.indices, plan.counts, plan.keep_heads,
+            valid, interpret=interpret)
+    return decode_plan_einsum(q, cache_k, cache_v, plan.keep_heads, valid)

@@ -37,6 +37,28 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 
 
+def attn_impl_parity(requested: str = "auto") -> dict:
+    """How ``requested`` resolves on this process's lowering backend vs the
+    TPU production target.
+
+    The dry-run lowers on forced host-CPU devices, where ``attn_impl="auto"``
+    resolves to the dense chunked path — so its memory/roofline analysis
+    describes a *different attention program* than the block-skipping sparse
+    Pallas kernel production TPUs run.  The record flags that divergence so
+    nobody reads a chunked-path roofline as the sparse kernel's.
+    """
+    from repro.models.attention import resolved_attn_impl
+    here = resolved_attn_impl(requested)
+    tpu = resolved_attn_impl(requested, backend="tpu")
+    return {
+        "requested": requested,
+        "lowering_backend": jax.default_backend(),
+        "resolved": here,
+        "tpu_resolved": tpu,
+        "divergent_from_tpu": here != tpu,
+    }
+
+
 def model_flops(arch: str, shape_name: str) -> float:
     """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = 1 token."""
     cfg = get_config(arch)
@@ -58,7 +80,8 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, *,
     mesh = make_production_mesh(multi_pod=multi)
     chips = mesh.devices.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-           "chips": chips, "method": method}
+           "chips": chips, "method": method,
+           "attn_impl": attn_impl_parity("auto")}
     t0 = time.time()
     try:
         bundle = build_step(arch, shape_name, mesh, method=method,
@@ -83,6 +106,8 @@ def run_pair(arch: str, shape_name: str, mesh_kind: str, *,
             rec["memory"] = {"error": str(e)}
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):     # older jax: one dict/device
+            cost = cost[0] if cost else {}
         flops = float(cost.get("flops", 0.0))
         bytes_acc = float(cost.get("bytes accessed", 0.0))
         coll = collective_bytes(compiled.as_text())
@@ -155,10 +180,15 @@ def main():
             n_fail += (not ok)
             if ok:
                 r = rec["roofline"]
+                ai = rec["attn_impl"]
+                div = (f" ATTN-DIVERGED({ai['resolved']}!="
+                       f"{ai['tpu_resolved']})"
+                       if ai["divergent_from_tpu"] else "")
                 print(f"OK   {arch:22s} {shape:12s} {mesh_kind:6s} "
                       f"compile={rec['compile_s']:6.1f}s "
                       f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
-                      f"coll={r['collective_s']:.3e}s dom={rec['dominant']}")
+                      f"coll={r['collective_s']:.3e}s dom={rec['dominant']}"
+                      f"{div}")
             else:
                 print(f"FAIL {arch:22s} {shape:12s} {mesh_kind:6s} "
                       f"{rec['error'][:120]}")

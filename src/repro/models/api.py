@@ -69,13 +69,16 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
         fwd = lambda p, tokens, positions=None, embeds=None: \
             transformer.forward_train(p, cfg, tokens, positions, embeds)
         pf = lambda p, tokens, sp, method="share", attn_impl="auto", \
-            positions=None, embeds=None: transformer.prefill(
+            attn_width=None, positions=None, embeds=None: \
+            transformer.prefill(
                 p, cfg, tokens, sp, method=method, attn_impl=attn_impl,
-                positions=positions, embeds=embeds)
+                attn_width=attn_width, positions=positions, embeds=embeds)
         dec = lambda p, token, cache, pos, positions=None, window=0, \
-            embeds=None, sparse_keep=None: transformer.decode_step(
+            embeds=None, plan=None, prompt_lens=None, prefill_len=0, \
+            decode_impl="auto": transformer.decode_step(
                 p, cfg, token, cache, pos, positions, window=window,
-                embeds=embeds, sparse_keep=sparse_keep)
+                embeds=embeds, plan=plan, prompt_lens=prompt_lens,
+                prefill_len=prefill_len, decode_impl=decode_impl)
         ic = lambda batch, cache_len, dtype=jnp.float32: \
             transformer.init_cache(cfg, batch, cache_len, dtype)
     else:

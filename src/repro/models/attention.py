@@ -30,6 +30,8 @@ from repro.core.patterns import (
 from repro.distributed.sharding import shard
 from repro.kernels import sparse_attention_fn
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
+from repro.kernels.decode_attn import DecodePlan, flash_decode_plan
+from repro.kernels.indices import cap_block_mask
 from repro.kernels.ops import make_attention_fn
 from repro.kernels.ref import decode_attention_ref
 from repro.models import common
@@ -38,27 +40,48 @@ PREFILL_METHODS = ("dense", "share", "vertical_slash", "flex")
 PREFILL_ATTN_IMPLS = ("auto", "sparse", "chunked", "ref", "kernel")
 
 
-def resolve_attention_fn(attn_impl: str, block_size: int) -> sa.AttentionFn:
+def resolved_attn_impl(attn_impl: str, backend: Optional[str] = None) -> str:
+    """Resolve ``auto`` to the concrete prefill backend for ``backend``
+    (default: this process's ``jax.default_backend()``).
+
+    The AOT dry-run uses the explicit ``backend`` form to compare what its
+    forced-host-CPU lowering ran against what production TPUs run.
+    """
+    if attn_impl == "auto":
+        backend = backend if backend is not None else jax.default_backend()
+        return "sparse" if backend == "tpu" else "chunked"
+    if attn_impl not in PREFILL_ATTN_IMPLS:
+        raise ValueError(f"unknown attn_impl {attn_impl!r}; "
+                         f"expected one of {PREFILL_ATTN_IMPLS}")
+    return attn_impl
+
+
+def resolve_attention_fn(attn_impl: str, block_size: int,
+                         width: Optional[int] = None) -> sa.AttentionFn:
     """Map an ``attn_impl`` name to an AttentionFn backend.
 
     ``auto`` is the serving-safe policy: the compiled sparse kernel on TPU,
     dense chunked elsewhere — jitting the Pallas *interpreter* at large
     sequence lengths unrolls its grid into the HLO, so interpret mode stays
     a validation tool unless asked for explicitly via ``sparse``.
+
+    ``width`` forwards the static per-row block budget W (see
+    :mod:`repro.kernels.indices`).  The sparse kernel consumes it natively
+    (table truncation); every other backend applies the numerically
+    identical boolean cap so capped results agree across backends.
     """
-    if attn_impl == "auto":
-        attn_impl = ("sparse" if jax.default_backend() == "tpu"
-                     else "chunked")
+    attn_impl = resolved_attn_impl(attn_impl)
     if attn_impl == "sparse":
-        return sparse_attention_fn(block_size=block_size)
+        return sparse_attention_fn(block_size=block_size, width=width)
     if attn_impl == "kernel":
-        return make_attention_fn(block_size=block_size, impl="kernel")
-    if attn_impl == "ref":
-        return make_attention_fn(block_size=block_size, impl="ref")
-    if attn_impl == "chunked":
-        return chunked_attention_fn(block_size=block_size)
-    raise ValueError(f"unknown attn_impl {attn_impl!r}; "
-                     f"expected one of {PREFILL_ATTN_IMPLS}")
+        base = make_attention_fn(block_size=block_size, impl="kernel")
+    elif attn_impl == "ref":
+        base = make_attention_fn(block_size=block_size, impl="ref")
+    else:                                   # "chunked"
+        base = chunked_attention_fn(block_size=block_size)
+    if width is None:
+        return base
+    return lambda q, k, v, masks: base(q, k, v, cap_block_mask(masks, width))
 
 
 class AttnStats(NamedTuple):
@@ -132,6 +155,7 @@ def attention_prefill(
     sp_state,                           # batched PivotalState (or None)
     cluster_ids: Optional[jnp.ndarray],  # (H,) for this layer
     attn_impl: str = "auto",            # auto | sparse | chunked | ref | kernel
+    attn_width: Optional[int] = None,   # static per-row block budget W
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray], object, AttnStats]:
     b, n, _ = x.shape
     q, k, v = common.gqa_qkv(params, x)
@@ -156,7 +180,7 @@ def attention_prefill(
         out = shard(out, "batch", "heads")
         return common.gqa_out(params, out), (k, v), sp_state, AttnStats.zero()
 
-    attention_fn = resolve_attention_fn(attn_impl, bs)
+    attention_fn = resolve_attention_fn(attn_impl, bs, width=attn_width)
 
     if method == "share":
         out, new_state, lstats = sa.batched_share_prefill_attention_layer(
@@ -207,9 +231,20 @@ def attention_decode(
     *,
     window: int = 0,
     sink: int = 0,
-    valid_mask: Optional[jnp.ndarray] = None,   # (S,) cache-slot validity
-    keep_mask: Optional[jnp.ndarray] = None,    # (B, H, S) sparse decode
+    valid_mask: Optional[jnp.ndarray] = None,   # (S,) or (B, S) slot validity
+    plan: Optional[DecodePlan] = None,  # one layer's sparse-decode tables
+    decode_impl: str = "auto",          # auto | kernel | einsum
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One decode step against the KV cache.
+
+    ``valid_mask`` carries per-request cache-slot validity (length ∧ ragged
+    right-pad); when None, every slot ≤ ``pos`` is visible.  ``plan``
+    enables decode-phase pattern sharing: the step consumes prebuilt
+    O(B·Hkv·NB) splash tables (built once per batch by
+    ``repro.serving.decode_plan``), dispatched by ``decode_impl`` — the
+    compiled block-skipping Pallas kernel on TPU, the grouped einsum
+    elsewhere.
+    """
     b, _, _ = x.shape
     s = cache_k.shape[2]
     q, k, v = common.gqa_qkv(params, x)
@@ -224,31 +259,38 @@ def attention_decode(
     cache_k = shard(cache_k, "batch", "kv_heads", "seq", "heads")
     cache_v = shard(cache_v, "batch", "kv_heads", "seq", "heads")
 
-    length_mask = valid_mask if valid_mask is not None \
-        else jnp.arange(s) <= pos
-    mask = length_mask
+    if valid_mask is None:
+        mask = jnp.broadcast_to(jnp.arange(s) <= pos, (b, s))
+    else:
+        mask = (valid_mask[None] if valid_mask.ndim == 1
+                else valid_mask)                 # (B, S)
     if window > 0:
         pos_idx = jnp.arange(s)
         mask = mask & (((pos_idx > pos - window) & (pos_idx <= pos))
-                       | (pos_idx < sink))
+                       | (pos_idx < sink))[None, :]
 
-    # GQA decode WITHOUT materializing the expanded cache (§Perf iter 3):
+    g = cfg.gqa_groups
+    hkv = cache_k.shape[1]
+    hd = q.shape[-1]
+
+    if plan is not None:
+        # decode-phase pattern sharing (beyond paper): stream only the
+        # keep-set's kv blocks through the batched flash-decode kernel
+        out = flash_decode_plan(q.squeeze(2), cache_k, cache_v, plan, mask,
+                                impl=decode_impl)
+        out = out[:, :, None, :]                  # (B, H, 1, hd)
+        return common.gqa_out(params, out), (cache_k, cache_v)
+
+    # Dense decode WITHOUT materializing the expanded cache (§Perf iter 3):
     # fold query heads into (kv_head, group) and contract against the
     # grouped cache directly — HBM traffic is the cache once, not ×groups —
     # and accumulate in f32 via preferred_element_type instead of casting
     # the cache (an f32 cache copy would be hoisted to full stacked shape).
-    g = cfg.gqa_groups
-    hkv = cache_k.shape[1]
-    hd = q.shape[-1]
     qg = q.squeeze(2).reshape(b, hkv, g, hd)
     scale = 1.0 / (hd ** 0.5)
     logits = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k,
                         preferred_element_type=jnp.float32) * scale
-    logits = jnp.where(mask[None, None, None, :], logits, -jnp.inf)
-    if keep_mask is not None:
-        # decode-phase pattern sharing (beyond paper): per-head kv keep-sets
-        km = keep_mask.reshape(b, hkv, g, s)
-        logits = jnp.where(km, logits, -jnp.inf)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", jnp.asarray(p, cache_v.dtype),
                      cache_v, preferred_element_type=jnp.float32)

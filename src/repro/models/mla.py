@@ -102,7 +102,8 @@ def mla_train(params, x, cfg: ModelConfig, positions,
 def mla_prefill(params, x, cfg: ModelConfig, positions, *,
                 method: str, sp: SharePrefill, sp_state,
                 cluster_ids: Optional[jnp.ndarray],
-                attn_impl: str = "auto"):
+                attn_impl: str = "auto",
+                attn_width: Optional[int] = None):
     """Returns (y, cache=(c_kv, k_rope), new_state, stats)."""
     m = cfg.mla
     b, s, _ = x.shape
@@ -118,7 +119,7 @@ def mla_prefill(params, x, cfg: ModelConfig, positions, *,
     use_sparse = method == "share" and sp.applicable(s)
     if use_sparse:
         bs = min(sp.cfg.block_size, s)
-        attention_fn = resolve_attention_fn(attn_impl, bs)
+        attention_fn = resolve_attention_fn(attn_impl, bs, width=attn_width)
         out, new_state, lstats = sa.batched_share_prefill_attention_layer(
             q, k, v, sp_state, cluster_ids, sp.cfg, attention_fn)
         stats = AttnStats(lstats.num_shared, lstats.num_dense,

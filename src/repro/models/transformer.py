@@ -124,16 +124,18 @@ def layer_train(layer, x, cfg: ModelConfig, positions, *, moe_ffn: bool):
 
 def layer_prefill(layer, x, cfg: ModelConfig, positions, sp: SharePrefill,
                   sp_state, cluster_ids, *, method: str, moe_ffn: bool,
-                  attn_impl: str):
+                  attn_impl: str, attn_width: Optional[int] = None):
     h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
     if _uses_mla(cfg):
         a, cache, sp_state, stats = mla.mla_prefill(
             layer["attn"], h, cfg, positions, method=method, sp=sp,
-            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl)
+            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl,
+            attn_width=attn_width)
     else:
         a, cache, sp_state, stats = attn.attention_prefill(
             layer["attn"], h, cfg, positions, method=method, sp=sp,
-            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl)
+            sp_state=sp_state, cluster_ids=cluster_ids, attn_impl=attn_impl,
+            attn_width=attn_width)
     x = x + a
     h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
     f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
@@ -141,7 +143,8 @@ def layer_prefill(layer, x, cfg: ModelConfig, positions, sp: SharePrefill,
 
 
 def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
-                 moe_ffn: bool, window: int = 0, keep_mask=None):
+                 moe_ffn: bool, window: int = 0, plan=None, valid=None,
+                 decode_impl: str = "auto"):
     window = window or cfg.sliding_window      # native SWA (Mixtral)
     h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
     if _uses_mla(cfg):
@@ -151,7 +154,8 @@ def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
     else:
         a, cache = attn.attention_decode(
             layer["attn"], h, cfg, cache[0], cache[1], pos, positions,
-            window=window, keep_mask=keep_mask)
+            window=window, valid_mask=valid, plan=plan,
+            decode_impl=decode_impl)
     x = x + a
     h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
     f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
@@ -194,6 +198,7 @@ def forward_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
 def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
             sp: SharePrefill, *, method: str = "share",
             attn_impl: str = "auto",
+            attn_width: Optional[int] = None,
             positions: Optional[jnp.ndarray] = None,
             embeds: Optional[jnp.ndarray] = None) -> PrefillResult:
     b, s = (embeds.shape[:2] if embeds is not None else tokens.shape)
@@ -213,7 +218,8 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
         ids = cluster_arr[i] if cluster_arr is not None else None
         x, cache, sp_state, _ = layer_prefill(
             params[f"prefix_{i}"], x, cfg, positions, sp, sp_state, ids,
-            method=method, moe_ffn=False, attn_impl=attn_impl)
+            method=method, moe_ffn=False, attn_impl=attn_impl,
+            attn_width=attn_width)
         prefix_caches.append(cache)
 
     def body(carry, xs):
@@ -221,7 +227,8 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
         layer, ids = xs
         x, cache, sp_state, stats = layer_prefill(
             layer, x, cfg, positions, sp, sp_state, ids,
-            method=method, moe_ffn=moe_ffn, attn_impl=attn_impl)
+            method=method, moe_ffn=moe_ffn, attn_impl=attn_impl,
+            attn_width=attn_width)
         return (x, sp_state), (cache, stats)
 
     n_stack = cfg.num_layers - n_prefix
@@ -236,18 +243,34 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
                          stats, sp_state)
 
 
+def _cache_seq_len(cache) -> int:
+    """Sequence-axis length of the KV cache pytree (dense GQA and MLA
+    layouts both keep it second-to-last)."""
+    if cache["prefix"]:
+        return cache["prefix"][0][0].shape[-2]
+    return cache["stack"][0].shape[-2]
+
+
 def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                 cache, pos: jnp.ndarray,
                 positions: Optional[jnp.ndarray] = None, *,
                 window: int = 0,
                 embeds: Optional[jnp.ndarray] = None,
-                sparse_keep: Optional[jnp.ndarray] = None,  # (L, B, H, S)
+                plan=None,                  # DecodePlan, (L, B, …) leaves
+                prompt_lens: Optional[jnp.ndarray] = None,   # (B,) int32
+                prefill_len: int = 0,
+                decode_impl: str = "auto",
                 ):
     """One decode step. token (B, 1) → logits (B, V), updated cache.
 
-    ``sparse_keep`` enables decode-phase pattern sharing (beyond paper):
-    per-layer/head token keep-masks derived from the prefill pattern
-    dictionary (repro.serving.sparse_decode)."""
+    ``plan`` enables decode-phase pattern sharing (beyond paper): prebuilt
+    O(L·B·Hkv·NB) splash block tables derived once per batch from the
+    prefill pattern dictionary (``repro.serving.decode_plan``); the scan
+    slices one layer's tables per step — no O(L·B·H·S) token mask is ever
+    materialized.  ``prompt_lens``/``prefill_len`` mark right-pad cache
+    slots (positions in [prompt_len, prefill_len)) invalid so padded K/V is
+    never attended (ignored by MLA layers, which keep the plain length
+    mask)."""
     b = (embeds.shape[0] if embeds is not None else token.shape[0])
     if positions is None:
         positions = jnp.broadcast_to(pos[None, None], (b, 1))
@@ -255,30 +278,38 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     moe_ffn = _uses_moe(cfg)
     n_prefix = num_prefix_layers(cfg)
 
+    valid = None
+    if prompt_lens is not None:
+        slots = jnp.arange(_cache_seq_len(cache))[None, :]
+        valid = ((slots <= pos)
+                 & ((slots < prompt_lens[:, None]) | (slots >= prefill_len)))
+
     new_prefix = []
     for i, c in enumerate(cache["prefix"]):
-        km = sparse_keep[i] if sparse_keep is not None else None
+        lp = (jax.tree.map(lambda a: a[i], plan)
+              if plan is not None else None)
         x, c = layer_decode(params[f"prefix_{i}"], x, cfg, c, pos, positions,
-                            moe_ffn=False, window=window, keep_mask=km)
+                            moe_ffn=False, window=window, plan=lp,
+                            valid=valid, decode_impl=decode_impl)
         new_prefix.append(c)
 
-    if sparse_keep is not None:
-        keep_xs = sparse_keep[n_prefix:]
+    if plan is not None:
+        plan_xs = jax.tree.map(lambda a: a[n_prefix:], plan)
 
         def body(x, xs):
-            layer, c, km = xs
+            layer, c, lp = xs
             x, c = layer_decode(layer, x, cfg, c, pos, positions,
-                                moe_ffn=moe_ffn, window=window,
-                                keep_mask=km)
+                                moe_ffn=moe_ffn, window=window, plan=lp,
+                                valid=valid, decode_impl=decode_impl)
             return x, c
 
         x, new_caches = jax.lax.scan(
-            body, x, (params["stack"], cache["stack"], keep_xs))
+            body, x, (params["stack"], cache["stack"], plan_xs))
     else:
         def body(x, xs):
             layer, c = xs
             x, c = layer_decode(layer, x, cfg, c, pos, positions,
-                                moe_ffn=moe_ffn, window=window)
+                                moe_ffn=moe_ffn, window=window, valid=valid)
             return x, c
 
         x, new_caches = jax.lax.scan(body, x,

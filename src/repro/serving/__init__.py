@@ -1,5 +1,12 @@
+from repro.serving.decode_plan import (
+    build_decode_plan,
+    plan_block_counts,
+    plan_traffic_fraction,
+)
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 from repro.serving.sampling import SamplingConfig, sample_token
+from repro.serving.width_policy import auto_width_cap
 
 __all__ = ["EngineConfig", "Request", "ServingEngine", "SamplingConfig",
-           "sample_token"]
+           "auto_width_cap", "build_decode_plan", "plan_block_counts",
+           "plan_traffic_fraction", "sample_token"]

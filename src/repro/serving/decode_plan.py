@@ -1,0 +1,91 @@
+"""Build-once splash tables for sparse decode (the DecodePlan).
+
+The engine used to thread an O(L·B·H·S) boolean token keep-mask through
+*every* jitted decode step and apply it as ``-inf`` masking on fully
+materialized logits — all the cache traffic, none of the savings.  This
+module replaces that with a :class:`repro.kernels.decode_attn.DecodePlan`:
+compact ``(indices, counts)`` block tables of size O(L·B·Hkv·NB) plus
+per-head block keep bits, built **once per served batch** right after
+prefill and reused unchanged by every decode step.
+
+Plan lifetime vs cache growth
+-----------------------------
+The tables are built over the *grown* cache length (prefill bucket +
+decode headroom).  Blocks past the prefill region — the "recent tail" that
+:meth:`ServingEngine.grow_cache` appends and decode steps write into — are
+kept densely for every head, so post-prefill tokens are always visible and
+the plan survives cache growth without rebuilds: advancing ``pos`` only
+changes the per-step slot-validity vector, never the tables.  A plan is
+invalidated only by a new prefill (new pattern dictionary) or by growing
+the cache beyond the headroom it was built for.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import SharePrefill
+from repro.kernels.decode_attn import DecodePlan
+from repro.kernels.indices import cap_block_mask, compact_block_mask
+from repro.serving.sparse_decode import decode_keep_blocks
+
+
+def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
+                      prefill_len: int, cache_len: int,
+                      width: Optional[int] = None) -> DecodePlan:
+    """Post-prefill pattern dictionary → decode block tables.
+
+    Args:
+      sp_state: batched PivotalState from PrefillResult (leaves (B, C, …)).
+      prefill_len: padded prompt length (the region patterns were built on).
+      cache_len: grown cache length the tables must cover; the blocks in
+        [prefill_len, cache_len) form the dense recent tail.
+      width: optional static per-table block budget W (most-recent blocks
+        win, same truncation as the prefill kernel's cap).
+
+    Returns a DecodePlan with (L, B, Hkv, …) leaves — the decode scan
+    slices one layer per step.
+    """
+    bs = sp.cfg.block_size
+    if prefill_len % bs or cache_len % bs:
+        raise ValueError(
+            f"prefill_len {prefill_len} / cache_len {cache_len} must be "
+            f"multiples of the pattern block size {bs}")
+    nbp = prefill_len // bs
+    nb = cache_len // bs
+    num_layers, num_heads = cfg.num_layers, cfg.num_heads
+    hkv = max(cfg.num_kv_heads, 1)
+    g = num_heads // hkv
+
+    keep = decode_keep_blocks(sp, sp_state, num_layers, num_heads)
+    batch = keep.shape[1]
+    kh = keep.reshape(num_layers, batch, hkv, g, nbp)
+    if nb > nbp:                         # dense recent tail absorbs growth
+        tail = jnp.ones((num_layers, batch, hkv, g, nb - nbp), bool)
+        kh = jnp.concatenate([kh, tail], axis=-1)
+    union = jnp.any(kh, axis=3)          # (L, B, Hkv, NB)
+    if width is not None:
+        union = cap_block_mask(union, width)
+        kh = kh & union[:, :, :, None, :]
+    indices, counts = compact_block_mask(union, width=width)
+    keep_heads = jnp.moveaxis(kh, 3, -1)        # (L, B, Hkv, NB, G)
+    return DecodePlan(indices=indices, counts=counts, keep_heads=keep_heads)
+
+
+def plan_traffic_fraction(plan: DecodePlan) -> float:
+    """Modeled KV-cache read fraction vs dense decode: the fraction of kv
+    blocks the kernel actually streams (decode is memory-bound, so this is
+    the memory-term multiplier)."""
+    nb = plan.keep_heads.shape[-2]
+    return float(jnp.mean(plan.counts.astype(jnp.float32)) / nb)
+
+
+def plan_block_counts(plan: DecodePlan) -> Tuple[int, int]:
+    """(total, streamed) kv-block counts per decode step across all
+    (layer, batch, kv-head) table rows."""
+    nb = plan.keep_heads.shape[-2]
+    total = int(plan.counts.size) * nb
+    streamed = int(jnp.sum(plan.counts))
+    return total, streamed

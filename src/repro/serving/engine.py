@@ -1,13 +1,20 @@
 """Serving engine: batched long-context inference with SharePrefill.
 
-The engine mirrors the paper's deployment: **sparse prefill** (the paper's
-contribution) followed by **dense decode** (§6.1: "all the baseline methods
-employ sparse computation during prefilling and transition to dense
-computation during the decoding phase").
+The engine mirrors the paper's deployment — **sparse prefill** (the paper's
+contribution) followed by decode — and goes beyond it: with
+``decode_sparse=True`` the decode phase reuses the prefill pattern
+dictionary through a :class:`~repro.kernels.decode_attn.DecodePlan` built
+**once per batch** (``repro.serving.decode_plan``), so every decode step
+streams only the keep-set's kv blocks (paper §8 future work; decode is
+memory-bound per EXPERIMENTS.md §Roofline).
 
 Requests are padded to a block multiple, batched up to ``max_batch``, and
 served by two jitted programs (prefill_step, decode_step) shared across
-request shapes via bucketing.
+request shapes via bucketing.  For the GQA transformer families,
+per-request prompt lengths are threaded into decode so right-pad K/V slots
+are never attended (MLA latent caches and the non-transformer families keep
+the plain length mask), and sampling honours each request's own
+:class:`SamplingConfig`.
 """
 from __future__ import annotations
 
@@ -22,7 +29,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
 from repro.models.api import Model
+from repro.serving import decode_plan as dplan
 from repro.serving.sampling import SamplingConfig, sample_token
+from repro.serving.width_policy import auto_width_cap
 
 
 @dataclasses.dataclass
@@ -50,6 +59,20 @@ class EngineConfig:
     decode_extra: int = 128             # decode headroom beyond the prompt
     decode_sparse: bool = False         # decode-phase pattern sharing
                                         # (beyond-paper; needs method=share)
+    # "auto": compiled flash-decode kernel on TPU, grouped einsum elsewhere
+    # (resolved by repro.kernels.decode_attn.resolve_decode_impl)
+    decode_impl: str = "auto"
+    # static per-row block budget W for the sparse prefill kernel
+    # (transformer families only; ignored for ssm/hybrid/encdec):
+    #   width_policy="off"  → prefill_width (None = uncapped)
+    #   width_policy="auto" → density-percentile heuristic over the block
+    #     densities observed on earlier batches of the same bucket
+    #     (repro.serving.width_policy); first batch runs uncapped, then the
+    #     cap freezes per bucket (a drifting W would recompile per batch).
+    prefill_width: Optional[int] = None
+    width_policy: str = "off"           # "off" | "auto"
+    width_percentile: float = 95.0
+    width_safety: float = 1.25
 
 
 class ServingEngine:
@@ -61,6 +84,8 @@ class ServingEngine:
         self.ecfg = ecfg
         self._prefill_cache: Dict[Any, Callable] = {}
         self._decode_cache: Dict[Any, Callable] = {}
+        self._density_obs: Dict[int, List[float]] = {}
+        self._width_frozen: Dict[int, Optional[int]] = {}
 
     # -- compiled-program management ------------------------------------
     def _bucket(self, n: int) -> int:
@@ -69,25 +94,75 @@ class ServingEngine:
                 return b
         return self.ecfg.seq_buckets[-1]
 
-    def _prefill_fn(self, batch: int, seq: int):
-        key = (batch, seq)
+    def _supports_prefill_width(self) -> bool:
+        """Only the transformer-family prefill lambdas accept attn_width."""
+        return self.model.cfg.family in ("dense", "vlm", "moe")
+
+    def _width_cap(self, seq: int) -> Optional[int]:
+        """Resolve the sparse-prefill block budget W for this bucket.
+
+        Under the auto policy the cap is resolved once per bucket (from the
+        densities observed up to that point) and then frozen — a drifting W
+        would recompile the prefill program on every oscillation.  A cap of
+        NB is uncapped in disguise; it resolves to None so no redundant
+        capped program is compiled.
+        """
+        if not self._supports_prefill_width():
+            return None
+        if self.ecfg.width_policy != "auto":
+            return self.ecfg.prefill_width
+        if seq in self._width_frozen:
+            return self._width_frozen[seq]
+        obs = self._density_obs.get(seq)
+        if not obs:
+            # genuinely uncapped warmup — a prefill_width cap here would
+            # bias the density observations the heuristic is about to use
+            return None
+        nb = max(seq // max(self.sp.cfg.block_size, 1), 1)
+        w = auto_width_cap(obs, nb,
+                           percentile=self.ecfg.width_percentile,
+                           safety=self.ecfg.width_safety)
+        self._width_frozen[seq] = None if w >= nb else w
+        return self._width_frozen[seq]
+
+    def _prefill_fn(self, batch: int, seq: int, width: Optional[int] = None):
+        key = (batch, seq, width)
         if key not in self._prefill_cache:
+            kwargs = {} if width is None else {"attn_width": width}
+
             def fn(params, tokens):
                 return self.model.prefill(
                     params, tokens, self.sp, method=self.ecfg.method,
-                    attn_impl=self.ecfg.attn_impl)
+                    attn_impl=self.ecfg.attn_impl, **kwargs)
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
-    def _decode_fn(self, batch: int, cache_len: int, sparse: bool = False):
-        key = (batch, cache_len, sparse)
+    def _decode_fn(self, batch: int, seq: int, cache_len: int,
+                   sparse: bool = False):
+        # only the non-MLA transformer families consume per-request length
+        # masks / decode plans; MLA's latent-cache decode and the other
+        # families keep the plain length-mask signature (pads attended —
+        # the remaining documented simplification for those caches)
+        thread_lens = (self.model.cfg.family in ("dense", "vlm", "moe")
+                       and not self.model.cfg.mla.enabled)
+        key = (batch, seq, cache_len, sparse, thread_lens)
         if key not in self._decode_cache:
             if sparse:
-                def fn(params, token, cache, pos, keep):
-                    return self.model.decode(params, token, cache, pos,
-                                             sparse_keep=keep)
+                # the jitted step consumes the prebuilt DecodePlan tables —
+                # O(L·B·Hkv·NB) — never a token-level keep mask
+                def fn(params, token, cache, pos, plens, plan):
+                    return self.model.decode(
+                        params, token, cache, pos, plan=plan,
+                        prompt_lens=plens, prefill_len=seq,
+                        decode_impl=self.ecfg.decode_impl)
+            elif thread_lens:
+                def fn(params, token, cache, pos, plens):
+                    return self.model.decode(
+                        params, token, cache, pos,
+                        prompt_lens=plens, prefill_len=seq)
             else:
-                def fn(params, token, cache, pos):
+                def fn(params, token, cache, pos, plens):
+                    del plens
                     return self.model.decode(params, token, cache, pos)
             self._decode_cache[key] = jax.jit(fn)
         return self._decode_cache[key]
@@ -106,34 +181,65 @@ class ServingEngine:
 
     @staticmethod
     def grow_cache(cache, old_len: int, extra: int):
-        """Grow KV caches by ``extra`` zero slots: every array axis whose
-        size equals ``old_len`` is treated as the sequence axis (dense KV,
-        MLA latent, and whisper self-attn caches all satisfy this; SSM /
-        ring-buffer states have no such axis and pass through)."""
+        """Grow KV caches by ``extra`` zero slots: every non-trailing array
+        axis whose size equals ``old_len`` is treated as the sequence axis
+        (dense KV, MLA latent, and whisper self-attn caches all keep the
+        sequence axis before the feature axis).  The trailing axis is never
+        grown — it is always a feature/channel dim, and e.g. the RG-LRU
+        conv state's channel width can collide with the cache length.  SSM /
+        ring-buffer states have no matching axis and pass through."""
         def grow(x):
             if not hasattr(x, "ndim"):
                 return x
-            pads = [(0, extra if s == old_len else 0) for s in x.shape]
+            pads = [(0, extra if (s == old_len and i < x.ndim - 1) else 0)
+                    for i, s in enumerate(x.shape)]
             if not any(p[1] for p in pads):
                 return x
             return jnp.pad(x, pads)
         return jax.tree.map(grow, cache)
 
+    def _supports_sparse_decode(self) -> bool:
+        cfg = self.model.cfg
+        return (cfg.family in ("dense", "vlm", "moe")
+                and not cfg.mla.enabled)
+
+    def _sample_batch(self, key: jax.Array, logits: jnp.ndarray,
+                      grp: List[Request]) -> np.ndarray:
+        """Sample one token per request, honouring each request's own
+        SamplingConfig (rows sharing a config are sampled together)."""
+        by_cfg: Dict[SamplingConfig, List[int]] = {}
+        for i, r in enumerate(grp):
+            by_cfg.setdefault(r.sampling, []).append(i)
+        toks = np.zeros((len(grp),), np.int32)
+        subkeys = jax.random.split(key, len(by_cfg))
+        for (scfg, rows), sub in zip(sorted(by_cfg.items(),
+                                            key=lambda kv: kv[1][0]),
+                                     subkeys):
+            t = sample_token(sub, logits[np.asarray(rows)], scfg)
+            toks[np.asarray(rows)] = np.asarray(t)
+        return toks
+
     def _serve_batch(self, grp: List[Request], seq: int, seed: int):
         """Prefill the padded batch, then decode autoregressively.
 
-        Prompts are left-aligned / right-padded; pad K/V entries remain
-        visible to decode (documented simplification — per-request length
-        masks would be threaded through decode_attention in a production
-        deployment)."""
+        Prompts are left-aligned / right-padded; for the GQA transformer
+        families, per-request prompt lengths are threaded into every decode
+        step as a slot-validity mask, so pad K/V entries are never attended
+        (remaining simplifications: MLA / non-transformer caches still
+        attend pads, prefill itself runs over the padded batch, and the
+        first sampled token comes from the last *padded* position's
+        logits)."""
         b = len(grp)
         toks = np.zeros((b, seq), np.int32)
         for i, r in enumerate(grp):
             p = r.prompt[-seq:]
             toks[i, : len(p)] = p
+        plens = jnp.asarray([min(len(r.prompt), seq) for r in grp],
+                            jnp.int32)
 
+        width = self._width_cap(seq)
         t0 = time.time()
-        prefill = self._prefill_fn(b, seq)
+        prefill = self._prefill_fn(b, seq, width)
         result = prefill(self.params, jnp.asarray(toks))
         jax.block_until_ready(result.last_logits)
         prefill_s = time.time() - t0
@@ -143,48 +249,59 @@ class ServingEngine:
             "num_dense": float(result.stats.num_dense),
             "num_vs": float(result.stats.num_vs),
             "block_density": float(result.stats.block_density),
+            "prefill_width_cap": 0 if width is None else int(width),
         }
+        if self.ecfg.width_policy == "auto":
+            self._density_obs.setdefault(seq, []).append(
+                stats["block_density"])
 
         max_new = max(r.max_new_tokens for r in grp)
         key = jax.random.PRNGKey(seed)
         extra = max(max_new, self.ecfg.decode_extra)
+        # decode headroom stays a block multiple so the sparse-decode block
+        # tables tile the grown cache exactly
+        blk = max(self.sp.cfg.block_size, 1)
+        extra = ((extra + blk - 1) // blk) * blk
         cache = self.grow_cache(result.cache, seq, extra)
 
-        # decode-phase pattern sharing (beyond paper): turn the prefill
-        # pattern dictionary into per-head kv keep-masks
+        # decode-phase pattern sharing (beyond paper): compile the prefill
+        # pattern dictionary into block tables ONCE for the whole batch —
+        # every decode step reuses them (see repro.serving.decode_plan)
         use_sparse = (self.ecfg.decode_sparse
                       and self.ecfg.method == "share"
-                      and result.sp_state is not None)
-        keep_tokens = None
+                      and result.sp_state is not None
+                      and self._supports_sparse_decode())
+        plan = None
         if use_sparse:
-            from repro.serving.sparse_decode import (
-                decode_keep_blocks, decode_traffic_fraction,
-                keep_blocks_to_token_mask)
-            cfg = self.model.cfg
-            keep = decode_keep_blocks(self.sp, result.sp_state,
-                                      cfg.num_layers, cfg.num_heads)
-            keep_tokens = keep_blocks_to_token_mask(
-                keep, self.sp.cfg.block_size, seq + extra, seq)
+            plan = dplan.build_decode_plan(
+                self.sp, result.sp_state, self.model.cfg,
+                prefill_len=seq, cache_len=seq + extra)
+            total, streamed = dplan.plan_block_counts(plan)
             stats["decode_traffic_fraction"] = \
-                decode_traffic_fraction(keep)
+                dplan.plan_traffic_fraction(plan)
+            stats["decode_blocks_total"] = float(total)
+            stats["decode_blocks_computed"] = float(streamed)
+            stats["decode_blocks_skipped"] = float(total - streamed)
+            stats["decode_cache_len"] = float(seq + extra)
 
-        decode = self._decode_fn(b, seq + extra, use_sparse)
+        decode = self._decode_fn(b, seq, seq + extra, use_sparse)
         logits = result.last_logits
         outs = [[] for _ in range(b)]
         t1 = time.time()
         for t in range(max_new):
             key, sub = jax.random.split(key)
-            tok = sample_token(sub, logits, grp[0].sampling)
+            tok = self._sample_batch(sub, logits, grp)
             for i in range(b):
                 outs[i].append(int(tok[i]))
             if t == max_new - 1:
                 break
+            tok_j = jnp.asarray(tok)[:, None]
             if use_sparse:
-                logits, cache = decode(self.params, tok[:, None], cache,
-                                       jnp.int32(seq + t), keep_tokens)
+                logits, cache = decode(self.params, tok_j, cache,
+                                       jnp.int32(seq + t), plens, plan)
             else:
-                logits, cache = decode(self.params, tok[:, None], cache,
-                                       jnp.int32(seq + t))
+                logits, cache = decode(self.params, tok_j, cache,
+                                       jnp.int32(seq + t), plens)
         decode_s = time.time() - t1
 
         for i, r in enumerate(grp):

@@ -9,6 +9,21 @@ cutting cache traffic by the block density.
 
 Heads without a valid pivot (noise clusters / excluded sparse heads) decode
 densely — safe fallback, same spirit as Algorithm 4.
+
+Decode path
+-----------
+:func:`decode_keep_blocks` (here) extracts per-head kv-block keep-sets from
+the post-prefill dictionary; :func:`repro.serving.decode_plan.
+build_decode_plan` compacts them **once per served batch** into the
+``(indices, counts)`` splash tables the batched flash-decode kernel streams
+through (``repro.kernels.decode_attn.flash_decode_plan``).  Plan lifetime:
+the tables cover the grown cache up front — blocks past the prefill region
+are a dense "recent tail" every head keeps — so the plan survives
+``ServingEngine.grow_cache`` and every subsequent decode step without
+rebuilds; only a new prefill (or growth past the planned headroom)
+invalidates it.  :func:`keep_blocks_to_token_mask` is the legacy token-mask
+expansion, retained for analysis/tests only — the engine no longer threads
+an O(L·B·H·S) token mask through decode steps.
 """
 from __future__ import annotations
 

@@ -1,0 +1,42 @@
+"""Width-cap auto-policy: pick the sparse kernel's static block budget W.
+
+``sparse_attention_fn(width=W)`` bounds the Pallas kernel's sequential grid
+axis to W steps per (head, q-block) row — a latency/VMEM knob — but the
+seed left W manual (ROADMAP: "nothing picks W automatically").  This module
+closes that loop with a density-percentile heuristic over profiling stats:
+serve traffic uncapped first, observe per-batch block densities, then cap
+at the percentile density (× a safety factor) so only pathological rows are
+truncated.  The cap always keeps each row's most-recent blocks (see
+:mod:`repro.kernels.indices`), preserving the causal local band.
+
+Wired into serving via ``EngineConfig(width_policy="auto")``: the engine
+records the density of every prefill it runs and re-resolves W per bucket
+before the next batch compiles.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def auto_width_cap(densities: Sequence[float], nb: int, *,
+                   percentile: float = 95.0,
+                   safety: float = 1.25) -> int:
+    """Pick W from observed block densities.
+
+    Args:
+      densities: per-batch mean block densities observed during profiling /
+        earlier serving (fractions in [0, 1]).
+      nb: number of kv block columns at the target sequence length.
+      percentile: density percentile to cover exactly.
+      safety: headroom multiplier on the percentile density (row populations
+        vary around the mean density; >1 keeps truncation rare).
+
+    Returns W clamped to [1, nb].
+    """
+    if not len(densities):
+        raise ValueError("auto_width_cap needs at least one density sample")
+    d = float(np.percentile(np.asarray(densities, np.float64), percentile))
+    w = int(np.ceil(d * nb * safety))
+    return max(1, min(w, nb))

