@@ -8,15 +8,29 @@ Three latency views (this container is CPU-only, TPU is the target):
   * **measured CPU wall-clock** of the jitted dense-chunked prefill
     (relative ordering only);
   * **measured CPU wall-clock of the sparse execution path** — the same
-    prefill routed through ``attn_impl="sparse"``, i.e. the Pallas
-    block-skipping kernel in interpret mode.  On CPU the interpreter adds
-    per-step overhead, so the density column (blocks actually skipped)
-    remains the speedup proxy; on TPU the same program skips those blocks'
-    MXU work and DMA.
+    prefill routed through ``attn_impl="sparse"``, i.e. the batch-native
+    Pallas block-skipping kernel in interpret mode.  On CPU the interpreter
+    adds per-step overhead, so the density and grid-step columns (blocks /
+    steps actually skipped) remain the speedup proxies; on TPU the same
+    program skips those blocks' MXU work and DMA.
 
 ``run()`` also emits the ``BENCH_prefill.json`` trajectory artifact at the
-repo root: per context length, tokens/s for dense-chunked vs sparse-kernel
-prefill at matched density, plus total/skipped block counts.
+repo root.  Per context length it records, beyond tokens/s and block
+counts:
+
+  * the **count-aware width** W resolved from the traced run's observed
+    per-row kept-block populations
+    (:func:`repro.serving.width_policy.population_width_cap` at the
+    recorded percentile/safety) and the fraction of rows it truncates;
+  * the **grid_steps counter** — sequential kernel steps per (head, layer)
+    under the ragged causal schedule at W
+    (:func:`repro.kernels.ragged_grid_steps`) vs the uniform ``NBq·NBkv``
+    rectangle the old kernel issued — the count-aware grid's win,
+    attributable independently of CPU-interpreter noise;
+  * a **phase breakdown** of the sparse path on the traced layer inputs:
+    strip pass (Algorithm 3), splash index build, Pallas kernel, and Ã
+    scatter, each timed separately;
+  * the CPU-interpret caveat, recorded in the artifact itself.
 
 CLI: ``python -m benchmarks.bench_latency [--method share]`` restricts the
 table to one method and prints a blocks-skipped summary.
@@ -33,7 +47,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.profile import run_prefill_traced
+from repro.kernels import (
+    block_sparse_attention_batched,
+    compact_block_mask,
+    compute_strips,
+    ragged_grid_steps,
+    ragged_schedule,
+    scatter_schedule_stats,
+)
 from repro.launch.mesh import PEAK_FLOPS_BF16
+from repro.serving.width_policy import population_width_cap
 from benchmarks.common import (
     BLOCK,
     METHODS,
@@ -45,6 +68,22 @@ from benchmarks.common import (
 
 LENGTHS = (512, 1024, 2048)
 REPEATS = 2
+# the paper evaluates on long-context retrieval tasks and the offline
+# clustering artifact is built on a retrieval sample (paper §5.2) — the
+# latency prompts come from the same distribution
+TASK = "retrieval"
+# count-aware W for the artifact: cover the 85th-percentile row population
+# exactly — an explicit latency knob; rows beyond it are truncated to their
+# W most-recent blocks and the truncated fraction is recorded alongside
+WIDTH_PERCENTILE = 85.0
+WIDTH_SAFETY = 1.0
+
+CPU_INTERPRET_CAVEAT = (
+    "cpu_wall_* columns run the Pallas kernel through the interpreter on "
+    "CPU: per-step Python/XLA dispatch dominates, so absolute sparse "
+    "wall-clock is NOT the TPU story. grid_steps / blocks_skipped are the "
+    "hardware-relevant counters; on TPU each skipped step is elided MXU "
+    "work and DMA.")
 
 ARTIFACT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_prefill.json")
@@ -67,12 +106,41 @@ def _block_budget(cfg, seq: int, density: float) -> dict:
             "blocks_skipped": total - computed}
 
 
-def _timed(fn, *args) -> float:
-    fn(*args).block_until_ready()                 # compile + warmup
+def _timed(fn, *args):
+    """(mean seconds over REPEATS, first-call result)."""
+    first = jax.block_until_ready(fn(*args))      # compile + warmup
     t0 = time.time()
     for _ in range(REPEATS):
-        fn(*args).block_until_ready()
-    return (time.time() - t0) / REPEATS
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / REPEATS, first
+
+
+def _phase_breakdown(tr, width: int, nb: int) -> dict:
+    """Time the sparse path's phases on the traced per-layer inputs:
+    strip pass / index build / kernel / Ã scatter (summed over layers)."""
+    phases = {"strip_s": 0.0, "index_build_s": 0.0, "kernel_s": 0.0,
+              "stats_scatter_s": 0.0}
+    strip_fn = jax.jit(lambda q, k: compute_strips(q, k, block_size=BLOCK,
+                                                   impl="auto"))
+    index_fn = jax.jit(lambda m: compact_block_mask(m, width=width))
+    kernel_fn = jax.jit(lambda q, k, v, idx, cnt:
+                        block_sparse_attention_batched(
+                            q, k, v, idx, cnt, block_size=BLOCK,
+                            interpret=True))
+    row_map, slot_map = ragged_schedule(nb, nb, width=width)
+    scatter_fn = jax.jit(lambda s, i: scatter_schedule_stats(
+        s, i, row_map, slot_map, nb))
+    for (q, k, v), mask in zip(tr.qkv, tr.masks):
+        qj, kj, vj = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+        mj = jnp.asarray(mask)[None]                       # (1, H, NB, NB)
+        phases["strip_s"] += _timed(strip_fn, qj, kj)[0]
+        dt, (idx, cnt) = _timed(index_fn, mj)
+        phases["index_build_s"] += dt
+        dt, (_, stats) = _timed(kernel_fn, qj[None], kj[None], vj[None],
+                                idx, cnt)
+        phases["kernel_s"] += dt
+        phases["stats_scatter_s"] += _timed(scatter_fn, stats, idx)[0]
+    return phases
 
 
 def run(methods=METHODS) -> dict:
@@ -82,11 +150,14 @@ def run(methods=METHODS) -> dict:
     table = {}
     trajectory = []
     for seq in LENGTHS:
-        toks = jnp.asarray(prompt_for("lm", seq, 50)[None])
+        toks = jnp.asarray(prompt_for(TASK, seq, 50)[None])
+        nb = seq // BLOCK
         table[seq] = {}
         for m in methods:
-            # density from the traced run
-            tr = run_prefill_traced(params, cfg, toks, sp, method=m)
+            # density + observed row populations from the traced run
+            want = m == "share"
+            tr = run_prefill_traced(params, cfg, toks, sp, method=m,
+                                    want_masks=want, want_qkv=want)
             density = float(np.mean([r["block_density"]
                                      for r in tr.per_layer]))
             # wall-clock of the jitted prefill: dense-chunked vs sparse path
@@ -96,7 +167,7 @@ def run(methods=METHODS) -> dict:
             for impl in impls:
                 fn = jax.jit(lambda p, t, impl=impl, m=m: model.prefill(
                     p, t, sp, method=m, attn_impl=impl).last_logits)
-                wall[impl] = _timed(fn, params, toks)
+                wall[impl] = _timed(fn, params, toks)[0]
             wall.setdefault("sparse", wall["chunked"])
 
             fl = attention_flops(cfg, seq)
@@ -110,25 +181,51 @@ def run(methods=METHODS) -> dict:
                 **budget,
             }
             table[seq][METHOD_LABELS[m]] = row
-            if m == "share":
-                trajectory.append({
-                    "seq": seq,
-                    "block_size": BLOCK,
-                    "block_density": density,
-                    "tokens_per_s_chunked": seq / wall["chunked"],
-                    "tokens_per_s_sparse": seq / wall["sparse"],
-                    **budget,
-                })
+            if m != "share":
+                continue
+
+            # -- count-aware width + grid-step accounting -----------------
+            pops = np.concatenate([mk.sum(-1).ravel() for mk in tr.masks])
+            width = population_width_cap(pops, nb,
+                                         percentile=WIDTH_PERCENTILE,
+                                         safety=WIDTH_SAFETY)
+            grid_steps = ragged_grid_steps(nb, nb, width=width)
+            grid_uniform = nb * nb
+            fn_w = jax.jit(lambda p, t: model.prefill(
+                p, t, sp, method="share", attn_impl="sparse",
+                attn_width=width).last_logits)
+            wall_w = _timed(fn_w, params, toks)[0]
+            trajectory.append({
+                "seq": seq,
+                "block_size": BLOCK,
+                "block_density": density,
+                "tokens_per_s_chunked": seq / wall["chunked"],
+                "tokens_per_s_sparse": seq / wall["sparse"],
+                "tokens_per_s_sparse_count_aware": seq / wall_w,
+                "width_cap": int(width),
+                "width_percentile": WIDTH_PERCENTILE,
+                "width_safety": WIDTH_SAFETY,
+                "max_row_pop": int(pops.max()),
+                "truncated_row_fraction": float((pops > width).mean()),
+                "grid_steps_per_head": grid_steps,
+                "grid_steps_uniform_per_head": grid_uniform,
+                "grid_step_ratio": grid_uniform / grid_steps,
+                "phase_s": _phase_breakdown(tr, width, nb),
+                **budget,
+            })
     result = {"latency": table, "wall_s": time.time() - t0}
     if trajectory:
         artifact = {
             "bench": "prefill",
             "method": "share",
+            "task": TASK,
             "model": cfg.name,
             "num_layers": cfg.num_layers,
             "num_heads": cfg.num_heads,
             "num_kv_heads": cfg.num_kv_heads,
             "backend": jax.default_backend(),
+            "schedule": "ragged_causal",
+            "cpu_interpret_caveat": CPU_INTERPRET_CAVEAT,
             "points": trajectory,
         }
         with open(ARTIFACT_PATH, "w") as f:

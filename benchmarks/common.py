@@ -40,11 +40,18 @@ def bench_config():
     cfg = get_smoke_config(ARCH)
     return dataclasses.replace(
         cfg, num_layers=3, num_heads=4, num_kv_heads=2,
-        # δ/τ are model-scale-dependent (paper §6.1 tunes them per model):
+        # δ/τ/γ are model-scale-dependent (paper §6.1 tunes them per model):
         # at NB≈8 blocks, JSD-vs-uniform is inflated vs the paper's NB≈1000,
-        # so the bench model uses looser thresholds with the same semantics.
+        # so the bench model uses looser δ/τ thresholds with the same
+        # semantics.  γ likewise: the briefly-trained toy model's attention
+        # is far more diffuse than the paper's 128k-context models, so the
+        # paper's γ≈0.9 cumulative-mass cut keeps nearly every block
+        # (density ≈ 1 — no sparsity left to measure); γ=0.55 lands the
+        # bench patterns in the paper's operating regime (block density
+        # well below the causal bound) while the τ-gated sharing semantics
+        # are unchanged.
         share_prefill=SharePrefillConfig(block_size=BLOCK, min_seq_blocks=2,
-                                         delta=0.75, tau=0.4))
+                                         delta=0.75, tau=0.4, gamma=0.55))
 
 
 def data_config(task: str = "lm", seq: int = SEQ,

@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff fresh BENCH_*.json against baselines.
+
+Compares a freshly generated ``BENCH_prefill.json`` / ``BENCH_decode.json``
+against the committed baselines at the repo root and exits nonzero when a
+point regresses:
+
+  * **blocks skipped** (prefill) / **decode blocks skipped** (decode): the
+    skipped fraction may not drop by more than ``--tol-blocks`` (absolute)
+    — this is the hardware-relevant sparsity counter, so the tolerance is
+    tight;
+  * **grid_step_ratio** (prefill, when the baseline records it): the
+    count-aware grid's win over the uniform NBq·NBkv rectangle may not fall
+    below ``--min-grid-ratio`` nor regress vs the baseline by more than
+    ``--tol-blocks`` (relative);
+  * **tokens/s**: each recorded throughput column may not fall below
+    ``(1 - --tol-tokens)`` × baseline — loose by default, wall-clock on a
+    shared CPU container is noisy.
+
+Points are matched by ``seq`` (and ``cache_len`` for decode); a fresh
+artifact missing a baseline point is a regression (coverage shrank), extra
+fresh points are fine.
+
+Usage:
+  python scripts/check_bench.py                       # self-check baselines
+  python scripts/check_bench.py --prefill fresh.json  # gate a fresh run
+  python scripts/check_bench.py --run                 # regenerate + gate
+
+Also importable by the test suite (``compare_prefill`` / ``compare_decode``
+return human-readable error lists).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PREFILL = os.path.join(REPO_ROOT, "BENCH_prefill.json")
+BASELINE_DECODE = os.path.join(REPO_ROOT, "BENCH_decode.json")
+
+TOL_TOKENS = 0.6        # relative tokens/s drop allowed (CPU noise)
+TOL_BLOCKS = 0.05       # absolute skipped-fraction drop allowed
+MIN_GRID_RATIO = 2.0    # count-aware grid must keep ≥ this win at any seq
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _by_key(points: List[dict], keys) -> Dict[tuple, dict]:
+    return {tuple(p.get(k) for k in keys): p for p in points}
+
+
+def _skip_frac(p: dict, total_key: str, skip_key: str) -> float:
+    total = float(p.get(total_key, 0) or 0)
+    return float(p.get(skip_key, 0)) / total if total else 0.0
+
+
+def _check_tokens(base: dict, fresh: dict, where: str, tol: float,
+                  errors: List[str]) -> None:
+    for col, b in base.items():
+        if not col.startswith("tokens_per_s"):
+            continue
+        f = fresh.get(col)
+        if f is None:
+            errors.append(f"{where}: column {col} disappeared")
+        elif f < (1.0 - tol) * b:
+            errors.append(
+                f"{where}: {col} regressed {b:.1f} -> {f:.1f} "
+                f"(allowed drop {tol:.0%})")
+
+
+def compare_prefill(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
+                    tol_blocks: float = TOL_BLOCKS,
+                    min_grid_ratio: float = MIN_GRID_RATIO) -> List[str]:
+    errors: List[str] = []
+    base_pts = _by_key(base.get("points", []), ("seq",))
+    fresh_pts = _by_key(fresh.get("points", []), ("seq",))
+    # the absolute grid-ratio floor applies at the longest context — short
+    # sequences are limited by the causal bound itself (NBq·NBkv over the
+    # ragged causal total tops out at 2·NB/(NB+1) < 2 without a width cap)
+    max_seq = max((k[0] for k in base_pts), default=None)
+    for key, bp in base_pts.items():
+        where = f"prefill seq={key[0]}"
+        fp = fresh_pts.get(key)
+        if fp is None:
+            errors.append(f"{where}: point missing from fresh artifact")
+            continue
+        bs = _skip_frac(bp, "blocks_total", "blocks_skipped")
+        fs = _skip_frac(fp, "blocks_total", "blocks_skipped")
+        if fs < bs - tol_blocks:
+            errors.append(f"{where}: skipped-block fraction regressed "
+                          f"{bs:.3f} -> {fs:.3f}")
+        if "grid_step_ratio" in bp:
+            fr = fp.get("grid_step_ratio", 0.0)
+            if key[0] == max_seq and fr < min_grid_ratio:
+                errors.append(f"{where}: grid_step_ratio {fr:.2f} below the "
+                              f"{min_grid_ratio:.1f}x gate")
+            if fr < bp["grid_step_ratio"] * (1.0 - tol_blocks):
+                errors.append(f"{where}: grid_step_ratio regressed "
+                              f"{bp['grid_step_ratio']:.2f} -> {fr:.2f}")
+        _check_tokens(bp, fp, where, tol_tokens, errors)
+    return errors
+
+
+def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
+                   tol_blocks: float = TOL_BLOCKS) -> List[str]:
+    errors: List[str] = []
+    keys = ("seq", "cache_len")
+    fresh_pts = _by_key(fresh.get("points", []), keys)
+    for key, bp in _by_key(base.get("points", []), keys).items():
+        where = f"decode seq={key[0]} cache_len={key[1]}"
+        fp = fresh_pts.get(key)
+        if fp is None:
+            errors.append(f"{where}: point missing from fresh artifact")
+            continue
+        bs = _skip_frac(bp, "decode_blocks_total", "decode_blocks_skipped")
+        fs = _skip_frac(fp, "decode_blocks_total", "decode_blocks_skipped")
+        if fs < bs - tol_blocks:
+            errors.append(f"{where}: skipped-block fraction regressed "
+                          f"{bs:.3f} -> {fs:.3f}")
+        _check_tokens(bp, fp, where, tol_tokens, errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--prefill", help="fresh BENCH_prefill.json "
+                    "(default: the committed baseline — a self-check)")
+    ap.add_argument("--decode", help="fresh BENCH_decode.json")
+    ap.add_argument("--baseline-prefill", default=BASELINE_PREFILL)
+    ap.add_argument("--baseline-decode", default=BASELINE_DECODE)
+    ap.add_argument("--run", action="store_true",
+                    help="regenerate fresh artifacts via the benchmarks "
+                    "(slow: trains/loads the bench model) before gating")
+    ap.add_argument("--tol-tokens", type=float, default=TOL_TOKENS)
+    ap.add_argument("--tol-blocks", type=float, default=TOL_BLOCKS)
+    ap.add_argument("--min-grid-ratio", type=float, default=MIN_GRID_RATIO)
+    args = ap.parse_args(argv)
+
+    if args.run:
+        import tempfile
+
+        sys.path.insert(0, REPO_ROOT)
+        sys.path.insert(0, os.path.join(REPO_ROOT, "src"))   # repro package
+        out_dir = tempfile.mkdtemp(prefix="bench_fresh_")
+        import benchmarks.bench_decode_sharing as bd
+        import benchmarks.bench_latency as bl
+        bl.ARTIFACT_PATH = os.path.join(out_dir, "BENCH_prefill.json")
+        bd.ARTIFACT_PATH = os.path.join(out_dir, "BENCH_decode.json")
+        bl.run(methods=("share",))
+        bd.run()
+        args.prefill = bl.ARTIFACT_PATH
+        args.decode = bd.ARTIFACT_PATH
+
+    errors: List[str] = []
+    for name, fresh_path, base_path, cmp_fn in (
+            ("prefill", args.prefill, args.baseline_prefill, compare_prefill),
+            ("decode", args.decode, args.baseline_decode, compare_decode)):
+        if not os.path.exists(base_path):
+            print(f"[check_bench] no {name} baseline at {base_path}, "
+                  f"skipping")
+            continue
+        base = _load(base_path)
+        fresh = _load(fresh_path) if fresh_path else base
+        tag = "self-check" if not fresh_path else fresh_path
+        errs = cmp_fn(base, fresh, tol_tokens=args.tol_tokens,
+                      tol_blocks=args.tol_blocks,
+                      **({"min_grid_ratio": args.min_grid_ratio}
+                         if cmp_fn is compare_prefill else {}))
+        print(f"[check_bench] {name} vs {tag}: "
+              f"{'OK' if not errs else f'{len(errs)} regression(s)'}")
+        errors += errs
+
+    for e in errors:
+        print(f"  REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,8 +24,11 @@ from repro.core import pattern_dict as pdict
 from repro.core.api import SharePrefill
 from repro.core.construct import block_softmax
 from repro.core.share_attention import (
+    build_share_masks,
     gqa_head_vmap,
+    layer_pattern_stats,
     share_prefill_attention_layer,
+    update_share_state,
 )
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
 from repro.models import common
@@ -98,13 +101,20 @@ class PrefillTrace:
     full_logits: Optional[np.ndarray]
     per_layer: List[Dict[str, float]]       # shared/dense/vs/density per layer
     masks: List[np.ndarray]                 # (H, NB, NB) per layer
+    qkv: List[Tuple[np.ndarray, np.ndarray, np.ndarray]]  # per layer, opt.
 
 
 def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
                        sp: SharePrefill, *, method: str = "share",
                        want_full_logits: bool = False,
-                       want_masks: bool = False) -> PrefillTrace:
-    """Layer-by-layer SharePrefill prefill with per-layer statistics."""
+                       want_masks: bool = False,
+                       want_qkv: bool = False) -> PrefillTrace:
+    """Layer-by-layer SharePrefill prefill with per-layer statistics.
+
+    ``want_masks`` records each layer's selected (H, NB, NB) block masks
+    (all methods, including ``share``) — the input to count-aware width
+    resolution; ``want_qkv`` additionally records each layer's un-expanded
+    (q, k, v), which the latency benchmark's phase breakdown replays."""
     from repro.core import baselines
     from repro.core.patterns import block_mask_density, causal_block_mask
 
@@ -119,7 +129,7 @@ def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
     n_prefix = num_prefix_layers(cfg)
     moe_ffn = cfg.moe.enabled
 
-    per_layer, masks_out = [], []
+    per_layer, masks_out, qkv_out = [], [], []
     layers = ([params[f"prefix_{i}"] for i in range(n_prefix)]
               + [_layer_slice(params["stack"], l)
                  for l in range(cfg.num_layers - n_prefix)])
@@ -131,14 +141,20 @@ def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
         if method == "share":
             ids = jnp.asarray(sp.cluster_ids[li]) if sp.cfg.enabled else \
                 jnp.arange(h, dtype=jnp.int32)
-            out, state, st = share_prefill_attention_layer(
-                q[0], k[0], v[0], state, ids, sp.cfg, attention_fn)
+            # staged form of share_prefill_attention_layer so the selected
+            # masks are observable (count-aware width resolution)
+            mask, decision = build_share_masks(q[0], k[0], state, ids,
+                                               sp.cfg)
+            out, a_tilde = attention_fn(q[0], k[0], v[0], mask)
+            state = update_share_state(a_tilde, state, ids, decision,
+                                       sp.cfg)
+            st = layer_pattern_stats(mask, decision)
             out = out[None]
             rec = {"num_shared": float(st.num_shared),
                    "num_dense": float(st.num_dense),
                    "num_vs": float(st.num_vs),
-                   "block_density": float(st.block_density)}
-            mask = None
+                   "block_density": float(st.block_density),
+                   "max_row_pop": float(st.max_row_pop)}
         else:
             if method == "dense":
                 mask = jnp.broadcast_to(causal_block_mask(nb)[None],
@@ -161,14 +177,19 @@ def run_prefill_traced(params, cfg: ModelConfig, tokens: jnp.ndarray,
             rec = {"num_shared": 0.0, "num_dense": 0.0,
                    "num_vs": float(h),
                    "block_density": float(
-                       jnp.mean(block_mask_density(mask)))}
+                       jnp.mean(block_mask_density(mask))),
+                   "max_row_pop": float(jnp.max(jnp.sum(
+                       mask.astype(jnp.float32), axis=-1)))}
         per_layer.append(rec)
         if want_masks and mask is not None:
             masks_out.append(np.asarray(mask))
+        if want_qkv:
+            qkv_out.append((np.asarray(q[0]), np.asarray(k[0]),
+                            np.asarray(v[0])))
         x = _layer_finish(layer, x, out, cfg, moe_ffn and li >= n_prefix)
 
     full = logits_from_hidden(params, cfg, x) if want_full_logits else None
     last = logits_from_hidden(params, cfg, x[:, -1, :])
     return PrefillTrace(np.asarray(last),
                         None if full is None else np.asarray(full),
-                        per_layer, masks_out)
+                        per_layer, masks_out, qkv_out)

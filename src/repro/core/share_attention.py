@@ -12,11 +12,28 @@ For a single sample and one layer's heads:
 
 The function is pure; the pivotal dictionary is threaded as a
 :class:`PivotalState` carry through the model's ``lax.scan`` over layers.
+The flow is split into composable stages — :func:`build_share_masks` (1-4),
+the attention backend (5), :func:`update_share_state` (6) — so the batched
+wrapper can vmap the cheap mask logic per sample while issuing **one**
+batch-native kernel call for step 5.
 
 GQA is native end-to-end: K/V stay ``(Hkv, N, D)`` — the strip estimation
 vmaps per kv-head group and the sparse kernel resolves ``h // group`` in its
 BlockSpec index_map, so the ``H/Hkv`` redundant K/V copies the old
 ``jnp.repeat`` expansion materialized are never built.
+
+Batched vs per-sample attention backends
+----------------------------------------
+An ``attention_fn`` carrying ``fn.batched = True`` (e.g.
+:func:`repro.kernels.batched_sparse_attention_fn`) consumes the whole batch
+at once — ``(B, H, N, D)`` q, ``(B, Hkv, N, D)`` K/V, ``(B, H, NB, NB)``
+masks, plus an optional ``stats_gate`` — and
+:func:`batched_share_prefill_attention_layer` hoists it out of the
+per-sample ``jax.vmap``, additionally permuting heads within each GQA group
+so heads sharing a pivotal pattern are grid-adjacent
+(:func:`pattern_sharing_head_perm`) and gating the fused Ã stats to the
+dense-construction heads.  Plain per-sample AttentionFns keep the legacy
+vmap-the-whole-layer path.
 """
 from __future__ import annotations
 
@@ -28,16 +45,26 @@ import jax.numpy as jnp
 from repro.configs.base import SharePrefillConfig
 from repro.core import pattern_dict as pdict
 from repro.core.construct import construct_pivotal_pattern
-from repro.core.determine import determine_sparse_pattern, pooled_block_estimate
+from repro.core.determine import (
+    PatternDecision,
+    determine_sparse_pattern,
+    pooled_block_estimate,
+)
 from repro.core.patterns import block_mask_density, causal_block_mask
 from repro.core.vertical_slash import search_vertical_slash_from_strip
-from repro.kernels import compute_strips, sparse_attention_fn
+from repro.kernels import (
+    batched_sparse_attention_fn,
+    compute_strips,
+    sparse_attention_fn,
+)
 from repro.kernels.ops import gqa_head_vmap  # noqa: F401 (public re-export)
 
-# attention_fn: (q (H,N,D), k (Hkv,N,D), v (Hkv,N,Dv), mask (H,NB,NB))
-#               -> (out (H,N,Dv), a_tilde (H,NB,NB))
+# attention_fn (per-sample): (q (H,N,D), k (Hkv,N,D), v (Hkv,N,Dv),
+#               mask (H,NB,NB)) -> (out (H,N,Dv), a_tilde (H,NB,NB))
+# attention_fn (batched, fn.batched=True): leading B on q/k/v/mask, optional
+#               stats_gate=(B,H) kwarg — see module docstring.
 # K/V arrive un-expanded; implementations either consume the GQA grouping
-# natively (the Pallas kernel) or expand internally (the chunked fallback).
+# natively (the Pallas kernels) or expand internally (the chunked fallback).
 AttentionFn = Callable[..., Tuple[jnp.ndarray, jnp.ndarray]]
 
 
@@ -50,24 +77,27 @@ class LayerStats(NamedTuple):
     block_density: jnp.ndarray  # computed fraction of causal blocks (mean over heads)
     d_sparse_mean: jnp.ndarray
     d_sim_mean: jnp.ndarray
+    max_row_pop: jnp.ndarray    # max kept blocks in any (head, q-block) row
+                                # — the count-aware width policy's observable
 
 
-def share_prefill_attention_layer(
+def build_share_masks(
     q: jnp.ndarray,                 # (H, N, D)
-    k: jnp.ndarray,                 # (Hkv, N, D) — un-expanded GQA heads
-    v: jnp.ndarray,                 # (Hkv, N, D)
+    k: jnp.ndarray,                 # (Hkv, N, D)
     state: pdict.PivotalState,
-    cluster_ids: jnp.ndarray,       # (H,) int32, -1 = noise
+    cluster_ids: jnp.ndarray,       # (H,)
     cfg: SharePrefillConfig,
-    attention_fn: Optional[AttentionFn] = None,
-    extra_mask: jnp.ndarray | None = None,  # (NB, NB) e.g. sliding window
-    strip_impl: str = "auto",       # auto | pallas | jnp (Algorithm-3 pass)
-) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
-    h, n, d = q.shape
+    extra_mask: jnp.ndarray | None = None,
+    strip_impl: str = "auto",
+) -> Tuple[jnp.ndarray, PatternDecision]:
+    """Algorithm 3-5 mask staging for one sample: estimate, decide, and
+    materialize the selected per-head block masks (causal ∧ extra applied).
+
+    Returns ``(masks (H, NB, NB), decision)``.
+    """
     bs = cfg.block_size
+    n = q.shape[1]
     nb = n // bs
-    if attention_fn is None:
-        attention_fn = sparse_attention_fn(block_size=bs)
 
     # -- Algorithm 3: estimate + decide ------------------------------------
     strips = compute_strips(q, k, block_size=bs, impl=strip_impl)
@@ -90,25 +120,102 @@ def share_prefill_attention_layer(
     masks = masks & causal[None]
     if extra_mask is not None:
         masks = masks & extra_mask[None]
+    return masks, decision
 
-    # -- sparse attention + Ã (Algorithm 1 line 8) ---------------------------
-    out, a_tilde = attention_fn(q, k, v, masks)
 
-    # -- Algorithm 2: construct + update dictionary --------------------------
+def update_share_state(
+    a_tilde: jnp.ndarray,           # (H, NB, NB) scattered kernel stats
+    state: pdict.PivotalState,
+    cluster_ids: jnp.ndarray,
+    decision: PatternDecision,
+    cfg: SharePrefillConfig,
+) -> pdict.PivotalState:
+    """Algorithm 2: dense-construction heads build pivots and update the
+    dictionary.  Only ``decision.use_dense`` heads' constructions are kept,
+    so Ã rows of shared/VS heads may be arbitrary (e.g. all −inf when the
+    kernel's stats gating skipped them)."""
     new_masks, new_reps = jax.vmap(
         lambda a: construct_pivotal_pattern(a, cfg.gamma))(a_tilde)
-    new_state = pdict.update(state, cluster_ids, new_masks, new_reps,
-                             decision.use_dense)
+    return pdict.update(state, cluster_ids, new_masks, new_reps,
+                        decision.use_dense)
 
-    stats = LayerStats(
-        num_shared=jnp.sum(decision.use_shared.astype(jnp.float32)),
-        num_dense=jnp.sum(decision.use_dense.astype(jnp.float32)),
-        num_vs=jnp.sum(decision.use_vs.astype(jnp.float32)),
+
+def pattern_sharing_head_perm(decision: PatternDecision,
+                              cluster_ids: jnp.ndarray,
+                              group: int) -> jnp.ndarray:
+    """Schedule-level pattern sharing: a head permutation making heads that
+    share a pivotal pattern adjacent *within their GQA group*.
+
+    Adjacent heads with identical index rows re-address the same
+    ``(kv_head, block)`` K/V tile on consecutive steps of the batched
+    kernel's innermost head axis, so the Pallas TPU pipeline elides their
+    DMAs — the paper's pattern sharing exploited at the schedule level, not
+    just the mask level.  Staying within the group keeps ``h // group``
+    (the kv-head binding) invariant.  Non-shared heads keep their relative
+    order; the sort is stable, so the permutation is the identity whenever
+    no two heads of a group share a cluster pivot.
+
+    Returns ``perm (H,)`` int32: position p of the kernel schedule runs
+    original head ``perm[p]``.  Invert with ``jnp.argsort(perm)``.
+    """
+    h = cluster_ids.shape[0]
+    hkv = h // group
+    # shared heads sort by cluster (equal keys → adjacent); everyone else
+    # keeps original order behind a large offset
+    key = jnp.where(decision.use_shared, cluster_ids,
+                    (1 << 30) + jnp.arange(h, dtype=jnp.int32))
+    order = jnp.argsort(key.reshape(hkv, group), axis=1, stable=True)
+    base = (jnp.arange(hkv, dtype=jnp.int32) * group)[:, None]
+    return (base + order).reshape(h).astype(jnp.int32)
+
+
+def layer_pattern_stats(masks: jnp.ndarray, decision: PatternDecision
+                 ) -> LayerStats:
+    """LayerStats from (…, H, NB, NB) masks and a (…, H) decision — works
+    for one sample or a batch (leading axes are averaged; max_row_pop is a
+    max, it feeds the count-aware width policy)."""
+    f32 = lambda x: x.astype(jnp.float32)
+    count = lambda flag: jnp.mean(jnp.sum(f32(flag), axis=-1))
+    return LayerStats(
+        num_shared=count(decision.use_shared),
+        num_dense=count(decision.use_dense),
+        num_vs=count(decision.use_vs),
         block_density=jnp.mean(block_mask_density(masks)),
         d_sparse_mean=jnp.mean(decision.d_sparse),
         d_sim_mean=jnp.mean(decision.d_sim),
+        max_row_pop=jnp.max(jnp.sum(f32(masks), axis=-1)),
     )
-    return out, new_state, stats
+
+
+def share_prefill_attention_layer(
+    q: jnp.ndarray,                 # (H, N, D)
+    k: jnp.ndarray,                 # (Hkv, N, D) — un-expanded GQA heads
+    v: jnp.ndarray,                 # (Hkv, N, D)
+    state: pdict.PivotalState,
+    cluster_ids: jnp.ndarray,       # (H,) int32, -1 = noise
+    cfg: SharePrefillConfig,
+    attention_fn: Optional[AttentionFn] = None,
+    extra_mask: jnp.ndarray | None = None,  # (NB, NB) e.g. sliding window
+    strip_impl: str = "auto",       # auto | pallas | jnp (Algorithm-3 pass)
+) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
+    if attention_fn is None:
+        attention_fn = sparse_attention_fn(block_size=cfg.block_size)
+
+    masks, decision = build_share_masks(q, k, state, cluster_ids, cfg,
+                                        extra_mask, strip_impl)
+
+    # -- sparse attention + Ã (Algorithm 1 line 8) ---------------------------
+    if getattr(attention_fn, "batched", False):
+        out, a_tilde = attention_fn(q[None], k[None], v[None], masks[None],
+                                    stats_gate=decision.use_dense[None])
+        out, a_tilde = out[0], a_tilde[0]
+    else:
+        out, a_tilde = attention_fn(q, k, v, masks)
+
+    # -- Algorithm 2: construct + update dictionary --------------------------
+    new_state = update_share_state(a_tilde, state, cluster_ids, decision,
+                                   cfg)
+    return out, new_state, layer_pattern_stats(masks, decision)
 
 
 def batched_share_prefill_attention_layer(
@@ -121,16 +228,62 @@ def batched_share_prefill_attention_layer(
     attention_fn: Optional[AttentionFn] = None,
     extra_mask: jnp.ndarray | None = None,
     strip_impl: str = "auto",
+    reorder_heads: bool = True,
 ) -> Tuple[jnp.ndarray, pdict.PivotalState, LayerStats]:
-    """vmap over the batch; each sample carries its own pattern dictionary
-    (patterns are input-dependent — paper observation 2 is about *similarity
-    structure*, not the patterns themselves)."""
-    fn = lambda qb, kb, vb, st: share_prefill_attention_layer(
-        qb, kb, vb, st, cluster_ids, cfg, attention_fn, extra_mask,
-        strip_impl)
-    out, new_state, stats = jax.vmap(fn)(q, k, v, state)
-    stats = jax.tree.map(jnp.mean, stats)
-    return out, new_state, stats
+    """One layer of SharePrefill over a batch; each sample carries its own
+    pattern dictionary (patterns are input-dependent — paper observation 2
+    is about *similarity structure*, not the patterns themselves).
+
+    With a batched ``attention_fn`` (``fn.batched``, the default) the mask
+    staging and dictionary update are vmapped per sample but the kernel
+    runs ONCE on the whole batch — a ``(B, T, H)`` grid with per-(batch,
+    head) scalar-prefetched tables — with heads permuted per sample so
+    shared-pattern heads are grid-adjacent (``reorder_heads``; outputs and
+    Ã are unpermuted before the dictionary update, so results are invariant
+    to the reorder).  A per-sample ``attention_fn`` falls back to vmapping
+    the whole layer.
+    """
+    if attention_fn is None:
+        attention_fn = batched_sparse_attention_fn(block_size=cfg.block_size)
+
+    if not getattr(attention_fn, "batched", False):
+        fn = lambda qb, kb, vb, st: share_prefill_attention_layer(
+            qb, kb, vb, st, cluster_ids, cfg, attention_fn, extra_mask,
+            strip_impl)
+        out, new_state, stats = jax.vmap(fn)(q, k, v, state)
+        return out, new_state, _reduce_layer_stats(stats)
+
+    group = q.shape[1] // k.shape[1]
+    masks, decision = jax.vmap(
+        lambda qb, kb, st: build_share_masks(qb, kb, st, cluster_ids, cfg,
+                                             extra_mask, strip_impl)
+    )(q, k, state)
+    gate = decision.use_dense                            # (B, H)
+
+    if reorder_heads:
+        perm = jax.vmap(
+            lambda d: pattern_sharing_head_perm(d, cluster_ids, group)
+        )(decision)                                      # (B, H)
+        take = lambda x, p: jnp.take_along_axis(
+            x, p.reshape(p.shape + (1,) * (x.ndim - 2)), axis=1)
+        out_p, a_p = attention_fn(take(q, perm), k, v, take(masks, perm),
+                                  stats_gate=take(gate, perm))
+        inv = jnp.argsort(perm, axis=1)
+        out, a_tilde = take(out_p, inv), take(a_p, inv)
+    else:
+        out, a_tilde = attention_fn(q, k, v, masks, stats_gate=gate)
+
+    new_state = jax.vmap(
+        lambda a, st, d: update_share_state(a, st, cluster_ids, d, cfg)
+    )(a_tilde, state, decision)
+    return out, new_state, layer_pattern_stats(masks, decision)
+
+
+def _reduce_layer_stats(stats: LayerStats) -> LayerStats:
+    """Reduce vmapped per-sample LayerStats over the batch: means, except
+    ``max_row_pop`` (a bound — the max over samples)."""
+    means = LayerStats(*(jnp.mean(f) for f in stats))
+    return means._replace(max_row_pop=jnp.max(stats.max_row_pop))
 
 
 def init_batched_state(batch: int, num_clusters: int,

@@ -25,6 +25,7 @@ import threading
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
@@ -95,6 +96,73 @@ def use_rules(rules: Optional[ShardingRules]):
         yield rules
     finally:
         _state.rules = prev
+
+
+def head_shard_count(mesh: Mesh, axis: str, num_heads: int,
+                     num_kv_heads: int) -> int:
+    """Usable shard count of ``axis`` for head-parallel attention: the mesh
+    axis size when both head counts divide it (each shard gets whole GQA
+    groups), else 1 (replicate — same fallback rule as :func:`shard`)."""
+    if axis not in mesh.axis_names:
+        return 1
+    n = mesh.shape[axis]
+    if n <= 1 or num_heads % n or num_kv_heads % n:
+        return 1
+    return n
+
+
+def sharded_batched_block_sparse_attention(
+    q: jax.Array,               # (B, H, N, Dqk)
+    k: jax.Array,               # (B, Hkv, N, Dqk)
+    v: jax.Array,               # (B, Hkv, N, Dv)
+    block_mask: jax.Array,      # (B, H, NBq, NBkv) bool
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    block_size: int,
+    causal: bool = True,
+    width: Optional[int] = None,
+    interpret: bool = True,
+    stats_gate: Optional[jax.Array] = None,     # (B, H)
+):
+    """Heads-sharded batch-native block-sparse prefill attention.
+
+    Runs :func:`repro.kernels.ops.batched_block_sparse_attention` under
+    ``shard_map`` with every head-indexed operand partitioned over ``axis``.
+    The splash ``(indices, counts)`` tables are built *inside* the shard
+    body from the local mask slice, so the kernel's scalar-prefetch SMEM
+    footprint is O(local heads) — a device never materializes another
+    shard's tables (the multi-host table-size concern deferred since PR 1).
+    Head-parallel attention has no cross-shard reductions, so outputs match
+    the single-device path exactly.
+
+    Requires ``head_shard_count(mesh, axis, H, Hkv) > 1``; callers (e.g.
+    :func:`repro.kernels.batched_sparse_attention_fn`) are expected to fall
+    back to the single-device path otherwise.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.ops import batched_block_sparse_attention
+
+    if head_shard_count(mesh, axis, q.shape[1], k.shape[1]) <= 1:
+        raise ValueError(
+            f"head counts {q.shape[1]}/{k.shape[1]} do not shard over mesh "
+            f"axis {axis!r} of {mesh.shape}")
+    if stats_gate is None:
+        stats_gate = jnp.ones(q.shape[:2], jnp.int32)
+
+    def body(q_l, k_l, v_l, m_l, g_l):
+        return batched_block_sparse_attention(
+            q_l, k_l, v_l, m_l, block_size=block_size, causal=causal,
+            interpret=interpret, width=width, stats_gate=g_l)
+
+    hs = P(None, axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(hs, hs, hs, hs, hs),
+        out_specs=(hs, hs),
+        check_rep=False,
+    )(q, k, v, block_mask, stats_gate)
 
 
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:

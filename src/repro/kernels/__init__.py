@@ -8,9 +8,13 @@
   ops.py                jit'd wrappers (index staging, Ã scatter)
   ref.py                pure-jnp oracles the kernels are validated against
 
-``sparse_attention_fn`` is the default SharePrefill attention backend: the
-block-skipping Pallas kernel, compiled on TPU / interpreted elsewhere, with
-a dense-chunked fallback on shapes the kernel cannot take.
+``batched_sparse_attention_fn`` is the default SharePrefill attention
+backend for batched prefill: the batch-native count-aware Pallas kernel
+(ragged ``(B, T, H)`` grid, one ``pallas_call`` for the whole batch),
+compiled on TPU / interpreted elsewhere, optionally heads-sharded via
+``shard_map``.  ``sparse_attention_fn`` is its per-sample counterpart (the
+validation oracle path); both fall back to dense-chunked on shapes the
+kernel cannot take.
 """
 from __future__ import annotations
 
@@ -27,13 +31,20 @@ from repro.kernels.decode_attn import (
     flash_decode_sparse_batched,
     resolve_decode_impl,
 )
+from repro.kernels.block_sparse_attn import (
+    block_sparse_attention_batched,
+    ragged_grid_steps,
+    ragged_schedule,
+)
 from repro.kernels.indices import (
     build_block_tables,
     cap_block_mask,
     compact_block_mask,
     scatter_block_stats,
+    scatter_schedule_stats,
 )
 from repro.kernels.ops import (
+    batched_block_sparse_attention,
     block_sparse_attention,
     expand_kv,
     gqa_head_vmap,
@@ -100,12 +111,80 @@ def sparse_attention_fn(*, block_size: int, causal: bool = True,
     return fn
 
 
+def batched_sparse_attention_fn(*, block_size: int, causal: bool = True,
+                                width: Optional[int] = None,
+                                interpret: Optional[bool] = None,
+                                mesh=None, shard_axis: str = "model"):
+    """Bind the batch-native sparse execution path as a batched AttentionFn.
+
+    The returned callable satisfies the **batched** AttentionFn protocol —
+    ``(q (B,H,N,D), k (B,Hkv,N,D), v (B,Hkv,N,Dv), masks (B,H,NB,NB),
+    stats_gate=None) -> (out (B,H,N,Dv), Ã (B,H,NB,NB))`` — and is marked
+    with ``fn.batched = True`` so orchestration code
+    (:func:`repro.core.share_attention.batched_share_prefill_attention_layer`)
+    can hoist the kernel call out of its per-sample ``jax.vmap``: one
+    ``pallas_call`` over a ``(B, T, H)`` grid instead of B replayed
+    single-sample programs.  ``stats_gate`` (B, H) gates the fused Ã stats
+    to the heads that consume them (None = all heads).
+
+    ``mesh`` (optional) runs the kernel under ``shard_map`` with the head
+    axes sharded over ``shard_axis`` and the splash index tables built *per
+    shard* — SMEM stays O(local heads); see
+    :func:`repro.distributed.sharding.sharded_batched_block_sparse_attention`.
+    When the head counts do not divide the mesh axis the call falls back to
+    the single-device path.
+
+    Mask-grid and ``interpret`` contracts match :func:`sparse_attention_fn`;
+    the misaligned-granularity fallback runs the dense chunked path per
+    sample (a correctness escape hatch, not a production path).
+    """
+    from repro.kernels.chunked import chunked_attention_fn
+    from repro.kernels.indices import cap_block_mask as _cap
+
+    it = interpret if interpret is not None \
+        else jax.default_backend() != "tpu"
+
+    def fn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           masks: jnp.ndarray, stats_gate: Optional[jnp.ndarray] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        n = q.shape[2]
+        nb = masks.shape[-1]
+        if nb * block_size == n:
+            if mesh is not None:
+                from repro.distributed.sharding import (
+                    head_shard_count,
+                    sharded_batched_block_sparse_attention,
+                )
+                if head_shard_count(mesh, shard_axis, q.shape[1],
+                                    k.shape[1]) > 1:
+                    return sharded_batched_block_sparse_attention(
+                        q, k, v, masks, mesh=mesh, axis=shard_axis,
+                        block_size=block_size, causal=causal, width=width,
+                        interpret=it, stats_gate=stats_gate)
+            return batched_block_sparse_attention(
+                q, k, v, masks, block_size=block_size, causal=causal,
+                interpret=it, width=width, stats_gate=stats_gate)
+        if nb == 0 or n % nb:
+            raise ValueError(
+                f"mask grid {nb} does not tile sequence length {n}")
+        if width is not None:
+            masks = _cap(masks, width)
+        base = chunked_attention_fn(block_size=n // nb, causal=causal)
+        return jax.vmap(base)(q, k, v, masks)
+
+    fn.batched = True
+    return fn
+
+
 __all__ = [
-    "DecodePlan", "block_sparse_attention", "build_block_tables",
+    "DecodePlan", "batched_block_sparse_attention",
+    "batched_sparse_attention_fn", "block_sparse_attention",
+    "block_sparse_attention_batched", "build_block_tables",
     "cap_block_mask", "compact_block_mask", "compute_strips", "expand_kv",
     "flash_decode", "flash_decode_plan", "flash_decode_sparse",
     "flash_decode_sparse_batched", "gqa_head_vmap", "make_attention_fn",
-    "resolve_decode_impl", "scatter_block_stats", "sparse_attention_fn",
+    "ragged_grid_steps", "ragged_schedule", "resolve_decode_impl",
+    "scatter_block_stats", "scatter_schedule_stats", "sparse_attention_fn",
     "strip_scores_pallas", "block_sparse_attention_ref",
     "decode_attention_ref", "dense_attention_ref",
 ]

@@ -10,20 +10,42 @@ skipping, fused block-avg QK emission) adapted to TPU (DESIGN.md §3):
     padded steps repeat the previous index (the Pallas TPU pipeline elides
     the DMA when the block index does not change between steps);
   * online softmax (running max / sum, accumulator rescale) — FA-2 math;
-  * a compact (H, NBq, W) stats output holds the block-averaged QK logits of
-    each *visited* step; the wrapper scatters it into the full (H, NB, NB)
-    Ã with −inf background (skipped blocks).
+  * fused block-averaged QK logits emitted compactly per *visited* step; the
+    wrapper scatters them into the full (…, NBq, NBkv) Ã with −inf
+    background (skipped blocks).
 
-Grid: ``(heads, q_blocks, W)`` with the W axis sequential ("arbitrary").
-Validated against :mod:`repro.kernels.ref` in interpret mode (CPU container).
+Two kernels share that machinery:
+
+``block_sparse_attention_kernel`` — the single-sample validation oracle:
+  grid ``(H, NBq, W)``, one sample, W sequential steps for **every** row.
+
+``block_sparse_attention_batched`` — the production prefill kernel:
+  batch-native ``(B, T, H)`` grid over a **ragged causal schedule**
+  (:func:`ragged_schedule`).  The (q-block, slot) rectangle is flattened
+  into one sequential axis of ``T = Σ_i min(causal_bound_i, W)`` steps, so
+  the kernel's sequential work tracks the *kept* blocks instead of the
+  ``NBq·NBkv`` rectangle (a uniform grid wastes ~2× even on a fully causal
+  mask: row 0 has one causal block but still gets NBkv steps).  Heads are
+  the **innermost** grid axis: at a fixed (t) step the kernel sweeps heads,
+  so heads whose index rows are identical — e.g. heads sharing a pivotal
+  pattern, made adjacent by the schedule-level permutation in
+  :func:`repro.core.share_attention.pattern_sharing_head_perm` — re-address
+  the same ``(kv_head, j)`` K/V block and the Pallas TPU pipeline elides
+  their DMAs entirely.  Per-(batch, head) tables are scalar-prefetched, and
+  the fused Ã stats are gated per head (``stats_gate``) so shared/VS heads
+  — whose Ã is never consumed by Algorithm 2 — skip the stats reductions.
+
+Validated against :mod:`repro.kernels.ref` (and the batched kernel
+bit-for-bit against ``vmap`` of the single-sample oracle) in interpret mode.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -155,4 +177,220 @@ def block_sparse_attention_kernel(
         ],
         interpret=interpret,
     )(indices, counts, q, k, v)
+    return out, stats
+
+
+# --------------------------------------------------------------------------
+# Batched count-aware kernel: (B, T, H) grid over a ragged causal schedule
+# --------------------------------------------------------------------------
+
+def ragged_schedule(nbq: int, nbkv: int, *, width: Optional[int] = None,
+                    causal: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Static flattened step schedule for the batched kernel.
+
+    Row ``i`` of a causal mask can keep at most ``i + 1 + (NBkv − NBq)``
+    blocks, so it gets ``w_i = min(causal_bound_i, W)`` sequential steps
+    (``W`` = the static per-row block budget, see
+    :mod:`repro.kernels.indices`); non-causal rows get ``min(NBkv, W)``.
+    The (row, slot) pairs are flattened row-major into one axis of
+    ``T = Σ_i w_i`` steps — the kernel's per-(batch, head) sequential work.
+
+    Returns ``(row_map, slot_map)``:
+      * ``row_map`` — ``(T + 1,)`` int32, the q-block of each step, with a
+        ``-1`` sentinel appended so ``row_map[t+1] != row_map[t]`` marks the
+        final step of every row (the kernel's finalize condition);
+      * ``slot_map`` — ``(T,)`` int32, the index-table slot of each step
+        (``slot_map[t] == 0`` marks the first step of a row).
+    """
+    w = nbkv if width is None else max(1, min(int(width), nbkv))
+    rows, slots = [], []
+    shift = nbkv - nbq
+    for i in range(nbq):
+        wi = min(i + 1 + shift, w) if causal else w
+        wi = max(1, min(wi, nbkv))
+        rows.extend([i] * wi)
+        slots.extend(range(wi))
+    row_map = np.asarray(rows + [-1], np.int32)
+    slot_map = np.asarray(slots, np.int32)
+    return row_map, slot_map
+
+
+def ragged_grid_steps(nbq: int, nbkv: int, *, width: Optional[int] = None,
+                      causal: bool = True) -> int:
+    """Sequential steps per (batch, head) under :func:`ragged_schedule` —
+    the ``grid_steps`` counter benchmarks compare against the uniform
+    ``NBq·NBkv`` rectangle."""
+    return int(ragged_schedule(nbq, nbkv, width=width, causal=causal)[1]
+               .shape[0])
+
+
+def _kernel_batched(row_ref, slot_ref, idx_ref, cnt_ref, gate_ref,  # SMEM
+                    q_ref, k_ref, v_ref,          # VMEM tiles
+                    out_ref, stats_ref,           # outputs
+                    acc_ref, m_ref, l_ref,        # VMEM scratch (H-indexed)
+                    *, block_q: int, block_kv: int, scale: float,
+                    causal: bool):
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+    h = pl.program_id(2)
+    row = row_ref[t]
+    slot = slot_ref[t]
+
+    @pl.when(slot == 0)
+    def _init():
+        acc_ref[h] = jnp.zeros(acc_ref.shape[1:], acc_ref.dtype)
+        m_ref[h] = jnp.full(m_ref.shape[1:], NEG_INF, m_ref.dtype)
+        l_ref[h] = jnp.zeros(l_ref.shape[1:], l_ref.dtype)
+
+    count = cnt_ref[b, h, row]
+    j = idx_ref[b, h, row, slot]
+    valid = slot < count
+    emit_stats = valid & (gate_ref[b, h] != 0)
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0, h].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        if causal:
+            q_pos = row * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = j * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            tok_valid = k_pos <= q_pos
+        else:
+            tok_valid = jnp.ones((block_q, block_kv), dtype=bool)
+
+        # fused block stats, gated to the heads whose Ã is consumed
+        # (Algorithm-2 construction heads) — shared/VS heads skip the
+        # reductions entirely
+        @pl.when(emit_stats)
+        def _stats():
+            n_valid = jnp.sum(tok_valid.astype(jnp.float32))
+            s_sum = jnp.sum(jnp.where(tok_valid, s, 0.0))
+            stats_ref[0, 0, h] = jnp.where(
+                n_valid > 0, s_sum / jnp.maximum(n_valid, 1.0), NEG_INF)
+
+        s = jnp.where(tok_valid, s, NEG_INF)
+        m_prev = m_ref[h]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 0.0)
+        p = jnp.where(tok_valid, jnp.exp(s - m_new), 0.0)
+
+        l_ref[h] = l_ref[h] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[h] = acc_ref[h] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[h] = m_new
+
+    @pl.when(jnp.logical_not(emit_stats))
+    def _no_stats():
+        stats_ref[0, 0, h] = NEG_INF
+
+    @pl.when(row_ref[t + 1] != row)
+    def _finalize():
+        denom = jnp.maximum(l_ref[h], 1e-30)
+        out_ref[0, h] = (acc_ref[h] / denom).astype(out_ref.dtype)
+
+
+def block_sparse_attention_batched(
+    q: jnp.ndarray,             # (B, H, N, Dqk)
+    k: jnp.ndarray,             # (B, Hkv, N, Dqk)
+    v: jnp.ndarray,             # (B, Hkv, N, Dv)
+    indices: jnp.ndarray,       # (B, H, NBq, W) int32 active kv-block ids
+    counts: jnp.ndarray,        # (B, H, NBq) int32
+    *,
+    block_size: int,
+    causal: bool = True,
+    stats_gate: Optional[jnp.ndarray] = None,   # (B, H) — emit Ã stats
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batch-native count-aware block-sparse attention (module docstring).
+
+    Grid ``(B, T, H)`` with heads innermost; ``T`` comes from
+    :func:`ragged_schedule` at ``W = indices.shape[-1]``.  Per-(batch, head)
+    ``(indices, counts)`` tables and the static (row, slot) maps are
+    scalar-prefetched to SMEM.  The q and out tiles carry the *full* head
+    axis and are re-addressed only on row transitions, so the head sweep
+    costs no extra q/out DMA; K/V tiles are per-(kv_head, block) and their
+    DMA is elided whenever adjacent heads address the same block (identical
+    shared-pattern rows, padded slots repeating the last kept id).
+
+    ``stats_gate`` (None = all heads) selects the heads whose fused Ã stats
+    are computed; gated-off heads emit −inf, which the scatter maps to the
+    "never visited" background.
+
+    Returns ``(out (B, H, N, Dv), stats_compact (B, T, H) f32)``; scatter
+    the stats with :func:`repro.kernels.indices.scatter_schedule_stats`.
+
+    VMEM note: accumulator scratch is O(H·block²) because every head's
+    online-softmax state lives across the head sweep — intended for use
+    with a heads-sharded mesh (H = local heads) at production scale; see
+    :func:`repro.distributed.sharding.sharded_batched_block_sparse_attention`.
+    """
+    b, h, n, d = q.shape
+    _, h_kv, _, dv = v.shape
+    group = h // h_kv
+    nbq = n // block_size
+    nbkv = n // block_size
+    w = indices.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    row_map, slot_map = ragged_schedule(nbq, nbkv, width=w, causal=causal)
+    t_steps = int(slot_map.shape[0])
+    if stats_gate is None:
+        stats_gate = jnp.ones((b, h), jnp.int32)
+    stats_gate = stats_gate.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel_batched, block_q=block_size, block_kv=block_size,
+        scale=scale, causal=causal)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b, t_steps, h),
+        in_specs=[
+            pl.BlockSpec((1, h, block_size, d),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate:
+                         (bb, 0, row[tt], 0)),
+            pl.BlockSpec((1, 1, block_size, d),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate:
+                         (bb, hh // group,
+                          idx[bb, hh, row[tt], slot[tt]], 0)),
+            pl.BlockSpec((1, 1, block_size, dv),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate:
+                         (bb, hh // group,
+                          idx[bb, hh, row[tt], slot[tt]], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, block_size, dv),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate:
+                         (bb, 0, row[tt], 0)),
+            pl.BlockSpec((1, 1, h),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate:
+                         (bb, tt, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, block_size, dv), jnp.float32),
+            pltpu.VMEM((h, block_size, 1), jnp.float32),
+            pltpu.VMEM((h, block_size, 1), jnp.float32),
+        ],
+    )
+
+    out, stats = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, t_steps, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(row_map), jnp.asarray(slot_map), indices, counts,
+      stats_gate, q, k, v)
     return out, stats

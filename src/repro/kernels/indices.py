@@ -40,6 +40,13 @@ reconstructs the full ``(H, NBq, NBkv)`` Ã with −inf background — the layou
 Algorithm 2 (pivotal-pattern construction) consumes.  ``max`` makes the
 scatter padding-safe: a padded step repeats an active id but carries −inf,
 so the real visited value wins.
+
+``scatter_schedule_stats`` is the same inverse for the **batched** kernel's
+ragged-schedule layout (``(B, T, H)``, one scalar per flattened grid step —
+see :func:`repro.kernels.block_sparse_attn.ragged_schedule`): step ``t`` of
+head ``h`` lands at ``(h, row_map[t], indices[…, row_map[t], slot_map[t]])``.
+Heads whose stats were gated off emit −inf everywhere and come back as
+all-background rows (exactly what a never-visited head looks like).
 """
 from __future__ import annotations
 
@@ -100,6 +107,30 @@ def scatter_block_stats(stats_compact: jnp.ndarray,  # (H, NBq, W)
     h_ix = jnp.arange(h)[:, None, None]
     q_ix = jnp.arange(nbq)[None, :, None]
     return full.at[h_ix, q_ix, indices].max(stats_compact)
+
+
+def scatter_schedule_stats(stats_compact: jnp.ndarray,  # (B, T, H)
+                           indices: jnp.ndarray,        # (B, H, NBq, W)
+                           row_map,                     # (T + 1,) int32
+                           slot_map,                    # (T,) int32
+                           nb_kv: int) -> jnp.ndarray:
+    """Ragged-schedule kernel stats → full (B, H, NBq, NBkv) Ã.
+
+    The batched analogue of :func:`scatter_block_stats` (module docstring,
+    "Inverse scatter"); ``row_map``/``slot_map`` come from the same
+    :func:`repro.kernels.block_sparse_attn.ragged_schedule` call that drove
+    the kernel.
+    """
+    b, t, h = stats_compact.shape
+    nbq = indices.shape[2]
+    rows = jnp.asarray(row_map[:-1], jnp.int32)          # drop the sentinel
+    slots = jnp.asarray(slot_map, jnp.int32)
+    s = jnp.moveaxis(stats_compact, -1, 1)               # (B, H, T)
+    js = indices[:, :, rows, slots]                      # (B, H, T)
+    full = jnp.full((b, h, nbq, nb_kv), NEG_INF, jnp.float32)
+    b_ix = jnp.arange(b)[:, None, None]
+    h_ix = jnp.arange(h)[None, :, None]
+    return full.at[b_ix, h_ix, rows[None, None, :], js].max(s)
 
 
 def build_block_tables(block_mask: jnp.ndarray

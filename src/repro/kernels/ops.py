@@ -17,17 +17,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as ref_ops
-from repro.kernels.block_sparse_attn import block_sparse_attention_kernel
+from repro.kernels.block_sparse_attn import (
+    block_sparse_attention_batched,
+    block_sparse_attention_kernel,
+    ragged_schedule,
+)
 from repro.kernels.indices import (
     build_block_tables,
     compact_block_mask,
     scatter_block_stats,
+    scatter_schedule_stats,
 )
 
 __all__ = [
-    "block_sparse_attention", "build_block_tables", "compact_block_mask",
-    "expand_kv", "gqa_head_vmap", "make_attention_fn",
-    "scatter_block_stats",
+    "batched_block_sparse_attention", "block_sparse_attention",
+    "build_block_tables", "compact_block_mask", "expand_kv",
+    "gqa_head_vmap", "make_attention_fn", "scatter_block_stats",
+    "scatter_schedule_stats",
 ]
 
 
@@ -87,6 +93,43 @@ def block_sparse_attention(
         interpret=interpret)
     a_tilde = scatter_block_stats(stats_compact, indices,
                                   block_mask.shape[-1])
+    return out, a_tilde
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "causal", "interpret",
+                                    "width"))
+def batched_block_sparse_attention(
+    q: jnp.ndarray,             # (B, H, N, Dqk)
+    k: jnp.ndarray,             # (B, Hkv, N, Dqk)
+    v: jnp.ndarray,             # (B, Hkv, N, Dv)
+    block_mask: jnp.ndarray,    # (B, H, NBq, NBkv) bool
+    *,
+    block_size: int,
+    causal: bool = True,
+    interpret: bool = True,
+    width: Optional[int] = None,   # static per-row block budget W
+    stats_gate: Optional[jnp.ndarray] = None,   # (B, H) — emit Ã stats
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batch-native block-sparse attention + scattered Ã.
+
+    Stages per-(batch, head) splash tables in-graph, runs the count-aware
+    ragged-schedule kernel (:func:`repro.kernels.block_sparse_attn.
+    block_sparse_attention_batched`) ONCE for the whole batch — no
+    ``jax.vmap`` over ``pallas_call`` — and scatters the compact stats back
+    to the full Ã layout.  ``stats_gate`` limits the fused-stats work to the
+    heads whose Ã is consumed (dense-construction heads); gated-off heads
+    get all-background (−inf) Ã rows.
+    """
+    indices, counts = compact_block_mask(block_mask, width=width)
+    out, stats_compact = block_sparse_attention_batched(
+        q, k, v, indices, counts, block_size=block_size, causal=causal,
+        stats_gate=stats_gate, interpret=interpret)
+    nbq = q.shape[2] // block_size
+    row_map, slot_map = ragged_schedule(
+        nbq, block_mask.shape[-1], width=indices.shape[-1], causal=causal)
+    a_tilde = scatter_schedule_stats(stats_compact, indices, row_map,
+                                     slot_map, block_mask.shape[-1])
     return out, a_tilde
 
 

@@ -69,10 +69,11 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
         fwd = lambda p, tokens, positions=None, embeds=None: \
             transformer.forward_train(p, cfg, tokens, positions, embeds)
         pf = lambda p, tokens, sp, method="share", attn_impl="auto", \
-            attn_width=None, positions=None, embeds=None: \
-            transformer.prefill(
+            attn_width=None, prompt_lens=None, positions=None, \
+            embeds=None: transformer.prefill(
                 p, cfg, tokens, sp, method=method, attn_impl=attn_impl,
-                attn_width=attn_width, positions=positions, embeds=embeds)
+                attn_width=attn_width, prompt_lens=prompt_lens,
+                positions=positions, embeds=embeds)
         dec = lambda p, token, cache, pos, positions=None, window=0, \
             embeds=None, plan=None, prompt_lens=None, prefill_len=0, \
             decode_impl="auto": transformer.decode_step(

@@ -27,8 +27,8 @@ from repro.core.patterns import (
     causal_block_mask,
     sliding_window_block_mask,
 )
-from repro.distributed.sharding import shard
-from repro.kernels import sparse_attention_fn
+from repro.distributed.sharding import current_rules, shard
+from repro.kernels import batched_sparse_attention_fn, sparse_attention_fn
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
 from repro.kernels.decode_attn import DecodePlan, flash_decode_plan
 from repro.kernels.indices import cap_block_mask
@@ -65,6 +65,13 @@ def resolve_attention_fn(attn_impl: str, block_size: int,
     sequence lengths unrolls its grid into the HLO, so interpret mode stays
     a validation tool unless asked for explicitly via ``sparse``.
 
+    ``sparse`` resolves to the **batch-native** count-aware kernel
+    (:func:`repro.kernels.batched_sparse_attention_fn`): one ``(B, T, H)``
+    grid for the whole batch instead of ``jax.vmap`` replaying B
+    single-sample programs.  When a sharding-rules context with a non-trivial
+    ``model`` mesh axis is active, the kernel additionally runs under
+    ``shard_map`` with the index tables built per head-shard.
+
     ``width`` forwards the static per-row block budget W (see
     :mod:`repro.kernels.indices`).  The sparse kernel consumes it natively
     (table truncation); every other backend applies the numerically
@@ -72,7 +79,12 @@ def resolve_attention_fn(attn_impl: str, block_size: int,
     """
     attn_impl = resolved_attn_impl(attn_impl)
     if attn_impl == "sparse":
-        return sparse_attention_fn(block_size=block_size, width=width)
+        rules = current_rules()
+        mesh = rules.mesh if (
+            rules is not None and "model" in rules.mesh.axis_names
+            and rules.mesh.shape["model"] > 1) else None
+        return batched_sparse_attention_fn(block_size=block_size,
+                                           width=width, mesh=mesh)
     if attn_impl == "kernel":
         base = make_attention_fn(block_size=block_size, impl="kernel")
     elif attn_impl == "ref":
@@ -89,11 +101,21 @@ class AttnStats(NamedTuple):
     num_dense: jnp.ndarray
     num_vs: jnp.ndarray
     block_density: jnp.ndarray
+    # max kept blocks in any (head, q-block) mask row — the observable the
+    # count-aware width policy resolves W from (serving/width_policy.py)
+    max_row_pop: jnp.ndarray
 
     @staticmethod
     def zero() -> "AttnStats":
         z = jnp.zeros(())
-        return AttnStats(z, z, z, jnp.ones(()))
+        return AttnStats(z, z, z, jnp.ones(()), z)
+
+    @staticmethod
+    def reduce_layers(stats: "AttnStats") -> "AttnStats":
+        """Collapse a scanned (L, …) stats pytree: means, except
+        ``max_row_pop`` (a bound — max over layers)."""
+        means = AttnStats(*(jnp.mean(f) for f in stats))
+        return means._replace(max_row_pop=jnp.max(stats.max_row_pop))
 
 
 def init_attention_layer(key: jax.Array, cfg: ModelConfig,
@@ -188,7 +210,8 @@ def attention_prefill(
             extra_mask=extra)
         out = shard(out, "batch", "heads")
         stats = AttnStats(lstats.num_shared, lstats.num_dense,
-                          lstats.num_vs, lstats.block_density)
+                          lstats.num_vs, lstats.block_density,
+                          lstats.max_row_pop)
         return common.gqa_out(params, out), (k, v), new_state, stats
 
     # baseline policies: build masks (GQA-grouped — K is never repeated),
@@ -207,12 +230,20 @@ def attention_prefill(
     masks = masks & causal_block_mask(nb)[None, None]
     if extra is not None:
         masks = masks & extra[None, None]
-    out, _ = jax.vmap(attention_fn)(q, k, v, masks)
+    if getattr(attention_fn, "batched", False):
+        # batch-native kernel, no per-sample vmap; the baselines never
+        # consume Ã, so the fused stats are gated off entirely
+        out, _ = attention_fn(q, k, v, masks,
+                              stats_gate=jnp.zeros(masks.shape[:2],
+                                                   jnp.int32))
+    else:
+        out, _ = jax.vmap(attention_fn)(q, k, v, masks)
     out = shard(out, "batch", "heads")
     h = q.shape[1]
     stats = AttnStats(jnp.zeros(()), jnp.zeros(()),
                       jnp.asarray(float(h)),
-                      jnp.mean(block_mask_density(masks)))
+                      jnp.mean(block_mask_density(masks)),
+                      jnp.max(jnp.sum(masks.astype(jnp.float32), axis=-1)))
     return common.gqa_out(params, out), (k, v), sp_state, stats
 
 

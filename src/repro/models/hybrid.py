@@ -185,7 +185,7 @@ def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
 
     logits = logits_from_hidden(params, cfg, x[:, -1, :])
     if n_super:
-        stats = AttnStats(*(jnp.mean(f) for f in stats))
+        stats = AttnStats.reduce_layers(stats)
     else:
         stats = AttnStats.zero()
     return PrefillResult(logits, {"stack": caches, "prefix": trail_states},

@@ -123,7 +123,8 @@ def mla_prefill(params, x, cfg: ModelConfig, positions, *,
         out, new_state, lstats = sa.batched_share_prefill_attention_layer(
             q, k, v, sp_state, cluster_ids, sp.cfg, attention_fn)
         stats = AttnStats(lstats.num_shared, lstats.num_dense,
-                          lstats.num_vs, lstats.block_density)
+                          lstats.num_vs, lstats.block_density,
+                          lstats.max_row_pop)
     else:
         out, _ = chunked_attention(q, k, v, block_size=min(128, s),
                                    causal=True)

@@ -199,8 +199,13 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
             sp: SharePrefill, *, method: str = "share",
             attn_impl: str = "auto",
             attn_width: Optional[int] = None,
+            prompt_lens: Optional[jnp.ndarray] = None,   # (B,) int32
             positions: Optional[jnp.ndarray] = None,
             embeds: Optional[jnp.ndarray] = None) -> PrefillResult:
+    """Prefill the padded batch.  ``prompt_lens`` (optional) gathers each
+    row's ``last_logits`` at its real last token (``prompt_len - 1``)
+    instead of the padded final position, so a short prompt's first sampled
+    token is conditioned on its own text rather than right-pad."""
     b, s = (embeds.shape[:2] if embeds is not None else tokens.shape)
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -237,8 +242,13 @@ def prefill(params, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
     (x, sp_state), (caches, stats) = jax.lax.scan(
         body, (x, sp_state), (params["stack"], ids_xs))
 
-    logits = logits_from_hidden(params, cfg, x[:, -1, :])
-    stats = attn.AttnStats(*(jnp.mean(f) for f in stats))
+    if prompt_lens is None:
+        last = x[:, -1, :]
+    else:
+        rows = jnp.clip(prompt_lens, 1, s) - 1
+        last = x[jnp.arange(b), rows, :]
+    logits = logits_from_hidden(params, cfg, last)
+    stats = attn.AttnStats.reduce_layers(stats)
     return PrefillResult(logits, {"prefix": prefix_caches, "stack": caches},
                          stats, sp_state)
 

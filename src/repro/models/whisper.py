@@ -169,7 +169,7 @@ def prefill(params, cfg: ModelConfig, tokens, sp: SharePrefill, *,
     (x, sp_state), (caches, stats) = jax.lax.scan(
         body, (x, sp_state), (params["dec_stack"], ids_xs))
     logits = logits_from_hidden(params, cfg, x[:, -1, :])
-    stats = AttnStats(*(jnp.mean(f) for f in stats))
+    stats = AttnStats.reduce_layers(stats)
     return PrefillResult(logits, {"stack": caches, "prefix": []},
                          stats, sp_state)
 

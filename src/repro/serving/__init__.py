@@ -5,8 +5,8 @@ from repro.serving.decode_plan import (
 )
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 from repro.serving.sampling import SamplingConfig, sample_token
-from repro.serving.width_policy import auto_width_cap
+from repro.serving.width_policy import auto_width_cap, population_width_cap
 
 __all__ = ["EngineConfig", "Request", "ServingEngine", "SamplingConfig",
            "auto_width_cap", "build_decode_plan", "plan_block_counts",
-           "plan_traffic_fraction", "sample_token"]
+           "plan_traffic_fraction", "population_width_cap", "sample_token"]

@@ -34,7 +34,9 @@ from repro.serving.sparse_decode import decode_keep_blocks
 
 def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
                       prefill_len: int, cache_len: int,
-                      width: Optional[int] = None) -> DecodePlan:
+                      width: Optional[int] = None,
+                      kv_head_range: Optional[Tuple[int, int]] = None
+                      ) -> DecodePlan:
     """Post-prefill pattern dictionary → decode block tables.
 
     Args:
@@ -44,8 +46,12 @@ def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
         [prefill_len, cache_len) form the dense recent tail.
       width: optional static per-table block budget W (most-recent blocks
         win, same truncation as the prefill kernel's cap).
+      kv_head_range: optional ``(start, count)`` kv-head slice — under a
+        heads-sharded mesh each shard builds only its local kv-heads'
+        tables, keeping the scalar-prefetch SMEM footprint O(local heads);
+        the result equals the global plan sliced on the Hkv axis.
 
-    Returns a DecodePlan with (L, B, Hkv, …) leaves — the decode scan
+    Returns a DecodePlan with (L, B, Hkv_local, …) leaves — the decode scan
     slices one layer per step.
     """
     bs = sp.cfg.block_size
@@ -62,8 +68,14 @@ def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
     keep = decode_keep_blocks(sp, sp_state, num_layers, num_heads)
     batch = keep.shape[1]
     kh = keep.reshape(num_layers, batch, hkv, g, nbp)
+    if kv_head_range is not None:
+        start, count = kv_head_range
+        if start < 0 or count < 1 or start + count > hkv:
+            raise ValueError(
+                f"kv_head_range {kv_head_range} out of [0, {hkv})")
+        kh = kh[:, :, start:start + count]
     if nb > nbp:                         # dense recent tail absorbs growth
-        tail = jnp.ones((num_layers, batch, hkv, g, nb - nbp), bool)
+        tail = jnp.ones(kh.shape[:-1] + (nb - nbp,), bool)
         kh = jnp.concatenate([kh, tail], axis=-1)
     union = jnp.any(kh, axis=3)          # (L, B, Hkv, NB)
     if width is not None:

@@ -10,11 +10,15 @@ memory-bound per EXPERIMENTS.md §Roofline).
 
 Requests are padded to a block multiple, batched up to ``max_batch``, and
 served by two jitted programs (prefill_step, decode_step) shared across
-request shapes via bucketing.  For the GQA transformer families,
-per-request prompt lengths are threaded into decode so right-pad K/V slots
-are never attended (MLA latent caches and the non-transformer families keep
-the plain length mask), and sampling honours each request's own
-:class:`SamplingConfig`.
+request shapes via bucketing.  For the transformer families, per-request
+prompt lengths are threaded into prefill (last-logits gathered at each
+row's real last token, so the first sampled token never conditions on
+right-pad) and, for GQA caches, into decode as slot-validity so right-pad
+K/V is never attended (MLA latent caches and the non-transformer families
+keep the plain length mask); sampling honours each request's own
+:class:`SamplingConfig`.  ``width_policy="count"`` resolves the sparse
+kernel's static block budget W from observed row populations, so the
+batched kernel's ragged grid issues steps proportional to *kept* blocks.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ from repro.core.api import SharePrefill
 from repro.models.api import Model
 from repro.serving import decode_plan as dplan
 from repro.serving.sampling import SamplingConfig, sample_token
-from repro.serving.width_policy import auto_width_cap
+from repro.serving.width_policy import auto_width_cap, population_width_cap
 
 
 @dataclasses.dataclass
@@ -64,13 +68,19 @@ class EngineConfig:
     decode_impl: str = "auto"
     # static per-row block budget W for the sparse prefill kernel
     # (transformer families only; ignored for ssm/hybrid/encdec):
-    #   width_policy="off"  → prefill_width (None = uncapped)
-    #   width_policy="auto" → density-percentile heuristic over the block
+    #   width_policy="off"   → prefill_width (None = uncapped)
+    #   width_policy="auto"  → density-percentile heuristic over the block
     #     densities observed on earlier batches of the same bucket
     #     (repro.serving.width_policy); first batch runs uncapped, then the
     #     cap freezes per bucket (a drifting W would recompile per batch).
+    #   width_policy="count" → count-aware: W covers the largest observed
+    #     (head, q-block) row population (× width_safety) of earlier batches
+    #     of the bucket, so the batched kernel's ragged grid issues steps
+    #     proportional to kept blocks instead of the NBkv rectangle while
+    #     staying lossless for observed traffic.  Same uncapped-warmup /
+    #     freeze-per-bucket lifecycle as "auto".
     prefill_width: Optional[int] = None
-    width_policy: str = "off"           # "off" | "auto"
+    width_policy: str = "off"           # "off" | "auto" | "count"
     width_percentile: float = 95.0
     width_safety: float = 1.25
 
@@ -85,6 +95,7 @@ class ServingEngine:
         self._prefill_cache: Dict[Any, Callable] = {}
         self._decode_cache: Dict[Any, Callable] = {}
         self._density_obs: Dict[int, List[float]] = {}
+        self._pop_obs: Dict[int, List[float]] = {}   # max_row_pop per batch
         self._width_frozen: Dict[int, Optional[int]] = {}
 
     # -- compiled-program management ------------------------------------
@@ -94,9 +105,13 @@ class ServingEngine:
                 return b
         return self.ecfg.seq_buckets[-1]
 
-    def _supports_prefill_width(self) -> bool:
-        """Only the transformer-family prefill lambdas accept attn_width."""
+    def _transformer_family(self) -> bool:
+        """The transformer-family prefill lambdas accept attn_width and
+        prompt_lens (ragged last-logits); ssm/hybrid/encdec do not."""
         return self.model.cfg.family in ("dense", "vlm", "moe")
+
+    # back-compat alias
+    _supports_prefill_width = _transformer_family
 
     def _width_cap(self, seq: int) -> Optional[int]:
         """Resolve the sparse-prefill block budget W for this bucket.
@@ -109,31 +124,53 @@ class ServingEngine:
         """
         if not self._supports_prefill_width():
             return None
-        if self.ecfg.width_policy != "auto":
+        if self.ecfg.width_policy not in ("auto", "count"):
             return self.ecfg.prefill_width
         if seq in self._width_frozen:
             return self._width_frozen[seq]
-        obs = self._density_obs.get(seq)
+        obs = (self._density_obs if self.ecfg.width_policy == "auto"
+               else self._pop_obs).get(seq)
         if not obs:
             # genuinely uncapped warmup — a prefill_width cap here would
-            # bias the density observations the heuristic is about to use
+            # bias the observations the heuristic is about to use
             return None
         nb = max(seq // max(self.sp.cfg.block_size, 1), 1)
-        w = auto_width_cap(obs, nb,
-                           percentile=self.ecfg.width_percentile,
-                           safety=self.ecfg.width_safety)
+        if self.ecfg.width_policy == "auto":
+            w = auto_width_cap(obs, nb,
+                               percentile=self.ecfg.width_percentile,
+                               safety=self.ecfg.width_safety)
+        else:
+            # count-aware: each observation is already a per-batch max row
+            # population, so cover the largest one (percentile 100)
+            w = population_width_cap(obs, nb,
+                                     safety=self.ecfg.width_safety)
         self._width_frozen[seq] = None if w >= nb else w
         return self._width_frozen[seq]
 
     def _prefill_fn(self, batch: int, seq: int, width: Optional[int] = None):
-        key = (batch, seq, width)
+        """Jitted prefill program for one (batch, seq, width) shape.
+
+        For transformer families the program takes per-request prompt
+        lengths and gathers each row's last logits at ``prompt_len - 1`` —
+        the first sampled token is conditioned on the prompt's real last
+        token, never on right-pad."""
+        ragged = self._transformer_family()
+        key = (batch, seq, width, ragged)
         if key not in self._prefill_cache:
             kwargs = {} if width is None else {"attn_width": width}
 
-            def fn(params, tokens):
-                return self.model.prefill(
-                    params, tokens, self.sp, method=self.ecfg.method,
-                    attn_impl=self.ecfg.attn_impl, **kwargs)
+            if ragged:
+                def fn(params, tokens, plens):
+                    return self.model.prefill(
+                        params, tokens, self.sp, method=self.ecfg.method,
+                        attn_impl=self.ecfg.attn_impl, prompt_lens=plens,
+                        **kwargs)
+            else:
+                def fn(params, tokens, plens):
+                    del plens
+                    return self.model.prefill(
+                        params, tokens, self.sp, method=self.ecfg.method,
+                        attn_impl=self.ecfg.attn_impl, **kwargs)
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
@@ -222,13 +259,14 @@ class ServingEngine:
     def _serve_batch(self, grp: List[Request], seq: int, seed: int):
         """Prefill the padded batch, then decode autoregressively.
 
-        Prompts are left-aligned / right-padded; for the GQA transformer
-        families, per-request prompt lengths are threaded into every decode
-        step as a slot-validity mask, so pad K/V entries are never attended
-        (remaining simplifications: MLA / non-transformer caches still
-        attend pads, prefill itself runs over the padded batch, and the
-        first sampled token comes from the last *padded* position's
-        logits)."""
+        Prompts are left-aligned / right-padded; for the transformer
+        families, per-request prompt lengths are threaded (a) into prefill,
+        whose last-logits are gathered at each row's ``prompt_len - 1``
+        (the first sampled token never conditions on right-pad), and (b)
+        into every GQA decode step as a slot-validity mask, so pad K/V
+        entries are never attended (remaining simplifications: MLA /
+        non-transformer caches still attend pads, and prefill attention
+        itself runs over the padded batch)."""
         b = len(grp)
         toks = np.zeros((b, seq), np.int32)
         for i, r in enumerate(grp):
@@ -240,7 +278,7 @@ class ServingEngine:
         width = self._width_cap(seq)
         t0 = time.time()
         prefill = self._prefill_fn(b, seq, width)
-        result = prefill(self.params, jnp.asarray(toks))
+        result = prefill(self.params, jnp.asarray(toks), plens)
         jax.block_until_ready(result.last_logits)
         prefill_s = time.time() - t0
 
@@ -249,11 +287,15 @@ class ServingEngine:
             "num_dense": float(result.stats.num_dense),
             "num_vs": float(result.stats.num_vs),
             "block_density": float(result.stats.block_density),
+            "max_row_pop": float(result.stats.max_row_pop),
             "prefill_width_cap": 0 if width is None else int(width),
         }
         if self.ecfg.width_policy == "auto":
             self._density_obs.setdefault(seq, []).append(
                 stats["block_density"])
+        elif self.ecfg.width_policy == "count":
+            self._pop_obs.setdefault(seq, []).append(
+                stats["max_row_pop"])
 
         max_new = max(r.max_new_tokens for r in grp)
         key = jax.random.PRNGKey(seed)

@@ -1,17 +1,28 @@
-"""Width-cap auto-policy: pick the sparse kernel's static block budget W.
+"""Width-cap policies: pick the sparse kernel's static block budget W.
 
-``sparse_attention_fn(width=W)`` bounds the Pallas kernel's sequential grid
-axis to W steps per (head, q-block) row — a latency/VMEM knob — but the
-seed left W manual (ROADMAP: "nothing picks W automatically").  This module
-closes that loop with a density-percentile heuristic over profiling stats:
-serve traffic uncapped first, observe per-batch block densities, then cap
-at the percentile density (× a safety factor) so only pathological rows are
-truncated.  The cap always keeps each row's most-recent blocks (see
+``sparse_attention_fn(width=W)`` bounds the Pallas kernel's sequential work
+per (head, q-block) row — under the batched kernel's ragged schedule
+(:func:`repro.kernels.block_sparse_attn.ragged_schedule`) the grid issues
+``Σ_i min(causal_bound_i, W)`` steps per head, so W is the lever that makes
+grid steps track *kept* blocks instead of the ``NBq·NBkv`` rectangle.  Two
+policies resolve it from observations:
+
+  * :func:`auto_width_cap` — the density-percentile heuristic over per-batch
+    mean block densities (``width_policy="auto"``, PR 2's original loop);
+  * :func:`population_width_cap` — **count-aware**: resolve W from the
+    observed per-row kept-block *populations* themselves.  At the default
+    ``percentile=100`` this covers the largest row ever observed (lossless
+    for repeat traffic, modulo the safety head-room for drift); a lower
+    percentile is an explicit latency knob that truncates the reported
+    fraction of rows to their most-recent W blocks (benchmarks record the
+    truncated fraction alongside the grid-step win).
+
+Both caps always keep each row's most-recent blocks (see
 :mod:`repro.kernels.indices`), preserving the causal local band.
 
-Wired into serving via ``EngineConfig(width_policy="auto")``: the engine
-records the density of every prefill it runs and re-resolves W per bucket
-before the next batch compiles.
+Wired into serving via ``EngineConfig(width_policy=...)``: the engine
+records the observable of every prefill it runs (mean density, max row
+population) and resolves W once per bucket before the next batch compiles.
 """
 from __future__ import annotations
 
@@ -39,4 +50,34 @@ def auto_width_cap(densities: Sequence[float], nb: int, *,
         raise ValueError("auto_width_cap needs at least one density sample")
     d = float(np.percentile(np.asarray(densities, np.float64), percentile))
     w = int(np.ceil(d * nb * safety))
+    return max(1, min(w, nb))
+
+
+def population_width_cap(row_populations: Sequence[float], nb: int, *,
+                         percentile: float = 100.0,
+                         safety: float = 1.1) -> int:
+    """Count-aware W from observed per-row kept-block populations.
+
+    Args:
+      row_populations: observed kept-block counts — either one value per
+        (head, q-block) mask row (benchmark/trace usage) or one
+        ``max_row_pop`` per prefill (the engine's per-batch observable,
+        where each sample is already a max and ``percentile`` should stay
+        at 100).
+      nb: kv block columns at the target sequence length.
+      percentile: population percentile to cover exactly; 100 = the largest
+        observed row (lossless for the observed traffic).  Lower values
+        trade numerics for latency — rows beyond the percentile are
+        truncated to their W most-recent blocks.
+      safety: head-room multiplier for drift between observation and
+        serving.
+
+    Returns W clamped to [1, nb].
+    """
+    if not len(row_populations):
+        raise ValueError(
+            "population_width_cap needs at least one population sample")
+    p = float(np.percentile(np.asarray(row_populations, np.float64),
+                            percentile))
+    w = int(np.ceil(p * safety))
     return max(1, min(w, nb))

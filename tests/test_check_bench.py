@@ -1,0 +1,98 @@
+"""scripts/check_bench.py — the benchmark regression gate.
+
+Validates the comparison logic on synthetic artifacts and that the
+committed baselines self-check clean (the gate CI runs)."""
+import copy
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(REPO, "scripts", "check_bench.py")
+
+spec = importlib.util.spec_from_file_location("check_bench", SCRIPT)
+check_bench = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_bench)
+
+
+PREFILL = {
+    "bench": "prefill",
+    "points": [
+        {"seq": 512, "tokens_per_s_chunked": 1000.0,
+         "tokens_per_s_sparse": 800.0, "blocks_total": 400,
+         "blocks_skipped": 100, "grid_step_ratio": 1.9},
+        {"seq": 2048, "tokens_per_s_chunked": 900.0,
+         "tokens_per_s_sparse": 300.0, "blocks_total": 6000,
+         "blocks_skipped": 1700, "grid_step_ratio": 2.1},
+    ],
+}
+DECODE = {
+    "bench": "decode",
+    "points": [
+        {"seq": 512, "cache_len": 640, "tokens_per_s_dense": 100.0,
+         "tokens_per_s_sparse": 150.0, "decode_blocks_total": 180,
+         "decode_blocks_skipped": 80},
+    ],
+}
+
+
+def test_identical_artifacts_pass():
+    assert check_bench.compare_prefill(PREFILL, PREFILL) == []
+    assert check_bench.compare_decode(DECODE, DECODE) == []
+
+
+def test_blocks_skipped_regression_fails():
+    fresh = copy.deepcopy(PREFILL)
+    fresh["points"][1]["blocks_skipped"] = 500        # sparsity collapsed
+    errs = check_bench.compare_prefill(PREFILL, fresh)
+    assert any("skipped-block" in e for e in errs)
+
+
+def test_grid_ratio_gate_applies_at_longest_seq_only():
+    fresh = copy.deepcopy(PREFILL)
+    # short-seq ratio below 2.0 is fine (causal bound), but it may not
+    # regress vs its own baseline
+    assert check_bench.compare_prefill(PREFILL, fresh) == []
+    fresh["points"][1]["grid_step_ratio"] = 1.5       # longest seq gated
+    errs = check_bench.compare_prefill(PREFILL, fresh)
+    assert any("below the 2.0x gate" in e for e in errs)
+    fresh2 = copy.deepcopy(PREFILL)
+    fresh2["points"][0]["grid_step_ratio"] = 1.0      # short-seq regression
+    errs2 = check_bench.compare_prefill(PREFILL, fresh2)
+    assert any("regressed" in e for e in errs2)
+
+
+def test_tokens_regression_and_missing_point_fail():
+    fresh = copy.deepcopy(PREFILL)
+    fresh["points"][0]["tokens_per_s_sparse"] = 1.0
+    errs = check_bench.compare_prefill(PREFILL, fresh)
+    assert any("tokens_per_s_sparse regressed" in e for e in errs)
+    fresh2 = copy.deepcopy(DECODE)
+    fresh2["points"] = []
+    errs2 = check_bench.compare_decode(DECODE, fresh2)
+    assert any("missing" in e for e in errs2)
+
+
+def test_committed_baselines_self_check_clean(tmp_path):
+    """The standalone gate exits 0 against the committed artifacts and 1
+    when a fresh artifact regresses."""
+    res = subprocess.run([sys.executable, SCRIPT], capture_output=True,
+                         text=True, timeout=120)
+    assert res.returncode == 0, res.stderr
+
+    base = json.load(open(os.path.join(REPO, "BENCH_prefill.json")))
+    if not base.get("points"):
+        pytest.skip("no committed prefill points")
+    bad = copy.deepcopy(base)
+    bad["points"][-1]["blocks_skipped"] = 0
+    bad_path = tmp_path / "fresh.json"
+    bad_path.write_text(json.dumps(bad))
+    res = subprocess.run([sys.executable, SCRIPT, "--prefill",
+                          str(bad_path)], capture_output=True, text=True,
+                         timeout=120)
+    assert res.returncode == 1
+    assert "REGRESSION" in res.stderr

@@ -199,3 +199,52 @@ def test_width_cap_auto_policy(setup):
     engine.serve([r3])
     assert r3.pattern_stats["prefill_width_cap"] == want
     assert len(engine._prefill_cache) == 2
+
+
+def test_width_cap_count_policy(setup):
+    """EngineConfig(width_policy="count"): W covers the largest observed
+    (head, q-block) row population × safety — the count-aware resolution
+    that makes the ragged grid's steps track kept blocks."""
+    from repro.serving import population_width_cap
+
+    model, params, sp = setup
+    engine = ServingEngine(model, params, sp,
+                           EngineConfig(method="share", max_batch=1,
+                                        seq_buckets=(256,),
+                                        width_policy="count"))
+    r1 = _requests(1, max_new=2)[0]
+    engine.serve([r1])
+    assert r1.pattern_stats["prefill_width_cap"] == 0    # uncapped warmup
+    assert engine._pop_obs[256]                          # max pops recorded
+    assert r1.pattern_stats["max_row_pop"] >= 1.0
+    # pin the observation so the resolved W is deterministic
+    nb = 256 // sp.cfg.block_size
+    engine._pop_obs[256] = [2.0]
+    want = population_width_cap([2.0], nb, safety=1.25)
+    r2 = _requests(1, max_new=2)[0]
+    engine.serve([r2])
+    assert want == 3                                     # ceil(2·1.25)
+    assert r2.pattern_stats["prefill_width_cap"] == want
+    # frozen per bucket
+    r3 = _requests(1, max_new=2)[0]
+    engine.serve([r3])
+    assert r3.pattern_stats["prefill_width_cap"] == want
+
+
+def test_engine_first_token_from_real_last_position(setup):
+    """A short prompt in a long bucket must sample its first token from the
+    prompt_len-1 logits, not the padded final position — identical output
+    to serving the same prompt in a tight bucket."""
+    model, params, sp = setup
+    short = _requests(1, seq=192, max_new=1)[0]
+
+    loose = ServingEngine(model, params, sp,
+                          EngineConfig(method="dense", seq_buckets=(256,)))
+    r_loose = Request(uid=0, prompt=short.prompt.copy(), max_new_tokens=1)
+    loose.serve([r_loose])
+
+    tight = ServingEngine(model, params, sp,
+                          EngineConfig(method="dense", seq_buckets=(192,)))
+    r_tight = Request(uid=0, prompt=short.prompt.copy(), max_new_tokens=1)
+    tight.serve([r_tight])
+    assert r_loose.output_tokens[0] == r_tight.output_tokens[0]
