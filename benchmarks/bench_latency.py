@@ -21,7 +21,10 @@ counts:
   * the **count-aware width** W resolved from the traced run's observed
     per-row kept-block populations
     (:func:`repro.serving.width_policy.population_width_cap` at the
-    recorded percentile/safety) and the fraction of rows it truncates;
+    recorded percentile/safety) and the fraction of rows it truncates —
+    resolved for the vertical-slash / flex **baseline rows too**
+    (``baseline_points`` in the artifact), so baseline sparse prefill is
+    measured under the same W cap instead of uncapped;
   * the **grid_steps counter** — sequential kernel steps per (head, layer)
     under the ragged causal schedule at W
     (:func:`repro.kernels.ragged_grid_steps`) vs the uniform ``NBq·NBkv``
@@ -149,15 +152,18 @@ def run(methods=METHODS) -> dict:
     t0 = time.time()
     table = {}
     trajectory = []
+    baseline_points = []        # count-aware rows for vertical_slash / flex
     for seq in LENGTHS:
         toks = jnp.asarray(prompt_for(TASK, seq, 50)[None])
         nb = seq // BLOCK
         table[seq] = {}
         for m in methods:
-            # density + observed row populations from the traced run
-            want = m == "share"
+            # density + observed row populations from the traced run —
+            # masks are traced for every sparse policy, so the baseline
+            # rows get the same count-aware width accounting as ours
+            want = m != "dense"
             tr = run_prefill_traced(params, cfg, toks, sp, method=m,
-                                    want_masks=want, want_qkv=want)
+                                    want_masks=want, want_qkv=m == "share")
             density = float(np.mean([r["block_density"]
                                      for r in tr.per_layer]))
             # wall-clock of the jitted prefill: dense-chunked vs sparse path
@@ -181,27 +187,26 @@ def run(methods=METHODS) -> dict:
                 **budget,
             }
             table[seq][METHOD_LABELS[m]] = row
-            if m != "share":
+            if m == "dense":
                 continue
 
             # -- count-aware width + grid-step accounting -----------------
+            # resolved for every sparse policy: the vertical-slash / flex
+            # baseline rows get the same W cap + ragged-grid treatment as
+            # ours, so their measured sparse prefill is capped too (the
+            # ROADMAP "baselines still measure uncapped" item)
             pops = np.concatenate([mk.sum(-1).ravel() for mk in tr.masks])
             width = population_width_cap(pops, nb,
                                          percentile=WIDTH_PERCENTILE,
                                          safety=WIDTH_SAFETY)
             grid_steps = ragged_grid_steps(nb, nb, width=width)
             grid_uniform = nb * nb
-            fn_w = jax.jit(lambda p, t: model.prefill(
-                p, t, sp, method="share", attn_impl="sparse",
+            fn_w = jax.jit(lambda p, t, m=m, width=width: model.prefill(
+                p, t, sp, method=m, attn_impl="sparse",
                 attn_width=width).last_logits)
             wall_w = _timed(fn_w, params, toks)[0]
-            trajectory.append({
-                "seq": seq,
-                "block_size": BLOCK,
-                "block_density": density,
-                "tokens_per_s_chunked": seq / wall["chunked"],
-                "tokens_per_s_sparse": seq / wall["sparse"],
-                "tokens_per_s_sparse_count_aware": seq / wall_w,
+
+            width_acct = {
                 "width_cap": int(width),
                 "width_percentile": WIDTH_PERCENTILE,
                 "width_safety": WIDTH_SAFETY,
@@ -210,6 +215,27 @@ def run(methods=METHODS) -> dict:
                 "grid_steps_per_head": grid_steps,
                 "grid_steps_uniform_per_head": grid_uniform,
                 "grid_step_ratio": grid_uniform / grid_steps,
+                "tokens_per_s_sparse_count_aware": seq / wall_w,
+            }
+            row.update(width_acct)
+            if m != "share":
+                baseline_points.append({
+                    "seq": seq,
+                    "method": m,
+                    "block_density": density,
+                    "tokens_per_s_chunked": seq / wall["chunked"],
+                    "tokens_per_s_sparse": seq / wall["sparse"],
+                    **width_acct,
+                    **budget,
+                })
+                continue
+            trajectory.append({
+                "seq": seq,
+                "block_size": BLOCK,
+                "block_density": density,
+                "tokens_per_s_chunked": seq / wall["chunked"],
+                "tokens_per_s_sparse": seq / wall["sparse"],
+                **width_acct,
                 "phase_s": _phase_breakdown(tr, width, nb),
                 **budget,
             })
@@ -227,6 +253,9 @@ def run(methods=METHODS) -> dict:
             "schedule": "ragged_causal",
             "cpu_interpret_caveat": CPU_INTERPRET_CAVEAT,
             "points": trajectory,
+            # baseline policies measured under the SAME count-aware width
+            # accounting (W cap + truncated-row fraction) as the share rows
+            "baseline_points": baseline_points,
         }
         with open(ARTIFACT_PATH, "w") as f:
             json.dump(artifact, f, indent=1)

@@ -15,11 +15,22 @@ point regresses:
     ``--tol-blocks`` (relative);
   * **tokens/s**: each recorded throughput column may not fall below
     ``(1 - --tol-tokens)`` × baseline — loose by default, wall-clock on a
-    shared CPU container is noisy.
+    shared CPU container is noisy;
+  * **sparse/dense decode ratio** (decode): the sparse decode path's
+    throughput ratio over dense decode may not drop by more than
+    ``--tol-decode-ratio`` (relative) — noise cancels in the ratio, so it
+    is tighter than the absolute tokens/s gate;
+  * **plan traffic fraction** (decode): the fraction of kv blocks each
+    decode step streams may not increase by more than ``--tol-traffic``
+    (absolute) — a deterministic counter, an increase is real sparsity
+    loss.
 
 Points are matched by ``seq`` (and ``cache_len`` for decode); a fresh
 artifact missing a baseline point is a regression (coverage shrank), extra
-fresh points are fine.
+fresh points are fine.  The prefill ``baseline_points`` rows (vertical-
+slash / flex count-aware width accounting) are gated the same way whenever
+the fresh artifact records any — a share-only regeneration (``--run``)
+omits them legitimately and skips that section.
 
 Usage:
   python scripts/check_bench.py                       # self-check baselines
@@ -43,7 +54,14 @@ BASELINE_DECODE = os.path.join(REPO_ROOT, "BENCH_decode.json")
 
 TOL_TOKENS = 0.6        # relative tokens/s drop allowed (CPU noise)
 TOL_BLOCKS = 0.05       # absolute skipped-fraction drop allowed
-MIN_GRID_RATIO = 2.0    # count-aware grid must keep ≥ this win at any seq
+MIN_GRID_RATIO = 2.0    # grid-ratio floor, enforced at the longest seq only
+                        # (short seqs are bounded by causality itself)
+# decode-specific gates: shared-machine wall-clock noise largely cancels in
+# the sparse/dense *ratio*, so its tolerance is tighter than the absolute
+# tokens/s gate; the plan traffic fraction is a deterministic counter, so
+# its tolerance is tight like the skipped-blocks one
+TOL_DECODE_RATIO = 0.25    # relative sparse/dense tokens/s ratio drop
+TOL_TRAFFIC = 0.05         # absolute plan-traffic-fraction increase
 
 
 def _load(path: str) -> dict:
@@ -104,11 +122,46 @@ def compare_prefill(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
                 errors.append(f"{where}: grid_step_ratio regressed "
                               f"{bp['grid_step_ratio']:.2f} -> {fr:.2f}")
         _check_tokens(bp, fp, where, tol_tokens, errors)
+
+    # baseline rows (vertical_slash / flex under count-aware width
+    # accounting): gated only when the fresh artifact records them — a
+    # share-only regeneration (e.g. --run) legitimately omits the baseline
+    # methods, but a full regeneration that lost a row or its width
+    # accounting is a coverage regression
+    fresh_base = _by_key(fresh.get("baseline_points", []),
+                         ("seq", "method"))
+    if fresh_base:
+        for key, bp in _by_key(base.get("baseline_points", []),
+                               ("seq", "method")).items():
+            where = f"prefill baseline {key[1]} seq={key[0]}"
+            fp = fresh_base.get(key)
+            if fp is None:
+                errors.append(f"{where}: row missing from fresh artifact")
+                continue
+            for col in ("width_cap", "truncated_row_fraction",
+                        "grid_step_ratio"):
+                if col not in fp:
+                    errors.append(f"{where}: column {col} disappeared")
+            fr = fp.get("grid_step_ratio", 0.0)
+            if fr and fr < bp.get("grid_step_ratio", 0.0) * \
+                    (1.0 - tol_blocks):
+                errors.append(f"{where}: grid_step_ratio regressed "
+                              f"{bp['grid_step_ratio']:.2f} -> {fr:.2f}")
+            _check_tokens(bp, fp, where, tol_tokens, errors)
     return errors
 
 
+def _decode_ratio(p: dict) -> float:
+    """Sparse-vs-dense decode throughput ratio (0.0 when unrecorded)."""
+    dense = float(p.get("tokens_per_s_dense", 0) or 0)
+    sparse = float(p.get("tokens_per_s_sparse", 0) or 0)
+    return sparse / dense if dense else 0.0
+
+
 def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
-                   tol_blocks: float = TOL_BLOCKS) -> List[str]:
+                   tol_blocks: float = TOL_BLOCKS,
+                   tol_ratio: float = TOL_DECODE_RATIO,
+                   tol_traffic: float = TOL_TRAFFIC) -> List[str]:
     errors: List[str] = []
     keys = ("seq", "cache_len")
     fresh_pts = _by_key(fresh.get("points", []), keys)
@@ -123,6 +176,30 @@ def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
         if fs < bs - tol_blocks:
             errors.append(f"{where}: skipped-block fraction regressed "
                           f"{bs:.3f} -> {fs:.3f}")
+        # sparse-vs-dense decode throughput ratio: the sparse path's win
+        # (or parity) over dense decode on the same machine may not erode
+        br, fr = _decode_ratio(bp), _decode_ratio(fp)
+        if br > 0:
+            if fr == 0:
+                errors.append(f"{where}: sparse/dense decode ratio "
+                              f"disappeared (baseline {br:.2f})")
+            elif fr < br * (1.0 - tol_ratio):
+                errors.append(
+                    f"{where}: sparse/dense decode tokens/s ratio regressed "
+                    f"{br:.2f} -> {fr:.2f} (allowed drop {tol_ratio:.0%})")
+        # plan traffic fraction: fraction of kv blocks each decode step
+        # streams — deterministic, so an increase is a real sparsity loss
+        bt = bp.get("decode_traffic_fraction")
+        if bt is not None:
+            ft = fp.get("decode_traffic_fraction")
+            if ft is None:
+                errors.append(f"{where}: decode_traffic_fraction "
+                              f"disappeared")
+            elif float(ft) > float(bt) + tol_traffic:
+                errors.append(
+                    f"{where}: decode_traffic_fraction regressed "
+                    f"{float(bt):.3f} -> {float(ft):.3f} "
+                    f"(allowed increase {tol_traffic:.2f})")
         _check_tokens(bp, fp, where, tol_tokens, errors)
     return errors
 
@@ -140,6 +217,9 @@ def main(argv=None) -> int:
     ap.add_argument("--tol-tokens", type=float, default=TOL_TOKENS)
     ap.add_argument("--tol-blocks", type=float, default=TOL_BLOCKS)
     ap.add_argument("--min-grid-ratio", type=float, default=MIN_GRID_RATIO)
+    ap.add_argument("--tol-decode-ratio", type=float,
+                    default=TOL_DECODE_RATIO)
+    ap.add_argument("--tol-traffic", type=float, default=TOL_TRAFFIC)
     args = ap.parse_args(argv)
 
     if args.run:
@@ -168,10 +248,12 @@ def main(argv=None) -> int:
         base = _load(base_path)
         fresh = _load(fresh_path) if fresh_path else base
         tag = "self-check" if not fresh_path else fresh_path
+        extra = ({"min_grid_ratio": args.min_grid_ratio}
+                 if cmp_fn is compare_prefill
+                 else {"tol_ratio": args.tol_decode_ratio,
+                       "tol_traffic": args.tol_traffic})
         errs = cmp_fn(base, fresh, tol_tokens=args.tol_tokens,
-                      tol_blocks=args.tol_blocks,
-                      **({"min_grid_ratio": args.min_grid_ratio}
-                         if cmp_fn is compare_prefill else {}))
+                      tol_blocks=args.tol_blocks, **extra)
         print(f"[check_bench] {name} vs {tag}: "
               f"{'OK' if not errs else f'{len(errs)} regression(s)'}")
         errors += errs

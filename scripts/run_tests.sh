@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test wrapper: the default in-process suite first, then the
+# ``subprocess``-marked tier (forced multi-device CPU-mesh tests — each
+# spawns its own python/JAX process, so they are slower and isolated here
+# to keep the default tier's failure signal fast).
+#
+#   scripts/run_tests.sh              # both tiers
+#   scripts/run_tests.sh -k decode    # extra pytest args forwarded to both
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier 1: default suite (subprocess tier excluded) =="
+python -m pytest -x -q -m "not subprocess" "$@"
+
+echo "== tier 2: subprocess tier (forced multi-device CPU meshes) =="
+# exit code 5 = no tests collected (e.g. a -k filter matching none of the
+# subprocess tier) — a green run, not a failure
+python -m pytest -x -q -m subprocess "$@" || { rc=$?; [ "$rc" -eq 5 ]; }

@@ -85,8 +85,9 @@ class SharePrefill:
 
         ``layer_idx_or_ids`` is either a static int (cluster ids are looked up
         host-side) or a traced (H,) int32 array (the scan-xs path).
-        ``attention_fn=None`` selects the sparse execution backend
-        (:func:`repro.kernels.sparse_attention_fn` at ``cfg.block_size``).
+        ``attention_fn=None`` selects the batch-native sparse execution
+        backend (:func:`repro.kernels.batched_sparse_attention_fn` at
+        ``cfg.block_size`` — one fused kernel call for the whole batch).
         """
         if isinstance(layer_idx_or_ids, int):
             ids = jnp.asarray(self.cluster_ids[layer_idx_or_ids])

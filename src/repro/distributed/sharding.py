@@ -6,6 +6,14 @@ axes.  Outside a rules context the annotations are no-ops, so the same model
 code runs unsharded on one CPU device (smoke tests) and fully sharded on the
 (pod, data, model) production mesh (dry-run / launch).
 
+The rules context also drives the **mesh-active routing rule**
+(:func:`active_model_mesh`): when the context's "model" axis is non-trivial,
+the serving hot paths resolve their ``shard_map`` twins automatically —
+sparse prefill through :func:`sharded_batched_block_sparse_attention`,
+sparse decode through :func:`sharded_flash_decode` — each building/consuming
+its splash index tables per head shard, so SMEM stays O(local heads) and
+outputs stay bitwise-equal to the single-device paths.
+
 Logical axes:
   batch        DP over ("pod", "data") — training/prefill/decode batch
   seq          context parallelism — long-decode KV-cache sequence
@@ -111,6 +119,45 @@ def head_shard_count(mesh: Mesh, axis: str, num_heads: int,
     return n
 
 
+def active_model_mesh(axis: str = "model") -> Optional[Mesh]:
+    """The **mesh-active routing rule**, shared by sparse prefill and sparse
+    decode: return the active rules context's mesh when its ``axis`` is
+    non-trivial (size > 1), else None.
+
+    Both hot paths resolve their sharded twin from this single predicate —
+    :func:`repro.models.attention.resolve_attention_fn` routes the prefill
+    kernel through :func:`sharded_batched_block_sparse_attention`, and
+    :func:`repro.models.attention.attention_decode` routes a DecodePlan step
+    through :func:`sharded_flash_decode` — so a served model runs prefill
+    *and* decode under the same mesh with no per-call configuration.  Head
+    counts that do not divide the axis still fall back to the single-device
+    path (see :func:`head_shard_count`).
+    """
+    rules = current_rules()
+    if rules is None or axis not in rules.mesh.axis_names:
+        return None
+    return rules.mesh if rules.mesh.shape[axis] > 1 else None
+
+
+def shardable_model_mesh(num_heads: int, num_kv_heads: int,
+                         axis: str = "model") -> Optional[Mesh]:
+    """The mesh-active routing predicate with head divisibility folded in:
+    the active rules context's mesh when its ``axis`` is non-trivial AND
+    both head counts shard over it (whole GQA groups per shard —
+    :func:`head_shard_count`), else None.
+
+    Sparse-decode plan *construction* (``build_decode_plan_auto``) and plan
+    *execution* (``attention_decode``) both resolve through this single
+    helper, so a sharded-laid-out plan is always consumed by the sharded
+    path and vice versa — the lockstep is structural, not copy-paste.
+    """
+    mesh = active_model_mesh(axis)
+    if mesh is None or head_shard_count(mesh, axis, num_heads,
+                                        num_kv_heads) <= 1:
+        return None
+    return mesh
+
+
 def sharded_batched_block_sparse_attention(
     q: jax.Array,               # (B, H, N, Dqk)
     k: jax.Array,               # (B, Hkv, N, Dqk)
@@ -163,6 +210,64 @@ def sharded_batched_block_sparse_attention(
         out_specs=(hs, hs),
         check_rep=False,
     )(q, k, v, block_mask, stats_gate)
+
+
+def sharded_flash_decode(
+    q: jax.Array,               # (B, H, D) one token per sequence
+    cache_k: jax.Array,         # (B, Hkv, S, D)
+    cache_v: jax.Array,         # (B, Hkv, S, Dv)
+    plan,                       # DecodePlan, one layer's (B, Hkv, …) slice
+    valid: jax.Array,           # (B, S) bool slot validity
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Heads-sharded sparse decode over prebuilt DecodePlan tables.
+
+    Runs :func:`repro.kernels.decode_attn.flash_decode_plan` under
+    ``shard_map`` with every head-indexed operand — queries, the grouped KV
+    cache, and the scalar-prefetched ``(indices, counts, keep_heads)``
+    tables — partitioned over ``axis``; the slot-validity vector is
+    replicated.  Each device's kernel invocation sees only its local
+    kv-heads' tables, so the scalar-prefetch SMEM footprint stays O(local
+    heads) — the decode analogue of
+    :func:`sharded_batched_block_sparse_attention`, and the execution half
+    of the per-shard tables that ``build_decode_plan(kv_head_range=...)``
+    produces.  Head-parallel decode has no cross-shard reductions, so the
+    output equals the single-device plan path bitwise.
+
+    Requires ``head_shard_count(mesh, axis, H, Hkv) > 1``; callers (e.g.
+    :func:`repro.models.attention.attention_decode`) fall back to the
+    single-device :func:`flash_decode_plan` otherwise.  MLA latent caches
+    and the hybrid ring-buffer layouts never reach this function — they
+    decode densely (no DecodePlan is built for them), so the carve-out
+    lives at the dispatch site, not here.
+
+    Returns (B, H, Dv).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.decode_attn import DecodePlan, flash_decode_plan
+
+    if head_shard_count(mesh, axis, q.shape[1], cache_k.shape[1]) <= 1:
+        raise ValueError(
+            f"head counts {q.shape[1]}/{cache_k.shape[1]} do not shard over "
+            f"mesh axis {axis!r} of {mesh.shape}")
+
+    def body(q_l, k_l, v_l, idx_l, cnt_l, keep_l, valid_l):
+        return flash_decode_plan(q_l, k_l, v_l,
+                                 DecodePlan(idx_l, cnt_l, keep_l),
+                                 valid_l, impl=impl, interpret=interpret)
+
+    hs = P(None, axis)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(hs, hs, hs, hs, hs, hs, P(None, None)),
+        out_specs=hs,
+        check_rep=False,
+    )(q, cache_k, cache_v, plan.indices, plan.counts, plan.keep_heads, valid)
 
 
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:

@@ -24,6 +24,25 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(model_parallel: int = 0,
+                      data_parallel: int = 1) -> Mesh:
+    """(data, model) mesh for the serving launcher over the local devices.
+
+    ``model_parallel=0`` puts every device left over after ``data_parallel``
+    on the model axis.  With the model axis non-trivial, a rules context
+    built on this mesh makes the engine run sparse prefill *and* sparse
+    decode under ``shard_map`` with per-shard index tables (the mesh-active
+    routing rule — see ``repro.distributed.sharding.active_model_mesh``).
+    """
+    n = jax.device_count()
+    dp = max(data_parallel, 1)
+    mp = model_parallel or max(n // dp, 1)
+    if dp * mp > n:
+        raise ValueError(f"mesh (data={dp}, model={mp}) needs {dp * mp} "
+                         f"devices, have {n}")
+    return jax.make_mesh((dp, mp), ("data", "model"))
+
+
 # TPU v5e hardware constants for the roofline model (per chip).
 PEAK_FLOPS_BF16 = 197e12        # 197 TFLOP/s
 HBM_BW = 819e9                  # 819 GB/s

@@ -2,10 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --smoke --num-requests 4 --prompt-len 512 --method share
+
+``--model-parallel N`` (N > 1) serves under a heads-sharded (data, model)
+mesh: the engine's sparse prefill AND sparse decode hot paths run under
+``shard_map`` with per-shard index tables (the mesh-active routing rule —
+``repro.distributed.sharding.active_model_mesh``).  On a CPU container,
+combine with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get
+N placeholder devices; outputs are bitwise-identical to the unsharded
+serve.  ``--decode-sparse`` additionally reuses the prefill pattern
+dictionary for decode via the build-once DecodePlan.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -13,6 +23,8 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.data import DataConfig, sample
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.launch.mesh import make_serving_mesh
 from repro.models import build_model
 from repro.serving import EngineConfig, Request, ServingEngine
 
@@ -26,6 +38,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--method", default="share",
                     choices=["share", "dense", "vertical_slash", "flex"])
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "sparse", "chunked"],
+                    help="prefill attention backend (sparse = the Pallas "
+                    "kernel unconditionally, interpret mode off-TPU)")
+    ap.add_argument("--decode-sparse", action="store_true",
+                    help="decode-phase pattern sharing via the build-once "
+                    "DecodePlan (needs --method share)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="model-axis size of the serving mesh; > 1 runs "
+                    "prefill and decode heads-sharded under shard_map")
     ap.add_argument("--task", default="retrieval")
     args = ap.parse_args()
 
@@ -45,10 +67,23 @@ def main():
     engine = ServingEngine(
         model, params, sp,
         EngineConfig(method=args.method,
+                     attn_impl=args.attn_impl,
+                     decode_sparse=args.decode_sparse,
                      seq_buckets=(args.prompt_len,)))
-    t0 = time.time()
-    engine.serve(requests)
-    wall = time.time() - t0
+
+    # one mesh for the whole serve: prefill and decode trace under the same
+    # rules context, so both hot paths resolve their sharded twin
+    ctx = contextlib.ExitStack()
+    if args.model_parallel > 1:
+        mesh = make_serving_mesh(args.model_parallel)
+        ctx.enter_context(use_rules(ShardingRules(mesh)))
+        ctx.enter_context(mesh)
+        print(f"serving under mesh {dict(mesh.shape)}")
+
+    with ctx:
+        t0 = time.time()
+        engine.serve(requests)
+        wall = time.time() - t0
 
     for r in requests:
         print(f"req {r.uid}: prefill={r.prefill_s:.3f}s "

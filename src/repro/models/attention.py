@@ -27,7 +27,12 @@ from repro.core.patterns import (
     causal_block_mask,
     sliding_window_block_mask,
 )
-from repro.distributed.sharding import current_rules, shard
+from repro.distributed.sharding import (
+    active_model_mesh,
+    shard,
+    shardable_model_mesh,
+    sharded_flash_decode,
+)
 from repro.kernels import batched_sparse_attention_fn, sparse_attention_fn
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
 from repro.kernels.decode_attn import DecodePlan, flash_decode_plan
@@ -79,12 +84,11 @@ def resolve_attention_fn(attn_impl: str, block_size: int,
     """
     attn_impl = resolved_attn_impl(attn_impl)
     if attn_impl == "sparse":
-        rules = current_rules()
-        mesh = rules.mesh if (
-            rules is not None and "model" in rules.mesh.axis_names
-            and rules.mesh.shape["model"] > 1) else None
+        # mesh-active routing rule (shared with sparse decode — see
+        # repro.distributed.sharding.active_model_mesh)
         return batched_sparse_attention_fn(block_size=block_size,
-                                           width=width, mesh=mesh)
+                                           width=width,
+                                           mesh=active_model_mesh())
     if attn_impl == "kernel":
         base = make_attention_fn(block_size=block_size, impl="kernel")
     elif attn_impl == "ref":
@@ -306,9 +310,22 @@ def attention_decode(
 
     if plan is not None:
         # decode-phase pattern sharing (beyond paper): stream only the
-        # keep-set's kv blocks through the batched flash-decode kernel
-        out = flash_decode_plan(q.squeeze(2), cache_k, cache_v, plan, mask,
-                                impl=decode_impl)
+        # keep-set's kv blocks through the batched flash-decode kernel.
+        # Mesh-active routing rule (same predicate as resolve_attention_fn's
+        # prefill routing): under a sharding-rules context with a
+        # non-trivial "model" axis that the head counts divide, run the
+        # heads-sharded shard_map twin with per-shard tables.  Only the
+        # dense/vlm/moe GQA caches ever carry a plan — MLA latent caches and
+        # the hybrid ring-buffer layouts decode densely and never reach this
+        # dispatch (the documented carve-out; see ServingEngine.
+        # _supports_sparse_decode).
+        mesh = shardable_model_mesh(q.shape[1], hkv)
+        if mesh is not None:
+            out = sharded_flash_decode(q.squeeze(2), cache_k, cache_v, plan,
+                                       mask, mesh=mesh, impl=decode_impl)
+        else:
+            out = flash_decode_plan(q.squeeze(2), cache_k, cache_v, plan,
+                                    mask, impl=decode_impl)
         out = out[:, :, None, :]                  # (B, H, 1, hd)
         return common.gqa_out(params, out), (cache_k, cache_v)
 

@@ -277,7 +277,12 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     O(L·B·Hkv·NB) splash block tables derived once per batch from the
     prefill pattern dictionary (``repro.serving.decode_plan``); the scan
     slices one layer's tables per step — no O(L·B·H·S) token mask is ever
-    materialized.  ``prompt_lens``/``prefill_len`` mark right-pad cache
+    materialized.  When traced inside a sharding-rules context with a
+    non-trivial "model" axis, each plan-carrying attention layer resolves
+    the heads-sharded ``shard_map`` decode path automatically
+    (``repro.distributed.sharding.sharded_flash_decode``; MLA layers never
+    carry a plan and keep dense latent-cache decode under any mesh).
+    ``prompt_lens``/``prefill_len`` mark right-pad cache
     slots (positions in [prompt_len, prefill_len)) invalid so padded K/V is
     never attended (ignored by MLA layers, which keep the plain length
     mask)."""

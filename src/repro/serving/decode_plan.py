@@ -8,6 +8,17 @@ compact ``(indices, counts)`` block tables of size O(L·B·Hkv·NB) plus
 per-head block keep bits, built **once per served batch** right after
 prefill and reused unchanged by every decode step.
 
+Sharded construction
+--------------------
+Under a heads-sharded serving mesh (the mesh-active routing rule —
+:func:`repro.distributed.sharding.active_model_mesh`),
+:func:`build_sharded_decode_plan` builds each model-axis shard's tables
+independently via ``kv_head_range`` and lays the plan out with the Hkv axis
+sharded, so each device holds only its local O(local heads) tables and
+:func:`repro.distributed.sharding.sharded_flash_decode` consumes them
+shard-locally.  :func:`build_decode_plan_auto` picks between the global and
+sharded builders; both yield semantically identical plans.
+
 Plan lifetime vs cache growth
 -----------------------------
 The tables are built over the *grown* cache length (prefill bucket +
@@ -23,7 +34,9 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
@@ -35,7 +48,8 @@ from repro.serving.sparse_decode import decode_keep_blocks
 def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
                       prefill_len: int, cache_len: int,
                       width: Optional[int] = None,
-                      kv_head_range: Optional[Tuple[int, int]] = None
+                      kv_head_range: Optional[Tuple[int, int]] = None,
+                      keep_blocks=None,
                       ) -> DecodePlan:
     """Post-prefill pattern dictionary → decode block tables.
 
@@ -50,6 +64,10 @@ def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
         heads-sharded mesh each shard builds only its local kv-heads'
         tables, keeping the scalar-prefetch SMEM footprint O(local heads);
         the result equals the global plan sliced on the Hkv axis.
+      keep_blocks: optional precomputed ``decode_keep_blocks`` output
+        (L, B, H, NBp) — lets a caller building several kv-head ranges from
+        the same pattern dictionary (``build_sharded_decode_plan``) derive
+        the keep tensor once instead of per range.
 
     Returns a DecodePlan with (L, B, Hkv_local, …) leaves — the decode scan
     slices one layer per step.
@@ -65,7 +83,8 @@ def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
     hkv = max(cfg.num_kv_heads, 1)
     g = num_heads // hkv
 
-    keep = decode_keep_blocks(sp, sp_state, num_layers, num_heads)
+    keep = (keep_blocks if keep_blocks is not None
+            else decode_keep_blocks(sp, sp_state, num_layers, num_heads))
     batch = keep.shape[1]
     kh = keep.reshape(num_layers, batch, hkv, g, nbp)
     if kv_head_range is not None:
@@ -84,6 +103,84 @@ def build_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
     indices, counts = compact_block_mask(union, width=width)
     keep_heads = jnp.moveaxis(kh, 3, -1)        # (L, B, Hkv, NB, G)
     return DecodePlan(indices=indices, counts=counts, keep_heads=keep_heads)
+
+
+def build_sharded_decode_plan(sp: SharePrefill, sp_state, cfg: ModelConfig,
+                              *, prefill_len: int, cache_len: int,
+                              width: Optional[int] = None,
+                              mesh: Mesh, axis: str = "model") -> DecodePlan:
+    """Shard-aware plan construction for a heads-sharded serving mesh.
+
+    Builds each model-axis shard's tables independently via
+    ``build_decode_plan(kv_head_range=...)`` — the per-shard builds are the
+    computations a multi-host deployment would run host-locally, and each
+    equals the global plan sliced on the Hkv axis (tested invariant) — then
+    lays the assembled leaves out with the Hkv axis sharded over ``axis``,
+    so every device holds exactly its own shard's O(local heads) tables and
+    :func:`repro.distributed.sharding.sharded_flash_decode` consumes them
+    without any cross-device table traffic.
+
+    The plan survives :meth:`ServingEngine.grow_cache` exactly like the
+    unsharded one: ``cache_len`` covers the grown cache, blocks past
+    ``prefill_len`` form the dense recent tail in every shard's tables, and
+    advancing ``pos`` only changes the slot-validity vector.
+
+    Requires ``head_shard_count(mesh, axis, num_heads, num_kv_heads) > 1``
+    (use :func:`build_decode_plan_auto` for the policy fallback).
+    """
+    from repro.distributed.sharding import head_shard_count
+
+    hkv = max(cfg.num_kv_heads, 1)
+    n = head_shard_count(mesh, axis, cfg.num_heads, hkv)
+    if n <= 1:
+        raise ValueError(
+            f"head counts {cfg.num_heads}/{hkv} do not shard over mesh axis "
+            f"{axis!r} of {mesh.shape}")
+    local = hkv // n
+    # derive the keep tensor from the pattern dictionary ONCE; each shard's
+    # build then only does its own range's union/compaction work
+    keep = decode_keep_blocks(sp, sp_state, cfg.num_layers, cfg.num_heads)
+    shards = [
+        build_decode_plan(sp, sp_state, cfg, prefill_len=prefill_len,
+                          cache_len=cache_len, width=width,
+                          kv_head_range=(i * local, local),
+                          keep_blocks=keep)
+        for i in range(n)
+    ]
+
+    def place(leaves):
+        glob = jnp.concatenate(leaves, axis=2)       # (L, B, Hkv, …)
+        spec = P(*([None, None, axis] + [None] * (glob.ndim - 3)))
+        return jax.device_put(glob, NamedSharding(mesh, spec))
+
+    return DecodePlan(
+        indices=place([s.indices for s in shards]),
+        counts=place([s.counts for s in shards]),
+        keep_heads=place([s.keep_heads for s in shards]))
+
+
+def build_decode_plan_auto(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
+                           prefill_len: int, cache_len: int,
+                           width: Optional[int] = None) -> DecodePlan:
+    """Mesh-active plan construction policy (the engine's entry point).
+
+    When a sharding-rules context with a non-trivial ``model`` axis is
+    active *and* the head counts divide it, tables are built per kv-head
+    shard and laid out sharded (:func:`build_sharded_decode_plan`), matching
+    the decode execution path :func:`repro.models.attention.attention_decode`
+    resolves under the same rule; otherwise the global single-device plan is
+    built.  Either way the result is semantically the same DecodePlan.
+    """
+    from repro.distributed.sharding import shardable_model_mesh
+
+    hkv = max(cfg.num_kv_heads, 1)
+    mesh = shardable_model_mesh(cfg.num_heads, hkv)
+    if mesh is not None:
+        return build_sharded_decode_plan(
+            sp, sp_state, cfg, prefill_len=prefill_len, cache_len=cache_len,
+            width=width, mesh=mesh)
+    return build_decode_plan(sp, sp_state, cfg, prefill_len=prefill_len,
+                             cache_len=cache_len, width=width)
 
 
 def plan_traffic_fraction(plan: DecodePlan) -> float:

@@ -10,7 +10,21 @@ memory-bound per EXPERIMENTS.md §Roofline).
 
 Requests are padded to a block multiple, batched up to ``max_batch``, and
 served by two jitted programs (prefill_step, decode_step) shared across
-request shapes via bucketing.  For the transformer families, per-request
+request shapes via bucketing.
+
+**Mesh-active routing:** serving inside a sharding-rules context whose
+"model" axis is non-trivial (``distributed.sharding.active_model_mesh``)
+runs both hot paths heads-sharded under ``shard_map`` — sparse prefill via
+``resolve_attention_fn("sparse")`` and sparse decode via
+``attention_decode`` → ``sharded_flash_decode`` — with the DecodePlan
+tables built per kv-head shard (``decode_plan.build_decode_plan_auto``).
+Outputs are bitwise-identical to the unmeshed serve; the compiled-program
+caches key on the rules-context identity.  MLA latent caches and the
+non-transformer families never build a DecodePlan
+(``_supports_sparse_decode``), so they decode densely under any mesh — the
+documented carve-out.
+
+For the transformer families, per-request
 prompt lengths are threaded into prefill (last-logits gathered at each
 row's real last token, so the first sampled token never conditions on
 right-pad) and, for GQA caches, into decode as slot-validity so right-pad
@@ -32,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
+from repro.distributed.sharding import current_rules
 from repro.models.api import Model
 from repro.serving import decode_plan as dplan
 from repro.serving.sampling import SamplingConfig, sample_token
@@ -155,7 +170,13 @@ class ServingEngine:
         the first sampled token is conditioned on the prompt's real last
         token, never on right-pad."""
         ragged = self._transformer_family()
-        key = (batch, seq, width, ragged)
+        # the sharding-rules context shapes the traced program (shard()
+        # constraints on any axis, plus the mesh-active shard_map routing —
+        # distributed.sharding.active_model_mesh), so the compiled-program
+        # cache keys on the rules object itself (None when unmeshed): a
+        # program traced under one context is never replayed under a
+        # different one, including data-parallel-only or overridden rules
+        key = (batch, seq, width, ragged, current_rules())
         if key not in self._prefill_cache:
             kwargs = {} if width is None else {"attn_width": width}
 
@@ -179,10 +200,19 @@ class ServingEngine:
         # only the non-MLA transformer families consume per-request length
         # masks / decode plans; MLA's latent-cache decode and the other
         # families keep the plain length-mask signature (pads attended —
-        # the remaining documented simplification for those caches)
-        thread_lens = (self.model.cfg.family in ("dense", "vlm", "moe")
+        # the remaining documented simplification for those caches).
+        # Mesh-active decode routing: when the serve runs inside a
+        # sharding-rules context with a non-trivial "model" axis, the jitted
+        # sparse step traces through distributed.sharding.
+        # sharded_flash_decode (per-shard tables under shard_map) instead of
+        # the single-device flash_decode_plan — resolved automatically at
+        # trace time by attention_decode, mirroring prefill's
+        # resolve_attention_fn("sparse") routing, so the cache key carries
+        # the rules-context identity (same rationale as _prefill_fn).
+        thread_lens = (self._transformer_family()
                        and not self.model.cfg.mla.enabled)
-        key = (batch, seq, cache_len, sparse, thread_lens)
+        key = (batch, seq, cache_len, sparse, thread_lens,
+               current_rules())
         if key not in self._decode_cache:
             if sparse:
                 # the jitted step consumes the prebuilt DecodePlan tables —
@@ -315,7 +345,10 @@ class ServingEngine:
                       and self._supports_sparse_decode())
         plan = None
         if use_sparse:
-            plan = dplan.build_decode_plan(
+            # under a heads-sharded mesh each shard's tables are built
+            # locally (kv_head_range) and laid out sharded — the execution
+            # side is resolved by the decode step itself
+            plan = dplan.build_decode_plan_auto(
                 self.sp, result.sp_state, self.model.cfg,
                 prefill_len=seq, cache_len=seq + extra)
             total, streamed = dplan.plan_block_counts(plan)

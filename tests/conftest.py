@@ -1,9 +1,28 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the single real CPU device; only launch/dryrun.py forces 512 placeholder
-devices (in its own process)."""
+"""Shared fixtures + marker registration.
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see the single real
+CPU device; only the ``subprocess``-marked tier forces placeholder devices
+(each in its own python process, e.g. the 2-device mesh conformance tests
+and launch/dryrun.py's 512-device lowering).
+
+Markers (also registered in pyproject.toml):
+  slow        long-running test (model training, large lowering)
+  subprocess  spawns a fresh python/JAX process (multi-device CPU-mesh
+              tiers) — select with ``-m subprocess``, exclude with
+              ``-m "not subprocess"``; scripts/run_tests.sh runs the
+              default suite first and this tier second.
+"""
 import jax
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (training, large lowering)")
+    config.addinivalue_line(
+        "markers", "subprocess: spawns a fresh python/JAX process "
+        "(forced multi-device CPU-mesh tiers)")
 
 
 @pytest.fixture(scope="session")

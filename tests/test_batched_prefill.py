@@ -219,6 +219,7 @@ def test_fused_layer_matches_per_sample_vmap_path():
 # Sharded tables (forced 2-device CPU mesh, subprocess)
 # --------------------------------------------------------------------------
 
+@pytest.mark.subprocess
 def test_shard_map_matches_single_device():
     code = textwrap.dedent("""
         import os

@@ -35,7 +35,7 @@ DECODE = {
     "points": [
         {"seq": 512, "cache_len": 640, "tokens_per_s_dense": 100.0,
          "tokens_per_s_sparse": 150.0, "decode_blocks_total": 180,
-         "decode_blocks_skipped": 80},
+         "decode_blocks_skipped": 80, "decode_traffic_fraction": 0.55},
     ],
 }
 
@@ -75,6 +75,98 @@ def test_tokens_regression_and_missing_point_fail():
     fresh2["points"] = []
     errs2 = check_bench.compare_decode(DECODE, fresh2)
     assert any("missing" in e for e in errs2)
+
+
+def test_decode_ratio_gate():
+    """The sparse/dense decode tokens/s ratio is gated relatively: noise
+    that cancels in the ratio passes, a real ratio collapse fails."""
+    fresh = copy.deepcopy(DECODE)
+    # both columns halve: absolute tokens gate (tol 0.6) and ratio gate
+    # (unchanged ratio) both pass
+    fresh["points"][0]["tokens_per_s_dense"] = 50.0
+    fresh["points"][0]["tokens_per_s_sparse"] = 75.0
+    assert check_bench.compare_decode(DECODE, fresh) == []
+    # sparse alone erodes below (1 - 0.25) x the baseline ratio of 1.5 —
+    # but stays above the loose absolute tokens gate, so only the ratio
+    # gate catches it
+    fresh["points"][0]["tokens_per_s_dense"] = 100.0
+    fresh["points"][0]["tokens_per_s_sparse"] = 80.0
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert errs and all("decode tokens/s ratio regressed" in e
+                        for e in errs)
+    # a loosened tolerance admits the same drop
+    assert check_bench.compare_decode(DECODE, fresh, tol_ratio=0.5) == []
+    # ratio disappearing entirely is always a regression
+    fresh2 = copy.deepcopy(DECODE)
+    del fresh2["points"][0]["tokens_per_s_sparse"]
+    errs2 = check_bench.compare_decode(DECODE, fresh2)
+    assert any("ratio disappeared" in e for e in errs2)
+
+
+def test_decode_traffic_fraction_gate():
+    """The plan traffic fraction is deterministic — increases beyond the
+    absolute tolerance fail, small jitter and decreases pass."""
+    fresh = copy.deepcopy(DECODE)
+    fresh["points"][0]["decode_traffic_fraction"] = 0.58    # within 0.05
+    assert check_bench.compare_decode(DECODE, fresh) == []
+    fresh["points"][0]["decode_traffic_fraction"] = 0.70    # sparsity lost
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("decode_traffic_fraction regressed" in e for e in errs)
+    fresh["points"][0].pop("decode_traffic_fraction")
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("decode_traffic_fraction disappeared" in e for e in errs)
+    # a baseline without the field gates nothing (old artifacts)
+    base = copy.deepcopy(DECODE)
+    base["points"][0].pop("decode_traffic_fraction")
+    assert check_bench.compare_decode(base, fresh) == []
+
+
+def test_baseline_points_gated_only_when_fresh_records_them():
+    """A fresh artifact WITH baseline rows is gated (missing row / lost
+    width column = regression); a share-only regeneration without them
+    skips the section."""
+    base = copy.deepcopy(PREFILL)
+    base["baseline_points"] = [
+        {"seq": 512, "method": "flex", "width_cap": 3,
+         "truncated_row_fraction": 0.1, "grid_step_ratio": 3.0,
+         "tokens_per_s_sparse_count_aware": 500.0},
+        {"seq": 512, "method": "vertical_slash", "width_cap": 6,
+         "truncated_row_fraction": 0.1, "grid_step_ratio": 2.0,
+         "tokens_per_s_sparse_count_aware": 400.0},
+    ]
+    # share-only fresh artifact: baseline section skipped
+    assert check_bench.compare_prefill(base, PREFILL) == []
+    fresh = copy.deepcopy(base)
+    assert check_bench.compare_prefill(base, fresh) == []
+    # a lost row is a coverage regression
+    fresh["baseline_points"] = fresh["baseline_points"][:1]
+    errs = check_bench.compare_prefill(base, fresh)
+    assert any("baseline vertical_slash" in e and "missing" in e
+               for e in errs)
+    # a row that lost its width accounting fails too
+    fresh2 = copy.deepcopy(base)
+    del fresh2["baseline_points"][0]["truncated_row_fraction"]
+    fresh2["baseline_points"][1]["grid_step_ratio"] = 1.0
+    errs2 = check_bench.compare_prefill(base, fresh2)
+    assert any("truncated_row_fraction disappeared" in e for e in errs2)
+    assert any("baseline vertical_slash" in e and "regressed" in e
+               for e in errs2)
+
+
+def test_committed_prefill_baseline_rows_record_width():
+    """The committed BENCH_prefill.json records count-aware width
+    accounting for the vertical-slash / flex baseline rows — the ROADMAP
+    'baselines still measure uncapped sparse prefill' item, retired."""
+    base = json.load(open(os.path.join(REPO, "BENCH_prefill.json")))
+    rows = base.get("baseline_points", [])
+    assert rows, "no baseline_points in committed BENCH_prefill.json"
+    assert {r["method"] for r in rows} == {"vertical_slash", "flex"}
+    for r in rows:
+        assert r["width_cap"] >= 1
+        assert 0.0 <= r["truncated_row_fraction"] <= 1.0
+        # the capped sparse measurement is recorded alongside
+        assert r["tokens_per_s_sparse_count_aware"] > 0
+        assert r["grid_step_ratio"] > 0
 
 
 def test_committed_baselines_self_check_clean(tmp_path):

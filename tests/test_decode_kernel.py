@@ -1,18 +1,19 @@
-"""Flash-decode Pallas kernels vs the grouped-einsum / ref oracles."""
+"""Single-sample flash-decode Pallas kernels vs the grouped-einsum oracle.
+
+The batched DecodePlan serving path (``flash_decode_plan`` and friends) is
+covered by the table-driven conformance harness in
+``test_decode_conformance.py`` — GQA ratios, ragged prompts, empty
+keep-sets, bf16, cache growth, kv-head-range slices, and the sharded
+execution tier all live there."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.decode_attn import (
-    DecodePlan,
-    decode_plan_einsum,
     flash_decode,
-    flash_decode_plan,
     flash_decode_sparse,
-    flash_decode_sparse_batched,
 )
-from repro.kernels.indices import compact_block_mask
 
 KEYS = jax.random.split(jax.random.PRNGKey(11), 4)
 
@@ -92,140 +93,3 @@ def test_flash_decode_sparse_full_mask_equals_dense():
     out_d = flash_decode(q, k, v, mask, block_kv=bs)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d),
                                atol=2e-6, rtol=2e-6)
-
-
-# --------------------------------------------------------------------------
-# Batched serving kernel: (B, Hkv, W) grid over prebuilt DecodePlan tables
-# --------------------------------------------------------------------------
-
-def _plan_oracle(q, ck, cv, keep_heads, valid):
-    """Token-level masked-softmax oracle for the DecodePlan semantics.
-    Rows with no visible key emit zeros (kernel contract)."""
-    b, h, d = q.shape
-    hkv, s = ck.shape[1], ck.shape[2]
-    g = h // hkv
-    nb = keep_heads.shape[2]
-    kx = jnp.repeat(ck, g, axis=1)
-    vx = jnp.repeat(cv, g, axis=1)
-    logits = jnp.einsum("bhd,bhsd->bhs", jnp.asarray(q, jnp.float32),
-                        jnp.asarray(kx, jnp.float32)) / (d ** 0.5)
-    km = jnp.repeat(jnp.moveaxis(keep_heads, -1, -2), s // nb,
-                    axis=-1).reshape(b, h, s)
-    ok = km & valid[:, None, :]
-    logits = jnp.where(ok, logits, -jnp.inf)
-    m = jnp.max(logits, -1, keepdims=True)
-    m = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.where(ok, jnp.exp(logits - m), 0.0)
-    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
-    return jnp.einsum("bhs,bhsd->bhd", p / denom,
-                      jnp.asarray(vx, jnp.float32))
-
-
-def _tables(keep_heads):
-    union = jnp.any(keep_heads, axis=-1)
-    indices, counts = compact_block_mask(union)
-    return indices, counts
-
-
-def _rand_case(b=2, h=8, hkv=2, s=256, d=32, bs=64, keep_p=0.5, seed=3):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
-    g, nb = h // hkv, s // bs
-    q = jax.random.normal(ks[0], (b, h, d))
-    ck = jax.random.normal(ks[1], (b, hkv, s, d))
-    cv = jax.random.normal(ks[2], (b, hkv, s, d))
-    keep = jax.random.bernoulli(ks[3], keep_p, (b, hkv, nb, g))
-    keep = keep.at[:, :, -1, :].set(True)        # dense recent tail
-    return q, ck, cv, keep
-
-
-def test_batched_sparse_matches_oracle_gqa_ragged():
-    """Batched kernel vs the grouped-einsum oracle on a GQA shape with
-    ragged per-request prompt lengths (right-pad slots invalid)."""
-    q, ck, cv, keep = _rand_case()
-    s = ck.shape[2]
-    # request 0 only wrote 150 slots, request 1 all of them
-    valid = jnp.arange(s)[None, :] < jnp.asarray([150, s])[:, None]
-    idx, cnt = _tables(keep)
-    out = flash_decode_sparse_batched(q, ck, cv, idx, cnt, keep, valid)
-    ref = _plan_oracle(q, ck, cv, keep, valid)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=2e-5, rtol=2e-5)
-    # the einsum fallback implements the identical contract
-    out_e = decode_plan_einsum(q, ck, cv, keep, valid)
-    np.testing.assert_allclose(np.asarray(out_e), np.asarray(ref),
-                               atol=2e-5, rtol=2e-5)
-
-
-def test_batched_sparse_empty_kv_head_emits_zeros():
-    """A kv-head with an empty keep-set (counts == 0) must emit zeros for
-    its whole query group while other heads stay exact."""
-    q, ck, cv, keep = _rand_case()
-    b, hkv = keep.shape[:2]
-    g = q.shape[1] // hkv
-    d = q.shape[-1]
-    keep = keep.at[:, 0].set(False)
-    valid = jnp.ones((b, ck.shape[2]), bool)
-    idx, cnt = _tables(keep)
-    assert int(cnt[0, 0]) == 0
-    out = flash_decode_sparse_batched(q, ck, cv, idx, cnt, keep, valid)
-    og = np.asarray(out).reshape(b, hkv, g, d)
-    assert (og[:, 0] == 0).all()
-    ref = np.asarray(_plan_oracle(q, ck, cv, keep, valid)
-                     ).reshape(b, hkv, g, d)
-    np.testing.assert_allclose(og[:, 1:], ref[:, 1:], atol=2e-5, rtol=2e-5)
-
-
-def test_batched_sparse_full_keep_matches_dense_flash_decode():
-    """With a full keep-set the batched kernel equals the dense-grid
-    single-sample kernel (fp tolerance)."""
-    q, ck, cv, keep = _rand_case(keep_p=1.0)
-    keep = jnp.ones_like(keep)
-    b, s = q.shape[0], ck.shape[2]
-    valid = jnp.ones((b, s), bool)
-    idx, cnt = _tables(keep)
-    out = flash_decode_sparse_batched(q, ck, cv, idx, cnt, keep, valid)
-    for i in range(b):
-        dense = flash_decode(q[i], ck[i], cv[i],
-                             jnp.ones((q.shape[1], s), bool), block_kv=64)
-        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(dense),
-                                   atol=2e-6, rtol=2e-6)
-
-
-def test_batched_sparse_decode_after_grow_cache():
-    """Tables built over the grown cache (prefill blocks + dense recent
-    tail) stay exact when decoding at a post-prefill position."""
-    q, ck, cv, keep = _rand_case(s=256)
-    b, hkv, nbp, g = keep.shape
-    bs = 256 // nbp
-    grow = 64                                     # one extra block
-    ck = jnp.pad(ck, ((0, 0), (0, 0), (0, grow), (0, 0)))
-    cv = jnp.pad(cv, ((0, 0), (0, 0), (0, grow), (0, 0)))
-    # tail block of the grown region: kept densely for every head
-    keep = jnp.concatenate(
-        [keep, jnp.ones((b, hkv, grow // bs, g), bool)], axis=2)
-    s = ck.shape[2]
-    pos = 256 + 20                                # decoding inside the tail
-    plens = jnp.asarray([150, 256])
-    slots = jnp.arange(s)[None, :]
-    valid = ((slots <= pos)
-             & ((slots < plens[:, None]) | (slots >= 256)))
-    idx, cnt = _tables(keep)
-    out = flash_decode_sparse_batched(q, ck, cv, idx, cnt, keep, valid)
-    ref = _plan_oracle(q, ck, cv, keep, valid)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=2e-5, rtol=2e-5)
-
-
-def test_flash_decode_plan_dispatch_backends_agree():
-    """`flash_decode_plan` backends (kernel / einsum) agree; `auto` resolves
-    to one of them on any backend."""
-    q, ck, cv, keep = _rand_case(seed=9)
-    valid = jnp.ones((q.shape[0], ck.shape[2]), bool)
-    idx, cnt = _tables(keep)
-    plan = DecodePlan(idx, cnt, keep)
-    out_k = flash_decode_plan(q, ck, cv, plan, valid, impl="kernel")
-    out_e = flash_decode_plan(q, ck, cv, plan, valid, impl="einsum")
-    out_a = flash_decode_plan(q, ck, cv, plan, valid, impl="auto")
-    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_e),
-                               atol=2e-5, rtol=2e-5)
-    assert np.asarray(out_a).shape == np.asarray(out_k).shape

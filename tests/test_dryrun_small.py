@@ -78,6 +78,7 @@ def test_attn_impl_parity_flags_cpu_divergence():
 
 
 @pytest.mark.slow
+@pytest.mark.subprocess
 def test_dryrun_pair_in_subprocess_8dev():
     """Full lower+compile of a smoke-scale arch on an 8-device forced-host
     mesh — validates the whole steps/param-spec/mesh pipeline without the
