@@ -25,12 +25,21 @@ point regresses:
     (absolute) — a deterministic counter, an increase is real sparsity
     loss.
 
-Points are matched by ``seq`` (and ``cache_len`` for decode); a fresh
-artifact missing a baseline point is a regression (coverage shrank), extra
-fresh points are fine.  The prefill ``baseline_points`` rows (vertical-
-slash / flex count-aware width accounting) are gated the same way whenever
-the fresh artifact records any — a share-only regeneration (``--run``)
-omits them legitimately and skips that section.
+  * **serving** (``BENCH_serving.json``): the continuous-batching
+    invariants — greedy tokens must bit-match between the scheduler and
+    the batch path, the scheduler's **slot occupancy** must exceed the
+    batch path's (``--min-occupancy-gain``, a deterministic counter) and
+    not drop vs baseline, and the scheduler's **mean TTFT** must improve
+    on batch-at-a-time (``--max-ttft-ratio``; wall-clock, so the ceiling
+    is forgiving) and not erode vs the baseline ratio.
+
+Points are matched by ``seq`` (and ``cache_len`` for decode, ``mode`` for
+serving); a fresh artifact missing a baseline point is a regression
+(coverage shrank), extra fresh points are fine.  The prefill
+``baseline_points`` rows (vertical-slash / flex count-aware width
+accounting) are gated the same way whenever the fresh artifact records any
+— a share-only regeneration (``--run``) omits them legitimately and skips
+that section.
 
 Usage:
   python scripts/check_bench.py                       # self-check baselines
@@ -51,6 +60,7 @@ from typing import Dict, List
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BASELINE_PREFILL = os.path.join(REPO_ROOT, "BENCH_prefill.json")
 BASELINE_DECODE = os.path.join(REPO_ROOT, "BENCH_decode.json")
+BASELINE_SERVING = os.path.join(REPO_ROOT, "BENCH_serving.json")
 
 TOL_TOKENS = 0.6        # relative tokens/s drop allowed (CPU noise)
 TOL_BLOCKS = 0.05       # absolute skipped-fraction drop allowed
@@ -62,6 +72,12 @@ MIN_GRID_RATIO = 2.0    # grid-ratio floor, enforced at the longest seq only
 # its tolerance is tight like the skipped-blocks one
 TOL_DECODE_RATIO = 0.25    # relative sparse/dense tokens/s ratio drop
 TOL_TRAFFIC = 0.05         # absolute plan-traffic-fraction increase
+# serving gates: slot occupancy is a deterministic step counter (tight);
+# TTFT is wall-clock on a shared container, so the scheduler-vs-batch
+# ratio ceiling is forgiving but must stay a real improvement (< 1)
+MIN_OCCUPANCY_GAIN = 0.05  # scheduler occupancy − batch occupancy floor
+MAX_TTFT_RATIO = 0.95      # scheduler/batch mean-TTFT ceiling
+TOL_TTFT = 0.5             # relative TTFT-ratio erosion allowed vs baseline
 
 
 def _load(path: str) -> dict:
@@ -204,13 +220,75 @@ def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
     return errors
 
 
+def compare_serving(base: dict, fresh: dict, *,
+                    tol_tokens: float = TOL_TOKENS,
+                    tol_blocks: float = TOL_BLOCKS,
+                    min_occupancy_gain: float = MIN_OCCUPANCY_GAIN,
+                    max_ttft_ratio: float = MAX_TTFT_RATIO,
+                    tol_ttft: float = TOL_TTFT) -> List[str]:
+    """Continuous-batching serving gates (``BENCH_serving.json``).
+
+    Absolute invariants on the *fresh* artifact: the scheduler and the
+    batch path must produce bit-identical greedy tokens, the scheduler's
+    slot occupancy must beat the batch path's by ``min_occupancy_gain``
+    (occupancy is a deterministic slot-step counter), and the scheduler's
+    mean TTFT must improve on batch-at-a-time (ratio < ``max_ttft_ratio``).
+    Relative gates vs baseline: the scheduler's occupancy may not drop by
+    more than ``tol_blocks`` (absolute), the TTFT ratio may not erode by
+    more than ``tol_ttft`` (relative), and throughput columns follow the
+    loose ``tol_tokens`` rule.
+    """
+    errors: List[str] = []
+    base_pts = _by_key(base.get("points", []), ("mode",))
+    fresh_pts = _by_key(fresh.get("points", []), ("mode",))
+    for key, bp in base_pts.items():
+        where = f"serving mode={key[0]}"
+        fp = fresh_pts.get(key)
+        if fp is None:
+            errors.append(f"{where}: point missing from fresh artifact")
+            continue
+        if key[0] == "scheduler":
+            bo = float(bp.get("slot_occupancy", 0.0))
+            fo = float(fp.get("slot_occupancy", 0.0))
+            if fo < bo - tol_blocks:
+                errors.append(f"{where}: slot_occupancy regressed "
+                              f"{bo:.3f} -> {fo:.3f}")
+        _check_tokens(bp, fp, where, tol_tokens, errors)
+
+    fs = fresh.get("scheduler_vs_batch", {})
+    if not fs:
+        errors.append("serving: scheduler_vs_batch summary missing")
+        return errors
+    if not fs.get("greedy_tokens_match", False):
+        errors.append("serving: scheduler tokens no longer bit-match the "
+                      "batch-at-a-time serve (greedy conformance broken)")
+    gain = float(fs.get("occupancy_gain", 0.0))
+    if gain < min_occupancy_gain:
+        errors.append(f"serving: occupancy_gain {gain:.3f} below the "
+                      f"{min_occupancy_gain:.2f} floor (scheduler no "
+                      f"longer keeps slots busier than batch-at-a-time)")
+    ratio = float(fs.get("ttft_mean_ratio", 1.0))
+    if ratio > max_ttft_ratio:
+        errors.append(f"serving: ttft_mean_ratio {ratio:.2f} above the "
+                      f"{max_ttft_ratio:.2f} ceiling (scheduler TTFT no "
+                      f"longer improves on batch-at-a-time)")
+    bs = base.get("scheduler_vs_batch", {})
+    br = float(bs.get("ttft_mean_ratio", 0.0))
+    if br > 0 and ratio > br * (1.0 + tol_ttft):
+        errors.append(f"serving: ttft_mean_ratio eroded {br:.2f} -> "
+                      f"{ratio:.2f} (allowed {tol_ttft:.0%})")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--prefill", help="fresh BENCH_prefill.json "
                     "(default: the committed baseline — a self-check)")
     ap.add_argument("--decode", help="fresh BENCH_decode.json")
+    ap.add_argument("--serving", help="fresh BENCH_serving.json")
     ap.add_argument("--baseline-prefill", default=BASELINE_PREFILL)
     ap.add_argument("--baseline-decode", default=BASELINE_DECODE)
+    ap.add_argument("--baseline-serving", default=BASELINE_SERVING)
     ap.add_argument("--run", action="store_true",
                     help="regenerate fresh artifacts via the benchmarks "
                     "(slow: trains/loads the bench model) before gating")
@@ -220,6 +298,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tol-decode-ratio", type=float,
                     default=TOL_DECODE_RATIO)
     ap.add_argument("--tol-traffic", type=float, default=TOL_TRAFFIC)
+    ap.add_argument("--min-occupancy-gain", type=float,
+                    default=MIN_OCCUPANCY_GAIN)
+    ap.add_argument("--max-ttft-ratio", type=float, default=MAX_TTFT_RATIO)
+    ap.add_argument("--tol-ttft", type=float, default=TOL_TTFT)
     args = ap.parse_args(argv)
 
     if args.run:
@@ -230,17 +312,23 @@ def main(argv=None) -> int:
         out_dir = tempfile.mkdtemp(prefix="bench_fresh_")
         import benchmarks.bench_decode_sharing as bd
         import benchmarks.bench_latency as bl
+        import benchmarks.bench_serving as bsrv
         bl.ARTIFACT_PATH = os.path.join(out_dir, "BENCH_prefill.json")
         bd.ARTIFACT_PATH = os.path.join(out_dir, "BENCH_decode.json")
+        bsrv.ARTIFACT_PATH = os.path.join(out_dir, "BENCH_serving.json")
         bl.run(methods=("share",))
         bd.run()
+        bsrv.run()
         args.prefill = bl.ARTIFACT_PATH
         args.decode = bd.ARTIFACT_PATH
+        args.serving = bsrv.ARTIFACT_PATH
 
     errors: List[str] = []
     for name, fresh_path, base_path, cmp_fn in (
             ("prefill", args.prefill, args.baseline_prefill, compare_prefill),
-            ("decode", args.decode, args.baseline_decode, compare_decode)):
+            ("decode", args.decode, args.baseline_decode, compare_decode),
+            ("serving", args.serving, args.baseline_serving,
+             compare_serving)):
         if not os.path.exists(base_path):
             print(f"[check_bench] no {name} baseline at {base_path}, "
                   f"skipping")
@@ -248,10 +336,15 @@ def main(argv=None) -> int:
         base = _load(base_path)
         fresh = _load(fresh_path) if fresh_path else base
         tag = "self-check" if not fresh_path else fresh_path
-        extra = ({"min_grid_ratio": args.min_grid_ratio}
-                 if cmp_fn is compare_prefill
-                 else {"tol_ratio": args.tol_decode_ratio,
-                       "tol_traffic": args.tol_traffic})
+        if cmp_fn is compare_prefill:
+            extra = {"min_grid_ratio": args.min_grid_ratio}
+        elif cmp_fn is compare_decode:
+            extra = {"tol_ratio": args.tol_decode_ratio,
+                     "tol_traffic": args.tol_traffic}
+        else:
+            extra = {"min_occupancy_gain": args.min_occupancy_gain,
+                     "max_ttft_ratio": args.max_ttft_ratio,
+                     "tol_ttft": args.tol_ttft}
         errs = cmp_fn(base, fresh, tol_tokens=args.tol_tokens,
                       tol_blocks=args.tol_blocks, **extra)
         print(f"[check_bench] {name} vs {tag}: "

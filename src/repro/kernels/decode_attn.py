@@ -62,6 +62,15 @@ class DecodePlan(NamedTuple):
 
     Everything is O(B·Hkv·NB) per layer — the O(B·H·S) token keep-mask the
     engine used to thread through every decode step is gone.
+
+    The batch axis is a set of *slots* under the continuous-batching
+    scheduler: the ``valid`` mask the kernels consume is per-row (each slot
+    is at its own decode position), table rows are spliced in-flight when a
+    slot is refilled (``repro.serving.decode_plan.update_plan_slot``), and
+    an unoccupied slot's empty table (``counts == 0``, keep bits all False)
+    makes it inert — the kernel's empty-keep contract emits exact zeros and
+    the einsum fallback masks everything, so occupied rows are bitwise
+    independent of slot churn.
     """
 
     indices: jnp.ndarray

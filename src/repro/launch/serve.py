@@ -1,7 +1,18 @@
-"""Serving launcher: batched long-context requests through the engine.
+"""Serving launcher: long-context requests through the engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --smoke --num-requests 4 --prompt-len 512 --method share
+
+``--scheduler`` serves through the slot-based continuous-batching
+scheduler (per-slot decode positions, EOS early exit, in-flight slot
+refill with DecodePlan splicing) instead of batch-at-a-time grouping;
+``--arrival-rate R`` simulates a Poisson-ish open-loop arrival process by
+spacing request arrivals 1/R seconds apart (the scheduler admits each
+request only once it has "arrived"; the batch path records the arrival
+only in the queue/TTFT metrics).  ``--max-new`` accepts a comma-separated
+list cycled over requests to build mixed-length workloads — the traffic
+shape where continuous batching wins (short rows stop idling behind the
+batch's longest member).
 
 ``--model-parallel N`` (N > 1) serves under a heads-sharded (data, model)
 mesh: the engine's sparse prefill AND sparse decode hot paths run under
@@ -35,7 +46,19 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--num-requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=512)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-new", default="8",
+                    help="tokens to generate; a comma-separated list is "
+                    "cycled over requests (mixed-length workload)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="slot-based continuous batching (per-slot decode "
+                    "positions, EOS early exit, in-flight slot refill) "
+                    "instead of batch-at-a-time")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="simulated request arrivals per second (0 = all "
+                    "requests arrive at once); the scheduler honours "
+                    "arrival times for admission")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="decode slots (scheduler) / batch size (legacy)")
     ap.add_argument("--method", default="share",
                     choices=["share", "dense", "vertical_slash", "flex"])
     ap.add_argument("--attn-impl", default="auto",
@@ -58,9 +81,12 @@ def main():
 
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                       global_batch=1, task=args.task)
+    max_new = [int(m) for m in str(args.max_new).split(",")]
+    gap = 1.0 / args.arrival_rate if args.arrival_rate > 0 else 0.0
     requests = [
         Request(uid=i, prompt=sample(dcfg, i)["tokens"],
-                max_new_tokens=args.max_new)
+                max_new_tokens=max_new[i % len(max_new)],
+                arrival_s=i * gap)
         for i in range(args.num_requests)
     ]
 
@@ -69,6 +95,8 @@ def main():
         EngineConfig(method=args.method,
                      attn_impl=args.attn_impl,
                      decode_sparse=args.decode_sparse,
+                     max_batch=args.max_batch,
+                     scheduler=args.scheduler,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -86,10 +114,20 @@ def main():
         wall = time.time() - t0
 
     for r in requests:
-        print(f"req {r.uid}: prefill={r.prefill_s:.3f}s "
-              f"decode={r.decode_s:.3f}s out={r.output_tokens[:8].tolist()} "
+        print(f"req {r.uid}: queue={r.queue_s:.3f}s ttft={r.ttft_s:.3f}s "
+              f"prefill={r.prefill_s:.3f}s decode={r.decode_s:.3f}s "
+              f"({r.decode_tokens_per_s:.1f} tok/s, {r.finish_reason}) "
+              f"out={r.output_tokens[:8].tolist()} "
               f"stats={r.pattern_stats}")
-    print(f"total wall {wall:.2f}s, method={args.method}")
+    # the engine silently falls back to batch-at-a-time for MLA / the
+    # non-transformer families — label the mode by what actually ran
+    mode = ("scheduler" if args.scheduler and engine._supports_scheduler()
+            else "batch")
+    if args.scheduler and mode == "batch":
+        print("note: --scheduler requested but this family has no per-slot "
+              "cache layout; served batch-at-a-time (dense carve-out)")
+    print(f"total wall {wall:.2f}s, method={args.method}, mode={mode}, "
+          f"slot occupancy {engine.slot_occupancy():.3f}")
 
 
 if __name__ == "__main__":

@@ -261,7 +261,10 @@ def attention_decode(
     cfg: ModelConfig,
     cache_k: jnp.ndarray,               # (B, Hkv, S, hd)
     cache_v: jnp.ndarray,
-    pos: jnp.ndarray,                   # scalar int32 — write slot index
+    pos: jnp.ndarray,                   # scalar int32 write index, or (B,)
+                                        # per-slot indices (continuous
+                                        # batching: every row has its own
+                                        # decode position)
     positions: jnp.ndarray,             # (B, 1) or (3, B, 1) rope positions
     *,
     window: int = 0,
@@ -272,21 +275,33 @@ def attention_decode(
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """One decode step against the KV cache.
 
+    ``pos`` is the cache write index — a scalar for the batch-at-a-time
+    path (every row decodes in lockstep) or a ``(B,)`` vector for the
+    slot-based continuous-batching scheduler (each slot is at its own
+    position, so the write and the slot-validity mask are per-row).
     ``valid_mask`` carries per-request cache-slot validity (length ∧ ragged
-    right-pad); when None, every slot ≤ ``pos`` is visible.  ``plan``
-    enables decode-phase pattern sharing: the step consumes prebuilt
-    O(B·Hkv·NB) splash tables (built once per batch by
-    ``repro.serving.decode_plan``), dispatched by ``decode_impl`` — the
-    compiled block-skipping Pallas kernel on TPU, the grouped einsum
-    elsewhere.
+    right-pad); when None, every slot ≤ ``pos`` (per-row for vector pos) is
+    visible.  ``plan`` enables decode-phase pattern sharing: the step
+    consumes prebuilt O(B·Hkv·NB) splash tables (built once per batch by
+    ``repro.serving.decode_plan`` and spliced per slot in-flight by the
+    scheduler), dispatched by ``decode_impl`` — the compiled block-skipping
+    Pallas kernel on TPU, the grouped einsum elsewhere.
     """
     b, _, _ = x.shape
     s = cache_k.shape[2]
     q, k, v = common.gqa_qkv(params, x)
     q, k = rope_qk(q, k, positions, cfg)
 
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=2)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=2)
+    if jnp.ndim(pos):                   # per-slot positions: per-row writes
+        upd = lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(
+            c, u, p, axis=1)            # row-local seq axis
+        cache_k = jax.vmap(upd)(cache_k, k, pos)
+        cache_v = jax.vmap(upd)(cache_v, v, pos)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos,
+                                                      axis=2)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos,
+                                                      axis=2)
     # keep head_dim model-sharded when kv_heads cannot shard ("heads" is
     # skipped by the dedupe if "kv_heads" already took the model axis) —
     # forcing hd replication here costs a 30 GB/device cache all-gather
@@ -294,15 +309,19 @@ def attention_decode(
     cache_k = shard(cache_k, "batch", "kv_heads", "seq", "heads")
     cache_v = shard(cache_v, "batch", "kv_heads", "seq", "heads")
 
+    # (B, 1) column view of pos: broadcasting makes every mask term below
+    # per-row, whether pos is the lockstep scalar or the per-slot vector
+    pcol = pos[:, None] if jnp.ndim(pos) else pos
     if valid_mask is None:
-        mask = jnp.broadcast_to(jnp.arange(s) <= pos, (b, s))
+        mask = jnp.broadcast_to(jnp.arange(s)[None, :] <= pcol, (b, s))
     else:
         mask = (valid_mask[None] if valid_mask.ndim == 1
                 else valid_mask)                 # (B, S)
     if window > 0:
-        pos_idx = jnp.arange(s)
-        mask = mask & (((pos_idx > pos - window) & (pos_idx <= pos))
-                       | (pos_idx < sink))[None, :]
+        pos_idx = jnp.arange(s)[None, :]
+        mask = mask & (((pos_idx > pcol - window) & (pos_idx <= pcol))
+                       | (pos_idx < sink))
+        mask = jnp.broadcast_to(mask, (b, s))
 
     g = cfg.gqa_groups
     hkv = cache_k.shape[1]

@@ -273,6 +273,14 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                 ):
     """One decode step. token (B, 1) → logits (B, V), updated cache.
 
+    ``pos`` is either the lockstep scalar write index (batch-at-a-time
+    serving) or a ``(B,)`` vector of per-slot positions (the continuous-
+    batching scheduler: each slot decodes at its own position, so the rope
+    position, the cache write, and the slot-validity mask are all per-row).
+    Vector ``pos`` is a GQA-cache contract — MLA latent caches keep the
+    scalar lockstep path (the dense carve-out; the scheduler routes MLA and
+    the non-transformer families through the legacy batch path).
+
     ``plan`` enables decode-phase pattern sharing (beyond paper): prebuilt
     O(L·B·Hkv·NB) splash block tables derived once per batch from the
     prefill pattern dictionary (``repro.serving.decode_plan``); the scan
@@ -287,8 +295,15 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     never attended (ignored by MLA layers, which keep the plain length
     mask)."""
     b = (embeds.shape[0] if embeds is not None else token.shape[0])
+    pos = jnp.asarray(pos)
+    if jnp.ndim(pos) and _uses_mla(cfg):
+        raise ValueError(
+            "per-slot decode positions require the GQA cache layout; MLA "
+            "latent caches keep the lockstep scalar pos (dense carve-out — "
+            "serve them through the legacy batch path)")
     if positions is None:
-        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+        positions = (pos[:, None] if jnp.ndim(pos)
+                     else jnp.broadcast_to(pos[None, None], (b, 1)))
     x = embeds if embeds is not None else embed_tokens(params, cfg, token)
     moe_ffn = _uses_moe(cfg)
     n_prefix = num_prefix_layers(cfg)
@@ -296,7 +311,8 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     valid = None
     if prompt_lens is not None:
         slots = jnp.arange(_cache_seq_len(cache))[None, :]
-        valid = ((slots <= pos)
+        pcol = pos[:, None] if jnp.ndim(pos) else pos
+        valid = ((slots <= pcol)
                  & ((slots < prompt_lens[:, None]) | (slots >= prefill_len)))
 
     new_prefix = []

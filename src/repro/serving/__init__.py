@@ -1,12 +1,16 @@
 from repro.serving.decode_plan import (
     build_decode_plan,
+    empty_decode_plan,
     plan_block_counts,
     plan_traffic_fraction,
+    update_plan_slot,
 )
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 from repro.serving.sampling import SamplingConfig, sample_token
+from repro.serving.scheduler import SlotScheduler
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
 __all__ = ["EngineConfig", "Request", "ServingEngine", "SamplingConfig",
-           "auto_width_cap", "build_decode_plan", "plan_block_counts",
-           "plan_traffic_fraction", "population_width_cap", "sample_token"]
+           "SlotScheduler", "auto_width_cap", "build_decode_plan",
+           "empty_decode_plan", "plan_block_counts", "plan_traffic_fraction",
+           "population_width_cap", "sample_token", "update_plan_slot"]

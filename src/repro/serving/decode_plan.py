@@ -29,6 +29,19 @@ the plan survives cache growth without rebuilds: advancing ``pos`` only
 changes the per-step slot-validity vector, never the tables.  A plan is
 invalidated only by a new prefill (new pattern dictionary) or by growing
 the cache beyond the headroom it was built for.
+
+In-flight slot splicing (continuous batching)
+---------------------------------------------
+Under the slot-based scheduler the plan outlives any single request: the
+batch axis is a set of *slots*, and when a request finishes its row is
+replaced by the next request's freshly built single-row plan without
+touching the other rows — :func:`update_plan_slot` (and the Hkv-sharded
+:func:`update_sharded_plan_slot`, which re-places the spliced leaves with
+the same per-shard layout the PR-4 mesh path consumes).
+:func:`empty_decode_plan` seeds the slots before any request is admitted:
+all-False keep bits and zero counts make an unoccupied slot inert (the
+kernel's empty-table contract emits exact zeros; the einsum fallback
+masks everything).
 """
 from __future__ import annotations
 
@@ -181,6 +194,92 @@ def build_decode_plan_auto(sp: SharePrefill, sp_state, cfg: ModelConfig, *,
             width=width, mesh=mesh)
     return build_decode_plan(sp, sp_state, cfg, prefill_len=prefill_len,
                              cache_len=cache_len, width=width)
+
+
+def empty_decode_plan(cfg: ModelConfig, *, batch: int, cache_len: int,
+                      block_size: int) -> DecodePlan:
+    """All-masked slot plan: the scheduler's initial decode state.
+
+    Every slot's table is empty (``counts == 0``) and every keep bit is
+    False, so an unoccupied slot streams nothing and emits zeros (the
+    kernel's empty-keep contract) until a request's single-row plan is
+    spliced in via :func:`update_plan_slot`.  Table width W equals NB —
+    the same uncapped width :func:`build_decode_plan` produces, so spliced
+    rows always shape-match.
+    """
+    nb = cache_len // block_size
+    if cache_len % block_size:
+        raise ValueError(f"cache_len {cache_len} must be a multiple of the "
+                         f"pattern block size {block_size}")
+    hkv = max(cfg.num_kv_heads, 1)
+    g = cfg.num_heads // hkv
+    shape = (cfg.num_layers, batch, hkv)
+    return DecodePlan(
+        indices=jnp.zeros(shape + (nb,), jnp.int32),
+        counts=jnp.zeros(shape, jnp.int32),
+        keep_heads=jnp.zeros(shape + (nb, g), bool))
+
+
+def update_plan_slot(plan: DecodePlan, new: DecodePlan,
+                     slot: int) -> DecodePlan:
+    """In-flight DecodePlan splicing: replace batch row ``slot``.
+
+    ``new`` is a single-request plan (batch axis of size 1, built by
+    :func:`build_decode_plan` right after that request's prefill) with the
+    same prefill/cache geometry as ``plan``; its tables are written into
+    row ``slot`` of every leaf — the other slots' tables are untouched, so
+    their decode numerics are bitwise unchanged (per-row table reads share
+    nothing across the batch axis).
+    """
+    if new.indices.shape[-1] != plan.indices.shape[-1]:
+        raise ValueError(
+            f"plan width mismatch: slot plan W={new.indices.shape[-1]} vs "
+            f"batch plan W={plan.indices.shape[-1]} (same prefill_len / "
+            f"cache_len / width required)")
+
+    def upd(dst, src):
+        start = (0, slot) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            start)
+
+    return DecodePlan(*(upd(d, s) for d, s in zip(plan, new)))
+
+
+def update_sharded_plan_slot(plan: DecodePlan, new: DecodePlan, slot: int,
+                             *, mesh: Mesh,
+                             axis: str = "model") -> DecodePlan:
+    """Hkv-sharded slot splice — the mesh twin of :func:`update_plan_slot`.
+
+    The splice itself touches only the batch axis (replicated), so the
+    row replacement is identical; the spliced leaves are then re-placed
+    with the Hkv axis sharded over ``axis`` — the same layout
+    :func:`build_sharded_decode_plan` produces — so
+    :func:`repro.distributed.sharding.sharded_flash_decode` keeps
+    consuming per-shard tables with no cross-device table traffic, bitwise
+    equal to the single-device spliced plan.
+    """
+    spliced = update_plan_slot(plan, new, slot)
+
+    def place(x):
+        spec = P(*([None, None, axis] + [None] * (x.ndim - 3)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return DecodePlan(place(spliced.indices), place(spliced.counts),
+                      place(spliced.keep_heads))
+
+
+def update_plan_slot_auto(plan: DecodePlan, new: DecodePlan, slot: int,
+                          cfg: ModelConfig) -> DecodePlan:
+    """Mesh-active splice policy (the scheduler's entry point) — mirrors
+    :func:`build_decode_plan_auto`: under a sharding-rules context whose
+    model axis the head counts divide, the spliced plan is laid out
+    Hkv-sharded; otherwise the plain splice."""
+    from repro.distributed.sharding import shardable_model_mesh
+
+    mesh = shardable_model_mesh(cfg.num_heads, max(cfg.num_kv_heads, 1))
+    if mesh is not None:
+        return update_sharded_plan_slot(plan, new, slot, mesh=mesh)
+    return update_plan_slot(plan, new, slot)
 
 
 def plan_traffic_fraction(plan: DecodePlan) -> float:

@@ -1,42 +1,62 @@
-"""Serving engine: batched long-context inference with SharePrefill.
+"""Serving engine: slot-scheduled long-context inference with SharePrefill.
 
 The engine mirrors the paper's deployment — **sparse prefill** (the paper's
-contribution) followed by decode — and goes beyond it: with
-``decode_sparse=True`` the decode phase reuses the prefill pattern
-dictionary through a :class:`~repro.kernels.decode_attn.DecodePlan` built
-**once per batch** (``repro.serving.decode_plan``), so every decode step
-streams only the keep-set's kv blocks (paper §8 future work; decode is
-memory-bound per EXPERIMENTS.md §Roofline).
+contribution) followed by decode — and goes beyond it on two axes:
 
-Requests are padded to a block multiple, batched up to ``max_batch``, and
-served by two jitted programs (prefill_step, decode_step) shared across
-request shapes via bucketing.
+**Decode-phase pattern sharing.**  With ``decode_sparse=True`` the decode
+phase reuses the prefill pattern dictionary through a
+:class:`~repro.kernels.decode_attn.DecodePlan` built **once per batch**
+(``repro.serving.decode_plan``), so every decode step streams only the
+keep-set's kv blocks (paper §8 future work; decode is memory-bound per
+EXPERIMENTS.md §Roofline).
+
+**Continuous batching.**  With ``scheduler=True`` the transformer families
+are served by the slot-based scheduler (``repro.serving.scheduler``)
+instead of batch-at-a-time grouping: a persistent fixed-shape decode state
+of ``max_batch`` slots with **per-slot positions** (each row decodes at its
+own ``pos``), per-slot early exit on EOS / ``max_new_tokens``, and
+immediate slot refill — a finished slot's KV row is overwritten by the next
+request's freshly prefilled cache (:meth:`ServingEngine.cache_insert`, the
+inverse of :meth:`ServingEngine.grow_cache`) and, under ``decode_sparse``,
+its DecodePlan row is spliced in-flight
+(``decode_plan.update_plan_slot`` / the Hkv-sharded variant) without
+touching the other slots' tables.  Request lifecycle and per-request
+metrics (queue time, TTFT, decode tokens/s) live in the scheduler; MLA
+latent caches and the non-transformer families keep the legacy
+batch-at-a-time path below (the dense carve-out — their caches have no
+per-slot write layout).
+
+Requests are padded to a block multiple, grouped by sequence bucket, and
+served by two jitted programs (prefill, decode step) shared across request
+shapes; the scheduler reuses the same compiled-program caches (prefill at
+batch 1, decode at ``max_batch`` with vector ``pos``).
 
 **Mesh-active routing:** serving inside a sharding-rules context whose
 "model" axis is non-trivial (``distributed.sharding.active_model_mesh``)
 runs both hot paths heads-sharded under ``shard_map`` — sparse prefill via
 ``resolve_attention_fn("sparse")`` and sparse decode via
 ``attention_decode`` → ``sharded_flash_decode`` — with the DecodePlan
-tables built per kv-head shard (``decode_plan.build_decode_plan_auto``).
-Outputs are bitwise-identical to the unmeshed serve; the compiled-program
-caches key on the rules-context identity.  MLA latent caches and the
-non-transformer families never build a DecodePlan
-(``_supports_sparse_decode``), so they decode densely under any mesh — the
-documented carve-out.
+tables built per kv-head shard (``decode_plan.build_decode_plan_auto``)
+and spliced per shard (``decode_plan.update_plan_slot_auto``).  Outputs
+are bitwise-identical to the unmeshed serve; the compiled-program caches
+key on the rules-context identity.
 
-For the transformer families, per-request
-prompt lengths are threaded into prefill (last-logits gathered at each
-row's real last token, so the first sampled token never conditions on
-right-pad) and, for GQA caches, into decode as slot-validity so right-pad
-K/V is never attended (MLA latent caches and the non-transformer families
-keep the plain length mask); sampling honours each request's own
-:class:`SamplingConfig`.  ``width_policy="count"`` resolves the sparse
+For the transformer families, per-request prompt lengths are threaded into
+prefill (last-logits gathered at each row's real last token, so the first
+sampled token never conditions on right-pad) and, for GQA caches, into
+decode as slot-validity so right-pad K/V is never attended (MLA latent
+caches and the non-transformer families keep the plain length mask);
+sampling honours each request's own :class:`SamplingConfig`, including
+``stop_tokens`` (EOS) in both serving paths.  Prompts longer than the
+largest bucket are clipped to its tail — ``Request.truncated`` flags it
+and a warning is logged.  ``width_policy="count"`` resolves the sparse
 kernel's static block budget W from observed row populations, so the
 batched kernel's ragged grid issues steps proportional to *kept* blocks.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -52,6 +72,8 @@ from repro.serving import decode_plan as dplan
 from repro.serving.sampling import SamplingConfig, sample_token
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
+logger = logging.getLogger(__name__)
+
 
 @dataclasses.dataclass
 class Request:
@@ -60,10 +82,19 @@ class Request:
     max_new_tokens: int = 16
     sampling: SamplingConfig = dataclasses.field(
         default_factory=SamplingConfig)
+    arrival_s: float = 0.0              # simulated arrival offset from the
+                                        # start of serve() (scheduler honours
+                                        # it for admission; the legacy batch
+                                        # path only uses it for metrics)
     # filled by the engine:
     output_tokens: Optional[np.ndarray] = None
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
+    prefill_s: float = 0.0              # this request's own prefill wall
+    decode_s: float = 0.0               # first token → last token wall
+    queue_s: float = 0.0                # arrival → prefill start
+    ttft_s: float = 0.0                 # arrival → first token
+    decode_tokens_per_s: float = 0.0    # (n_tokens - 1) / decode_s
+    truncated: bool = False             # prompt clipped to the largest bucket
+    finish_reason: str = ""             # "stop" (EOS) | "length"
     pattern_stats: Optional[Dict[str, float]] = None
 
 
@@ -98,6 +129,11 @@ class EngineConfig:
     width_policy: str = "off"           # "off" | "auto" | "count"
     width_percentile: float = 95.0
     width_safety: float = 1.25
+    # slot-based continuous batching (repro.serving.scheduler): per-slot
+    # decode positions, EOS early exit, immediate slot refill with in-flight
+    # cache/DecodePlan splicing.  Transformer families only — MLA and the
+    # non-transformer caches fall back to the legacy batch-at-a-time path.
+    scheduler: bool = False
 
 
 class ServingEngine:
@@ -112,6 +148,18 @@ class ServingEngine:
         self._density_obs: Dict[int, List[float]] = {}
         self._pop_obs: Dict[int, List[float]] = {}   # max_row_pop per batch
         self._width_frozen: Dict[int, Optional[int]] = {}
+        # slot-occupancy accounting, reset per serve(): every decode step
+        # contributes max_batch slot-steps of capacity and however many rows
+        # were actually still emitting tokens (both serving paths update it)
+        self.slot_steps = 0
+        self.active_slot_steps = 0
+
+    def slot_occupancy(self) -> float:
+        """Mean fraction of decode slot capacity doing useful work during
+        the last :meth:`serve` (1.0 = every slot emitted a token on every
+        decode step)."""
+        return (self.active_slot_steps / self.slot_steps
+                if self.slot_steps else 0.0)
 
     # -- compiled-program management ------------------------------------
     def _bucket(self, n: int) -> int:
@@ -237,14 +285,38 @@ class ServingEngine:
     # -- serving ----------------------------------------------------------
     def serve(self, requests: List[Request], *, seed: int = 0
               ) -> List[Request]:
-        """Serve a list of requests (grouped into equal-length batches)."""
+        """Serve a list of requests, grouped by sequence bucket.
+
+        With ``EngineConfig(scheduler=True)`` the transformer families run
+        each bucket through the slot-based continuous-batching scheduler
+        (per-slot positions, EOS early exit, in-flight slot refill); other
+        families — and ``scheduler=False`` — use the legacy batch-at-a-time
+        path (equal-size batches, decode to the longest row).
+        """
+        t0 = time.time()
+        self.slot_steps = 0
+        self.active_slot_steps = 0
         groups: Dict[int, List[Request]] = {}
         for r in requests:
             groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
+        use_sched = self.ecfg.scheduler and self._supports_scheduler()
         for seq, grp in groups.items():
-            for i in range(0, len(grp), self.ecfg.max_batch):
-                self._serve_batch(grp[i: i + self.ecfg.max_batch], seq, seed)
+            if use_sched:
+                from repro.serving.scheduler import SlotScheduler
+                SlotScheduler(self, grp, seq, seed=seed, t0=t0).run()
+            else:
+                for i in range(0, len(grp), self.ecfg.max_batch):
+                    self._serve_batch(grp[i: i + self.ecfg.max_batch], seq,
+                                      seed, t0=t0)
         return requests
+
+    def _supports_scheduler(self) -> bool:
+        """Slot-based continuous batching needs per-slot decode positions —
+        a GQA cache contract (per-row seq-axis writes + per-row validity).
+        MLA latent caches and the non-transformer families keep the legacy
+        batch-at-a-time path (the dense carve-out, same predicate as
+        :meth:`_supports_sparse_decode`)."""
+        return self._transformer_family() and not self.model.cfg.mla.enabled
 
     @staticmethod
     def grow_cache(cache, old_len: int, extra: int):
@@ -264,6 +336,33 @@ class ServingEngine:
                 return x
             return jnp.pad(x, pads)
         return jax.tree.map(grow, cache)
+
+    @staticmethod
+    def cache_insert(cache, new, slot: int):
+        """Inverse of :meth:`grow_cache`: write one freshly prefilled
+        request's KV (batch axis of size 1) into row ``slot`` of the
+        running decode cache.
+
+        Transformer-family layout only (the scheduler's contract): prefix
+        leaves are ``(B, Hkv, S, hd)`` (batch axis 0), stacked leaves are
+        ``(L, B, Hkv, S, hd)`` (batch axis 1).  The new request's shorter
+        prefill region is written at sequence offset 0; the slot's decode
+        tail keeps whatever the previous occupant wrote — decode validity
+        (``slots <= pos[row]``) masks it, so stale tail values never reach
+        the softmax and the other rows' numerics are untouched (per-row
+        ops share nothing across the batch axis)."""
+        def ins(axis):
+            def f(dst, src):
+                start = [0] * dst.ndim
+                start[axis] = slot
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), tuple(start))
+            return f
+        return {
+            "prefix": [jax.tree.map(ins(0), c, n)
+                       for c, n in zip(cache["prefix"], new["prefix"])],
+            "stack": jax.tree.map(ins(1), cache["stack"], new["stack"]),
+        }
 
     def _supports_sparse_decode(self) -> bool:
         cfg = self.model.cfg
@@ -286,32 +385,25 @@ class ServingEngine:
             toks[np.asarray(rows)] = np.asarray(t)
         return toks
 
-    def _serve_batch(self, grp: List[Request], seq: int, seed: int):
-        """Prefill the padded batch, then decode autoregressively.
+    def _pad_prompt(self, r: Request, seq: int, row: np.ndarray) -> int:
+        """Left-align one prompt into ``row``; flag + warn on clipping (a
+        prompt longer than the largest bucket loses its head silently
+        otherwise).  Returns the row's valid prompt length."""
+        if len(r.prompt) > seq:
+            r.truncated = True
+            logger.warning(
+                "request %s: prompt of %d tokens exceeds the largest "
+                "bucket (%d); clipping to the last %d tokens",
+                r.uid, len(r.prompt), seq, seq)
+        p = r.prompt[-seq:]
+        row[: len(p)] = p
+        return len(p)
 
-        Prompts are left-aligned / right-padded; for the transformer
-        families, per-request prompt lengths are threaded (a) into prefill,
-        whose last-logits are gathered at each row's ``prompt_len - 1``
-        (the first sampled token never conditions on right-pad), and (b)
-        into every GQA decode step as a slot-validity mask, so pad K/V
-        entries are never attended (remaining simplifications: MLA /
-        non-transformer caches still attend pads, and prefill attention
-        itself runs over the padded batch)."""
-        b = len(grp)
-        toks = np.zeros((b, seq), np.int32)
-        for i, r in enumerate(grp):
-            p = r.prompt[-seq:]
-            toks[i, : len(p)] = p
-        plens = jnp.asarray([min(len(r.prompt), seq) for r in grp],
-                            jnp.int32)
-
-        width = self._width_cap(seq)
-        t0 = time.time()
-        prefill = self._prefill_fn(b, seq, width)
-        result = prefill(self.params, jnp.asarray(toks), plens)
-        jax.block_until_ready(result.last_logits)
-        prefill_s = time.time() - t0
-
+    def _record_prefill_stats(self, result, width: Optional[int],
+                              seq: int) -> Dict[str, float]:
+        """Pattern stats for one prefill + the width-policy observation it
+        feeds — shared by the batch path and the scheduler so a new stats
+        key or policy branch can never diverge between them."""
         stats = {
             "num_shared": float(result.stats.num_shared),
             "num_dense": float(result.stats.num_dense),
@@ -326,6 +418,59 @@ class ServingEngine:
         elif self.ecfg.width_policy == "count":
             self._pop_obs.setdefault(seq, []).append(
                 stats["max_row_pop"])
+        return stats
+
+    @staticmethod
+    def _decode_rate(n_tokens: int, decode_s: float) -> float:
+        """Per-request decode tokens/s: n-1 decode steps produced tokens
+        1..n-1 (token 0 comes from the prefill logits)."""
+        return ((n_tokens - 1) / decode_s
+                if n_tokens > 1 and decode_s > 0 else 0.0)
+
+    @staticmethod
+    def _plan_stats(plan, cache_len: int) -> Dict[str, float]:
+        """Modeled sparse-decode traffic counters for a built DecodePlan."""
+        total, streamed = dplan.plan_block_counts(plan)
+        return {
+            "decode_traffic_fraction": dplan.plan_traffic_fraction(plan),
+            "decode_blocks_total": float(total),
+            "decode_blocks_computed": float(streamed),
+            "decode_blocks_skipped": float(total - streamed),
+            "decode_cache_len": float(cache_len),
+        }
+
+    def _serve_batch(self, grp: List[Request], seq: int, seed: int,
+                     t0: Optional[float] = None):
+        """Prefill the padded batch, then decode autoregressively
+        (batch-at-a-time: the batch advances in lockstep; a row that hits a
+        stop token or its own ``max_new_tokens`` goes inert and the batch
+        exits once every row is done).
+
+        Prompts are left-aligned / right-padded; for the transformer
+        families, per-request prompt lengths are threaded (a) into prefill,
+        whose last-logits are gathered at each row's ``prompt_len - 1``
+        (the first sampled token never conditions on right-pad), and (b)
+        into every GQA decode step as a slot-validity mask, so pad K/V
+        entries are never attended (remaining simplifications: MLA /
+        non-transformer caches still attend pads, and prefill attention
+        itself runs over the padded batch)."""
+        t0 = time.time() if t0 is None else t0
+        b = len(grp)
+        toks = np.zeros((b, seq), np.int32)
+        plens_l = [self._pad_prompt(r, seq, toks[i])
+                   for i, r in enumerate(grp)]
+        plens = jnp.asarray(plens_l, jnp.int32)
+
+        width = self._width_cap(seq)
+        tp = time.time()
+        for r in grp:
+            r.queue_s = max(tp - (t0 + r.arrival_s), 0.0)
+        prefill = self._prefill_fn(b, seq, width)
+        result = prefill(self.params, jnp.asarray(toks), plens)
+        jax.block_until_ready(result.last_logits)
+        prefill_s = time.time() - tp
+
+        stats = self._record_prefill_stats(result, width, seq)
 
         max_new = max(r.max_new_tokens for r in grp)
         key = jax.random.PRNGKey(seed)
@@ -351,25 +496,43 @@ class ServingEngine:
             plan = dplan.build_decode_plan_auto(
                 self.sp, result.sp_state, self.model.cfg,
                 prefill_len=seq, cache_len=seq + extra)
-            total, streamed = dplan.plan_block_counts(plan)
-            stats["decode_traffic_fraction"] = \
-                dplan.plan_traffic_fraction(plan)
-            stats["decode_blocks_total"] = float(total)
-            stats["decode_blocks_computed"] = float(streamed)
-            stats["decode_blocks_skipped"] = float(total - streamed)
-            stats["decode_cache_len"] = float(seq + extra)
+            stats.update(self._plan_stats(plan, seq + extra))
 
         decode = self._decode_fn(b, seq, seq + extra, use_sparse)
         logits = result.last_logits
         outs = [[] for _ in range(b)]
+        done = [False] * b
         t1 = time.time()
+        finish = [t1] * b
+        for i, r in enumerate(grp):
+            if r.max_new_tokens <= 0:   # prefill-only: no token is emitted
+                done[i], r.finish_reason = True, "length"
         for t in range(max_new):
             key, sub = jax.random.split(key)
             tok = self._sample_batch(sub, logits, grp)
-            for i in range(b):
+            now = time.time()
+            if t == 0:
+                # prefill-only rows (max_new_tokens <= 0) emit no token, so
+                # they record no TTFT — matching the scheduler path
+                for r in grp:
+                    if r.max_new_tokens > 0:
+                        r.ttft_s = max(now - (t0 + r.arrival_s), 0.0)
+            for i, r in enumerate(grp):
+                if done[i]:
+                    continue                 # inert row: sampled, discarded
                 outs[i].append(int(tok[i]))
-            if t == max_new - 1:
+                if r.sampling.is_stop(int(tok[i])):
+                    done[i], r.finish_reason = True, "stop"
+                elif len(outs[i]) >= r.max_new_tokens:
+                    done[i], r.finish_reason = True, "length"
+                if done[i]:
+                    finish[i] = now
+            if all(done):
                 break
+            # occupancy: a lockstep decode step burns max_batch slot-steps
+            # of capacity however few rows still need tokens
+            self.slot_steps += self.ecfg.max_batch
+            self.active_slot_steps += b - sum(done)
             tok_j = jnp.asarray(tok)[:, None]
             if use_sparse:
                 logits, cache = decode(self.params, tok_j, cache,
@@ -377,11 +540,11 @@ class ServingEngine:
             else:
                 logits, cache = decode(self.params, tok_j, cache,
                                        jnp.int32(seq + t), plens)
-        decode_s = time.time() - t1
 
         for i, r in enumerate(grp):
-            r.output_tokens = np.asarray(outs[i][: r.max_new_tokens],
-                                         np.int32)
+            r.output_tokens = np.asarray(outs[i], np.int32)
             r.prefill_s = prefill_s
-            r.decode_s = decode_s
+            r.decode_s = max(finish[i] - t1, 0.0)
+            r.decode_tokens_per_s = self._decode_rate(len(outs[i]),
+                                                      r.decode_s)
             r.pattern_stats = stats

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +13,15 @@ class SamplingConfig:
     temperature: float = 0.0        # 0 → greedy
     top_k: int = 0                  # 0 → full distribution
     top_p: float = 1.0
+    # sampling one of these ends the request (EOS): the stop token is kept
+    # as the final output token and the row stops decoding — honoured by
+    # both the continuous-batching scheduler (slot freed and refilled
+    # immediately) and the legacy batch path (row goes inert; the batch
+    # exits early once every row is done)
+    stop_tokens: Tuple[int, ...] = ()
+
+    def is_stop(self, token: int) -> bool:
+        return token in self.stop_tokens
 
 
 def sample_token(key: jax.Array, logits: jnp.ndarray,

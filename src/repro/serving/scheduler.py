@@ -1,0 +1,285 @@
+"""Slot-based continuous-batching scheduler for the serving engine.
+
+Owns the request lifecycle — WAITING → PREFILL → DECODE → DONE — over a
+persistent fixed-shape decode state of ``max_batch`` *slots*:
+
+  * **Per-slot positions.**  Every slot decodes at its own ``pos`` (the
+    ``(B,)`` vector contract of ``transformer.decode_step`` /
+    ``attention_decode``): a fresh request starts at the prefill boundary
+    while its neighbours are deep into their decode tails, and the
+    slot-validity mask is per-row, so rows never see each other's state.
+  * **In-flight slot replacement.**  When a slot finishes (stop token or
+    its own ``max_new_tokens``) it is freed immediately and the next
+    WAITING request is admitted: prefilled alone (batch-1 program), its KV
+    written into the slot's cache row (:meth:`ServingEngine.cache_insert`,
+    the inverse of ``grow_cache``) and — under ``decode_sparse`` — its
+    freshly built DecodePlan row spliced into the live plan
+    (``decode_plan.update_plan_slot_auto``; Hkv-sharded under a mesh)
+    without touching the other slots' tables.
+  * **Inert slots.**  An unoccupied slot keeps decoding (fixed-shape jitted
+    step) but its tables are empty / its sampled tokens discarded; validity
+    masking means stale cache values never reach a softmax, so occupied
+    rows are bitwise independent of slot churn — with greedy sampling the
+    scheduler's output tokens bit-match the legacy batch-at-a-time serve.
+    (Caveat: under the adaptive width policies — ``width_policy="auto"`` /
+    ``"count"`` — the prefill cap freezes after the first *observation*,
+    which is per single-request prefill here but per batch in the legacy
+    path, so later requests may prefill under different caps across the
+    two paths; the bit-match guarantee holds for ``width_policy="off"`` or
+    once both paths' caps are frozen equal.)
+
+The scheduler reuses the engine's compiled-program caches (prefill at
+batch 1; the decode program retraces once for vector ``pos``), its width
+policies, and its slot-occupancy accounting.  Arrival simulation: requests
+carry ``arrival_s`` offsets (relative to ``serve()`` start); a request is
+admitted only once its arrival time has passed — the scheduler sleeps only
+when every slot is idle.  Per-request metrics are real, not batch-wide
+copies: ``queue_s`` (arrival → prefill start), ``ttft_s`` (arrival → first
+token), ``decode_s`` / ``decode_tokens_per_s`` (first token → last token).
+
+MLA latent caches and the non-transformer families never reach this module
+— ``ServingEngine.serve`` routes them through the legacy batch path (the
+dense carve-out; their caches have no per-slot write layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import decode_plan as dplan
+from repro.serving.sampling import sample_token
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One occupied decode slot (engine ``Request`` + its live decode
+    state: sampling key stream, emitted tokens, last token to feed)."""
+    req: "Request"                      # noqa: F821 (engine import cycle)
+    key: jax.Array
+    outs: List[int]
+    last_tok: int
+    t_first: float                      # wall time of the first token
+
+
+class SlotScheduler:
+    """Continuous-batching serve of one sequence bucket's requests."""
+
+    def __init__(self, engine, requests, seq: int, *, seed: int = 0,
+                 t0: Optional[float] = None):
+        self.eng = engine
+        self.seq = seq
+        self.seed = seed
+        self.t0 = time.time() if t0 is None else t0
+        # FIFO in arrival order (stable: same-arrival requests keep their
+        # submission order, matching the legacy path's batch grouping)
+        self.queue = deque(sorted(requests, key=lambda r: r.arrival_s))
+
+        ecfg = engine.ecfg
+        self.nslots = ecfg.max_batch
+        blk = max(engine.sp.cfg.block_size, 1)
+        # one cache headroom for the whole bucket: covers the longest
+        # request and stays a block multiple so the DecodePlan tables tile
+        # the grown region exactly (same rounding as the legacy path)
+        extra = max(max(r.max_new_tokens for r in requests),
+                    ecfg.decode_extra)
+        self.cache_len = seq + ((extra + blk - 1) // blk) * blk
+
+        # persistent fixed-shape decode state; the cache is created on the
+        # first admission so it inherits the prefill cache's dtype (the
+        # legacy path gets this via grow_cache — init_cache's f32 default
+        # would break non-f32 models at the first per-slot write)
+        self.slots: List[Optional[_Slot]] = [None] * self.nslots
+        self.pos = np.full((self.nslots,), seq, np.int32)
+        self.plens = np.full((self.nslots,), seq, np.int32)
+        self.cache = None
+        # decode-phase pattern sharing: the same predicate as the legacy
+        # path (sp_state is non-None exactly when sp is enabled+applicable)
+        # decode-phase pattern sharing: pre-commit from the config, but the
+        # first prefill's sp_state stays the source of truth — if it comes
+        # back None the scheduler falls back to dense decode exactly like
+        # the legacy path's `result.sp_state is not None` gate (_start)
+        self.use_sparse = (ecfg.decode_sparse and ecfg.method == "share"
+                           and engine._supports_sparse_decode())
+        self.plan = None
+        self._empty_row = None
+        self._stale_slots = set()       # vacated, plan row not yet emptied
+        if self.use_sparse:
+            self.plan = dplan.empty_decode_plan(
+                engine.model.cfg, batch=self.nslots,
+                cache_len=self.cache_len, block_size=blk)
+            # spliced back over a vacated slot's tables so inert slots
+            # stream nothing (the empty-keep contract; a dead request's
+            # keep-set must not keep burning memory bandwidth)
+            self._empty_row = dplan.empty_decode_plan(
+                engine.model.cfg, batch=1, cache_len=self.cache_len,
+                block_size=blk)
+
+    # -- lifecycle ------------------------------------------------------
+    def run(self) -> None:
+        while self.queue or any(s is not None for s in self.slots):
+            self._admit()
+            self._flush_stale_slots()
+            if any(s is not None for s in self.slots):
+                self._decode_step()
+        self._flush_stale_slots()       # leave the documented invariant:
+                                        # unoccupied slots' tables are empty
+
+    def _flush_stale_slots(self) -> None:
+        """Empty the plan rows of slots vacated since the last decode step.
+
+        Deferred from :meth:`_vacate` so the common steady-state case —
+        a finished slot immediately refilled by the next admission — pays
+        one splice, not two; only a slot that actually stays inert for a
+        decode step gets the empty row spliced in."""
+        for slot in sorted(self._stale_slots):
+            self.plan = dplan.update_plan_slot_auto(
+                self.plan, self._empty_row, slot, self.eng.model.cfg)
+        self._stale_slots.clear()
+
+    def _admit(self) -> None:
+        """WAITING → PREFILL: fill free slots from the arrival queue."""
+        while self.queue:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                return
+            r = self.queue[0]
+            wait = (self.t0 + r.arrival_s) - time.time()
+            if wait > 0:
+                if any(s is not None for s in self.slots):
+                    return              # keep decoding, admit it later
+                time.sleep(wait)        # fully idle: jump to next arrival
+            self.queue.popleft()
+            self._start(r, free[0])
+
+    def _start(self, r, slot: int) -> None:
+        """PREFILL → DECODE: prefill one request alone, sample its first
+        token, splice its KV row and DecodePlan row into the live state."""
+        eng, seq = self.eng, self.seq
+        toks = np.zeros((1, seq), np.int32)
+        plen = eng._pad_prompt(r, seq, toks[0])
+
+        width = eng._width_cap(seq)
+        tp = time.time()
+        r.queue_s = max(tp - (self.t0 + r.arrival_s), 0.0)
+        prefill = eng._prefill_fn(1, seq, width)
+        result = prefill(eng.params, jnp.asarray(toks),
+                         jnp.asarray([plen], jnp.int32))
+        jax.block_until_ready(result.last_logits)
+        r.prefill_s = time.time() - tp
+
+        if self.use_sparse and result.sp_state is None:
+            # same gate as the legacy path: no pattern dictionary came back
+            # (sp disabled / not applicable) → dense decode for this bucket
+            self.use_sparse = False
+            self.plan = self._empty_row = None
+            self._stale_slots.clear()
+
+        stats = eng._record_prefill_stats(result, width, seq)
+        r.pattern_stats = stats
+
+        if r.max_new_tokens <= 0:       # prefill-only: no token is emitted
+            self._finish(_Slot(req=r, key=jax.random.PRNGKey(0), outs=[],
+                               last_tok=0, t_first=time.time()), "length")
+            return
+
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r.uid)
+        key, sub = jax.random.split(key)
+        tok0 = int(sample_token(sub, result.last_logits, r.sampling)[0])
+        t_first = time.time()
+        r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
+
+        s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
+                  t_first=t_first)
+        if r.sampling.is_stop(tok0):
+            self._finish(s, "stop")
+            return                      # slot stays free for the next admit
+        if r.max_new_tokens <= 1:
+            self._finish(s, "length")
+            return
+
+        # DECODE: occupy the slot — KV row + plan row spliced in-flight
+        # (the plan is built only now: a request that finished on its first
+        # token never pays the O(L·Hkv·NB) table build)
+        if self.cache is None:
+            dt = jax.tree.leaves(result.cache)[0].dtype
+            self.cache = eng.model.init_cache(self.nslots, self.cache_len,
+                                              dtype=dt)
+        self.cache = eng.cache_insert(self.cache, result.cache, slot)
+        if self.use_sparse:
+            rplan = dplan.build_decode_plan_auto(
+                eng.sp, result.sp_state, eng.model.cfg,
+                prefill_len=seq, cache_len=self.cache_len)
+            stats.update(eng._plan_stats(rplan, self.cache_len))
+            self.plan = dplan.update_plan_slot_auto(self.plan, rplan, slot,
+                                                    eng.model.cfg)
+            self._stale_slots.discard(slot)    # refill replaced the row
+        self.pos[slot] = seq
+        self.plens[slot] = plen
+        self.slots[slot] = s
+
+    def _decode_step(self) -> None:
+        """One fixed-shape decode step over all slots (occupied or inert),
+        then per-slot sampling, early exit, and slot freeing."""
+        eng = self.eng
+        occ = [i for i, s in enumerate(self.slots) if s is not None]
+        eng.slot_steps += self.nslots
+        eng.active_slot_steps += len(occ)
+
+        toks = np.zeros((self.nslots,), np.int32)
+        for i in occ:
+            toks[i] = self.slots[i].last_tok
+        decode = eng._decode_fn(self.nslots, self.seq, self.cache_len,
+                                self.use_sparse)
+        args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
+                jnp.asarray(self.pos), jnp.asarray(self.plens))
+        if self.use_sparse:
+            logits, self.cache = decode(*args, self.plan)
+        else:
+            logits, self.cache = decode(*args)
+
+        # one device→host sync for the whole step: greedy rows (the
+        # conformance-critical common case) take np.argmax on the pulled
+        # logits — same first-max-index rule as jnp.argmax, so tokens stay
+        # bitwise equal to the legacy path — and only temperature-sampled
+        # rows pay a per-slot device dispatch
+        logits_h = np.asarray(logits)
+        for i in occ:
+            self.pos[i] += 1            # this step wrote at the old pos
+            s = self.slots[i]
+            if s.req.sampling.temperature <= 0.0:
+                tok = int(np.argmax(logits_h[i]))
+            else:
+                s.key, sub = jax.random.split(s.key)
+                tok = int(sample_token(sub, logits[i: i + 1],
+                                       s.req.sampling)[0])
+            s.outs.append(tok)
+            s.last_tok = tok
+            if s.req.sampling.is_stop(tok):
+                self._vacate(i, s, "stop")
+            elif len(s.outs) >= s.req.max_new_tokens:
+                self._vacate(i, s, "length")
+
+    def _vacate(self, slot: int, s: _Slot, reason: str) -> None:
+        """Free a slot mid-decode: the request finalizes and the slot's
+        plan row is marked stale — emptied before the next decode step
+        unless a refill splices a new request's row in first."""
+        self.slots[slot] = None
+        if self.use_sparse:
+            self._stale_slots.add(slot)
+        self._finish(s, reason)
+
+    def _finish(self, s: _Slot, reason: str) -> None:
+        """DECODE → DONE: finalize the request's output + real metrics."""
+        r = s.req
+        now = time.time()
+        r.output_tokens = np.asarray(s.outs, np.int32)
+        r.finish_reason = reason
+        r.decode_s = max(now - s.t_first, 0.0)
+        r.decode_tokens_per_s = self.eng._decode_rate(len(s.outs),
+                                                      r.decode_s)

@@ -38,11 +38,23 @@ DECODE = {
          "decode_blocks_skipped": 80, "decode_traffic_fraction": 0.55},
     ],
 }
+SERVING = {
+    "bench": "serving",
+    "points": [
+        {"mode": "batch", "slot_occupancy": 0.5,
+         "tokens_per_s_decode_mean": 80.0},
+        {"mode": "scheduler", "slot_occupancy": 0.9,
+         "tokens_per_s_decode_mean": 60.0},
+    ],
+    "scheduler_vs_batch": {"ttft_mean_ratio": 0.6, "occupancy_gain": 0.4,
+                           "greedy_tokens_match": True},
+}
 
 
 def test_identical_artifacts_pass():
     assert check_bench.compare_prefill(PREFILL, PREFILL) == []
     assert check_bench.compare_decode(DECODE, DECODE) == []
+    assert check_bench.compare_serving(SERVING, SERVING) == []
 
 
 def test_blocks_skipped_regression_fails():
@@ -151,6 +163,57 @@ def test_baseline_points_gated_only_when_fresh_records_them():
     assert any("truncated_row_fraction disappeared" in e for e in errs2)
     assert any("baseline vertical_slash" in e and "regressed" in e
                for e in errs2)
+
+
+def test_serving_gates():
+    """Continuous-batching invariants: token conformance, occupancy gain,
+    and TTFT improvement are all hard gates on the fresh artifact."""
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["greedy_tokens_match"] = False
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("bit-match" in e for e in errs)
+
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["occupancy_gain"] = 0.01   # below floor
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("occupancy_gain" in e for e in errs)
+
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["ttft_mean_ratio"] = 1.1   # no longer wins
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("ceiling" in e for e in errs)
+    # erosion vs baseline fails even under the ceiling
+    fresh["scheduler_vs_batch"]["ttft_mean_ratio"] = 0.93
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("eroded" in e for e in errs)
+    assert check_bench.compare_serving(SERVING, fresh,
+                                       tol_ttft=0.6) == []
+
+    fresh = copy.deepcopy(SERVING)
+    fresh["points"][1]["slot_occupancy"] = 0.7     # occupancy regressed
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("slot_occupancy regressed" in e for e in errs)
+
+    fresh = copy.deepcopy(SERVING)
+    fresh["points"] = fresh["points"][:1]          # scheduler row lost
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("missing" in e for e in errs)
+
+
+def test_committed_serving_baseline_shows_improvement():
+    """The committed BENCH_serving.json records the acceptance invariant:
+    scheduler slot occupancy and mean TTFT improve over batch-at-a-time on
+    the mixed-max_new workload, with bit-matching greedy tokens."""
+    base = json.load(open(os.path.join(REPO, "BENCH_serving.json")))
+    by_mode = {p["mode"]: p for p in base["points"]}
+    assert set(by_mode) == {"batch", "scheduler"}
+    s = base["scheduler_vs_batch"]
+    assert s["greedy_tokens_match"] is True
+    assert s["ttft_mean_ratio"] < 1.0
+    assert s["occupancy_gain"] > 0.0
+    assert (by_mode["scheduler"]["slot_occupancy"]
+            > by_mode["batch"]["slot_occupancy"])
+    assert len(set(base["workload"]["max_new_tokens"])) > 1   # mixed
 
 
 def test_committed_prefill_baseline_rows_record_width():
