@@ -1,19 +1,32 @@
-"""Continuous-batching serving benchmark: scheduler vs batch-at-a-time.
+"""Continuous-batching serving benchmark: batch-at-a-time vs the slot
+scheduler, with and without step-cadence chunked admission.
 
 Serves the same mixed-``max_new_tokens`` workload (more requests than
 decode slots, short and long generations interleaved — the traffic shape
 batch-at-a-time is worst at: short rows idle while the batch decodes to its
 longest member, and later batches queue behind the whole decode) through
-the legacy batch path and the slot-based scheduler, both with sparse
-prefill + DecodePlan sparse decode, and records per mode:
+three modes, all with sparse prefill + DecodePlan sparse decode:
 
-  * **TTFT** (arrival → first token, real per-request — the scheduler
-    admits a request as soon as a slot frees instead of after the previous
-    batch fully drains);
-  * **per-request decode tokens/s** (first token → last token);
-  * **slot occupancy** (fraction of decode slot capacity emitting tokens —
-    the scheduler's refill keeps slots busy, batch-at-a-time idles them);
-  * greedy-token agreement between the two paths (they must bit-match).
+  * ``batch``              — legacy batch-at-a-time grouping;
+  * ``scheduler``          — slot scheduler with one-shot admission (every
+    occupied slot stalls for each admission's whole prefill launch);
+  * ``scheduler-chunked``  — slot scheduler with chunked admission
+    (``prefill_chunk``): at most one prefill quantum interleaves with each
+    decode step, short prompts packed two per run (``prefill_pack``).
+
+Recorded per mode:
+
+  * **TTFT** (arrival → first token, real per-request);
+  * **per-request decode tokens/s** (first token → last token — the column
+    one-shot admission tanks, because a live row's decode wall absorbs
+    every later admission's whole prefill);
+  * **slot occupancy** (fraction of decode slot capacity emitting tokens);
+  * **admission interference**: mean/max per-request ``prefill_stall_s``
+    (prefill wall that ran while ≥ 1 slot was occupied) and the
+    scheduler's per-phase wall split (``engine.phase_s``) — the
+    measurement, not the inference, of the interleaving win;
+  * greedy-token agreement of every mode against ``batch`` (all three
+    must bit-match).
 
 Emits the ``BENCH_serving.json`` trajectory artifact at the repo root
 (gated by ``scripts/check_bench.py``), alongside ``BENCH_prefill.json`` /
@@ -44,9 +57,18 @@ MAX_BATCH = 2
 # scheduler frees the short slot after 4 tokens and admits the next
 # request immediately
 MAX_NEW = (64, 4, 64, 4, 4, 4)
+CHUNK = BLOCK               # one-block prefill quanta (finest interleave)
+PACK = 2                    # pack up to two queued short prompts per run
 
 ARTIFACT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_serving.json")
+
+MODES = {
+    "batch": {},
+    "scheduler": dict(scheduler=True),
+    "scheduler-chunked": dict(scheduler=True, prefill_chunk=CHUNK,
+                              prefill_pack=PACK),
+}
 
 
 def _requests(dcfg):
@@ -54,13 +76,13 @@ def _requests(dcfg):
                     max_new_tokens=m) for i, m in enumerate(MAX_NEW)]
 
 
-def _serve(model, params, sp, dcfg, *, scheduler: bool):
+def _serve(model, params, sp, dcfg, mode: str):
     engine = ServingEngine(
         model, params, sp,
         EngineConfig(method="share", seq_buckets=(SEQ,),
                      decode_sparse=True, max_batch=MAX_BATCH,
-                     scheduler=scheduler))
-    engine.serve(_requests(dcfg))            # warmup: compile both programs
+                     **MODES[mode]))
+    engine.serve(_requests(dcfg))            # warmup: compile all programs
     reqs = _requests(dcfg)
     t0 = time.time()
     engine.serve(reqs)
@@ -75,13 +97,13 @@ def run() -> dict:
     t0 = time.time()
 
     points, tokens = [], {}
-    for mode in ("batch", "scheduler"):
-        engine, reqs, wall = _serve(model, params, sp, dcfg,
-                                    scheduler=(mode == "scheduler"))
+    for mode in MODES:
+        engine, reqs, wall = _serve(model, params, sp, dcfg, mode)
         tokens[mode] = [r.output_tokens for r in reqs]
         ttfts = [r.ttft_s for r in reqs]
         tps = [r.decode_tokens_per_s for r in reqs
                if r.decode_tokens_per_s > 0]
+        stalls = [r.prefill_stall_s for r in reqs]
         points.append({
             "mode": mode,
             "seq": SEQ,
@@ -93,21 +115,43 @@ def run() -> dict:
             "queue_mean_s": float(np.mean([r.queue_s for r in reqs])),
             "tokens_per_s_decode_mean": float(np.mean(tps)),
             "slot_occupancy": engine.slot_occupancy(),
+            # admission interference (scheduler paths; zeros for batch —
+            # the legacy path has no step loop to attribute phases to)
+            "prefill_stall_mean_s": float(np.mean(stalls)),
+            "prefill_stall_max_s": float(np.max(stalls)),
+            "phase_prefill_s": float(engine.phase_s["prefill"]),
+            "phase_decode_s": float(engine.phase_s["decode"]),
+            "phase_idle_s": float(engine.phase_s["idle"]),
             "tokens_total": int(sum(len(t) for t in tokens[mode])),
             "wall_s": wall,
         })
 
-    match = all(np.array_equal(a, b) for a, b in
-                zip(tokens["batch"], tokens["scheduler"]))
+    def _match(a: str, b: str) -> bool:
+        return all(np.array_equal(x, y)
+                   for x, y in zip(tokens[a], tokens[b]))
+
     by_mode = {p["mode"]: p for p in points}
+    batch_tps = max(by_mode["batch"]["tokens_per_s_decode_mean"], 1e-9)
+    batch_ttft = max(by_mode["batch"]["ttft_mean_s"], 1e-9)
     summary = {
         # < 1.0 = the scheduler improves mean time-to-first-token
-        "ttft_mean_ratio": (by_mode["scheduler"]["ttft_mean_s"]
-                            / max(by_mode["batch"]["ttft_mean_s"], 1e-9)),
+        "ttft_mean_ratio": by_mode["scheduler"]["ttft_mean_s"] / batch_ttft,
+        "ttft_mean_ratio_chunked":
+            by_mode["scheduler-chunked"]["ttft_mean_s"] / batch_ttft,
         # > 0 = the scheduler keeps more slot capacity emitting tokens
         "occupancy_gain": (by_mode["scheduler"]["slot_occupancy"]
                            - by_mode["batch"]["slot_occupancy"]),
-        "greedy_tokens_match": bool(match),
+        # decode throughput retained vs batch-at-a-time: one-shot admission
+        # tanks this (each admission stalls every live row for a whole
+        # prefill); chunked admission is gated on winning it back
+        "decode_tps_ratio":
+            by_mode["scheduler"]["tokens_per_s_decode_mean"] / batch_tps,
+        "decode_tps_ratio_chunked":
+            by_mode["scheduler-chunked"]["tokens_per_s_decode_mean"]
+            / batch_tps,
+        "greedy_tokens_match": _match("batch", "scheduler"),
+        "greedy_tokens_match_chunked": _match("scheduler",
+                                              "scheduler-chunked"),
     }
 
     import jax
@@ -117,7 +161,8 @@ def run() -> dict:
         "model": cfg.name,
         "backend": jax.default_backend(),
         "workload": {"seq": SEQ, "max_batch": MAX_BATCH,
-                     "max_new_tokens": list(MAX_NEW)},
+                     "max_new_tokens": list(MAX_NEW),
+                     "prefill_chunk": CHUNK, "prefill_pack": PACK},
         "points": points,
         "scheduler_vs_batch": summary,
     }

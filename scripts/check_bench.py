@@ -31,7 +31,16 @@ point regresses:
     batch path's (``--min-occupancy-gain``, a deterministic counter) and
     not drop vs baseline, and the scheduler's **mean TTFT** must improve
     on batch-at-a-time (``--max-ttft-ratio``; wall-clock, so the ceiling
-    is forgiving) and not erode vs the baseline ratio.
+    is forgiving) and not erode vs the baseline ratio;
+  * **serving decode throughput** (when the artifact records the
+    ``scheduler-chunked`` point): chunked admission's per-request decode
+    tokens/s must retain at least ``--min-decode-tps-ratio`` of the batch
+    path's — the gate the one-shot scheduler's 77-vs-136 tok/s collapse
+    would have tripped (TTFT and occupancy alone let it pass) — its
+    greedy tokens must bit-match the one-shot scheduler's, and its TTFT
+    ratio must stay under the tighter ``--max-chunked-ttft-ratio``
+    ceiling (chunked admission has to keep the TTFT win, not trade it
+    back for throughput).
 
 Points are matched by ``seq`` (and ``cache_len`` for decode, ``mode`` for
 serving); a fresh artifact missing a baseline point is a regression
@@ -78,6 +87,15 @@ TOL_TRAFFIC = 0.05         # absolute plan-traffic-fraction increase
 MIN_OCCUPANCY_GAIN = 0.05  # scheduler occupancy − batch occupancy floor
 MAX_TTFT_RATIO = 0.95      # scheduler/batch mean-TTFT ceiling
 TOL_TTFT = 0.5             # relative TTFT-ratio erosion allowed vs baseline
+# chunked-admission gates: per-request decode tokens/s retained vs the
+# batch path.  One-shot admission measures ~0.57 on the bench workload
+# (every admission stalls all live rows for a whole prefill) — below the
+# floor by design, so a change that silently knocks serving back to
+# one-shot decode economics fails the gate.  The chunked TTFT ceiling is
+# tighter than the generic one: interleaved admission must not trade the
+# TTFT win back for throughput.
+MIN_DECODE_TPS_RATIO = 0.7    # chunked/batch decode tokens/s floor
+MAX_CHUNKED_TTFT_RATIO = 0.8  # chunked/batch mean-TTFT ceiling
 
 
 def _load(path: str) -> dict:
@@ -225,7 +243,10 @@ def compare_serving(base: dict, fresh: dict, *,
                     tol_blocks: float = TOL_BLOCKS,
                     min_occupancy_gain: float = MIN_OCCUPANCY_GAIN,
                     max_ttft_ratio: float = MAX_TTFT_RATIO,
-                    tol_ttft: float = TOL_TTFT) -> List[str]:
+                    tol_ttft: float = TOL_TTFT,
+                    min_decode_tps_ratio: float = MIN_DECODE_TPS_RATIO,
+                    max_chunked_ttft_ratio: float = MAX_CHUNKED_TTFT_RATIO,
+                    ) -> List[str]:
     """Continuous-batching serving gates (``BENCH_serving.json``).
 
     Absolute invariants on the *fresh* artifact: the scheduler and the
@@ -237,6 +258,15 @@ def compare_serving(base: dict, fresh: dict, *,
     more than ``tol_blocks`` (absolute), the TTFT ratio may not erode by
     more than ``tol_ttft`` (relative), and throughput columns follow the
     loose ``tol_tokens`` rule.
+
+    Chunked-admission gates (active once the baseline records the
+    ``scheduler-chunked`` point — dropping the point afterwards is itself
+    a regression): the chunked serve's greedy tokens must bit-match the
+    one-shot scheduler's, its decode tokens/s must retain
+    ``min_decode_tps_ratio`` of the batch path's (the decode-throughput
+    gate TTFT + occupancy never covered), its TTFT ratio must stay under
+    ``max_chunked_ttft_ratio``, and the decode ratio may not erode vs
+    baseline by more than ``tol_tokens`` (relative, wall-clock noise).
     """
     errors: List[str] = []
     base_pts = _by_key(base.get("points", []), ("mode",))
@@ -277,6 +307,37 @@ def compare_serving(base: dict, fresh: dict, *,
     if br > 0 and ratio > br * (1.0 + tol_ttft):
         errors.append(f"serving: ttft_mean_ratio eroded {br:.2f} -> "
                       f"{ratio:.2f} (allowed {tol_ttft:.0%})")
+
+    # chunked-admission gates: engage once the baseline records the
+    # decode-throughput ratio (older baselines predate chunked admission
+    # and are exempt; once present, losing the column is a regression)
+    bdr = float(bs.get("decode_tps_ratio_chunked", 0.0))
+    if bdr > 0:
+        if "decode_tps_ratio_chunked" not in fs:
+            errors.append("serving: decode_tps_ratio_chunked disappeared "
+                          f"(baseline {bdr:.2f})")
+            return errors
+        if not fs.get("greedy_tokens_match_chunked", False):
+            errors.append("serving: chunked-admission tokens no longer "
+                          "bit-match the one-shot scheduler serve (greedy "
+                          "conformance broken)")
+        fdr = float(fs.get("decode_tps_ratio_chunked", 0.0))
+        if fdr < min_decode_tps_ratio:
+            errors.append(
+                f"serving: chunked decode_tps_ratio {fdr:.2f} below the "
+                f"{min_decode_tps_ratio:.2f} floor (chunked admission no "
+                f"longer retains batch-path decode throughput — one-shot "
+                f"admission economics are back)")
+        if fdr < bdr * (1.0 - tol_tokens):
+            errors.append(
+                f"serving: chunked decode_tps_ratio eroded {bdr:.2f} -> "
+                f"{fdr:.2f} (allowed drop {tol_tokens:.0%})")
+        cr = float(fs.get("ttft_mean_ratio_chunked", 1.0))
+        if cr > max_chunked_ttft_ratio:
+            errors.append(
+                f"serving: ttft_mean_ratio_chunked {cr:.2f} above the "
+                f"{max_chunked_ttft_ratio:.2f} ceiling (chunked admission "
+                f"traded the TTFT win back for throughput)")
     return errors
 
 
@@ -302,6 +363,10 @@ def main(argv=None) -> int:
                     default=MIN_OCCUPANCY_GAIN)
     ap.add_argument("--max-ttft-ratio", type=float, default=MAX_TTFT_RATIO)
     ap.add_argument("--tol-ttft", type=float, default=TOL_TTFT)
+    ap.add_argument("--min-decode-tps-ratio", type=float,
+                    default=MIN_DECODE_TPS_RATIO)
+    ap.add_argument("--max-chunked-ttft-ratio", type=float,
+                    default=MAX_CHUNKED_TTFT_RATIO)
     args = ap.parse_args(argv)
 
     if args.run:
@@ -344,7 +409,9 @@ def main(argv=None) -> int:
         else:
             extra = {"min_occupancy_gain": args.min_occupancy_gain,
                      "max_ttft_ratio": args.max_ttft_ratio,
-                     "tol_ttft": args.tol_ttft}
+                     "tol_ttft": args.tol_ttft,
+                     "min_decode_tps_ratio": args.min_decode_tps_ratio,
+                     "max_chunked_ttft_ratio": args.max_chunked_ttft_ratio}
         errs = cmp_fn(base, fresh, tol_tokens=args.tol_tokens,
                       tol_blocks=args.tol_blocks, **extra)
         print(f"[check_bench] {name} vs {tag}: "

@@ -59,6 +59,22 @@ def sliding_window_block_mask(nb: int, window_blocks: int,
     return causal & (window | sink)
 
 
+def segment_block_mask(nb: int, seg_blocks: int) -> jnp.ndarray:
+    """Block-diagonal segment-isolation mask for packed prefill.
+
+    ``nb`` blocks are split into contiguous segments of ``seg_blocks``; a
+    q block may only see kv blocks of its own segment.  ANDed with the
+    causal mask this makes a packed multi-prompt launch attention-equivalent
+    to independent per-prompt launches (positions are per-segment; the
+    pattern dictionary is still updated jointly — see serving docs).
+    """
+    if seg_blocks <= 0 or nb % seg_blocks:
+        raise ValueError(
+            f"segment of {seg_blocks} blocks does not tile {nb} blocks")
+    seg = jnp.arange(nb) // seg_blocks
+    return seg[:, None] == seg[None, :]
+
+
 def vertical_block_mask(nb: int, col_active: jnp.ndarray) -> jnp.ndarray:
     """Expand active kv-block columns ``(NB,) bool`` into a causal mask."""
     m = jnp.broadcast_to(col_active[None, :], (nb, nb))

@@ -114,7 +114,8 @@ def sparse_attention_fn(*, block_size: int, causal: bool = True,
 def batched_sparse_attention_fn(*, block_size: int, causal: bool = True,
                                 width: Optional[int] = None,
                                 interpret: Optional[bool] = None,
-                                mesh=None, shard_axis: str = "model"):
+                                mesh=None, shard_axis: str = "model",
+                                q_block_offset: Optional[int] = None):
     """Bind the batch-native sparse execution path as a batched AttentionFn.
 
     The returned callable satisfies the **batched** AttentionFn protocol —
@@ -137,6 +138,13 @@ def batched_sparse_attention_fn(*, block_size: int, causal: bool = True,
     Mask-grid and ``interpret`` contracts match :func:`sparse_attention_fn`;
     the misaligned-granularity fallback runs the dense chunked path per
     sample (a correctness escape hatch, not a production path).
+
+    ``q_block_offset`` binds a rectangular chunk launch: ``masks`` are
+    ``(B, H, NBq, NBkv)`` with ``NBq < NBkv`` allowed, q carries only the
+    chunk rows and k/v the full prefix, and causal bounds anchor at the
+    chunk's first block.  Chunk launches require exact ``block_size``
+    alignment on both axes (no dense fallback) and skip the mesh path —
+    chunked admission is single-device.
     """
     from repro.kernels.chunked import chunked_attention_fn
     from repro.kernels.indices import cap_block_mask as _cap
@@ -149,6 +157,16 @@ def batched_sparse_attention_fn(*, block_size: int, causal: bool = True,
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         n = q.shape[2]
         nb = masks.shape[-1]
+        if q_block_offset is not None:
+            nbq = masks.shape[-2]
+            if nbq * block_size != n or nb * block_size != k.shape[2]:
+                raise ValueError(
+                    f"chunk launch misaligned: mask grid ({nbq}, {nb}) at "
+                    f"block {block_size} vs q {n} / kv {k.shape[2]} tokens")
+            return batched_block_sparse_attention(
+                q, k, v, masks, block_size=block_size, causal=causal,
+                interpret=it, width=width, stats_gate=stats_gate,
+                q_block_offset=q_block_offset)
         if nb * block_size == n:
             if mesh is not None:
                 from repro.distributed.sharding import (

@@ -185,16 +185,24 @@ def block_sparse_attention_kernel(
 # --------------------------------------------------------------------------
 
 def ragged_schedule(nbq: int, nbkv: int, *, width: Optional[int] = None,
-                    causal: bool = True
+                    causal: bool = True,
+                    q_block_offset: Optional[int] = None,
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Static flattened step schedule for the batched kernel.
 
-    Row ``i`` of a causal mask can keep at most ``i + 1 + (NBkv − NBq)``
+    Row ``i`` of a causal mask can keep at most ``q_block_offset + i + 1``
     blocks, so it gets ``w_i = min(causal_bound_i, W)`` sequential steps
     (``W`` = the static per-row block budget, see
     :mod:`repro.kernels.indices`); non-causal rows get ``min(NBkv, W)``.
     The (row, slot) pairs are flattened row-major into one axis of
     ``T = Σ_i w_i`` steps — the kernel's per-(batch, head) sequential work.
+
+    ``q_block_offset`` places the q rows inside the kv block grid: q-block
+    ``i`` covers global positions starting at block ``q_block_offset + i``.
+    The default ``NBkv − NBq`` keeps the legacy "rows at the end" layout
+    (decode-style suffix queries; ``NBq == NBkv`` ⇒ offset 0).  Chunked
+    prefill passes the chunk's block cursor so an interior Q-chunk gets the
+    causal bounds of its own rows rather than the full rectangle.
 
     Returns ``(row_map, slot_map)``:
       * ``row_map`` — ``(T + 1,)`` int32, the q-block of each step, with a
@@ -205,7 +213,7 @@ def ragged_schedule(nbq: int, nbkv: int, *, width: Optional[int] = None,
     """
     w = nbkv if width is None else max(1, min(int(width), nbkv))
     rows, slots = [], []
-    shift = nbkv - nbq
+    shift = (nbkv - nbq) if q_block_offset is None else int(q_block_offset)
     for i in range(nbq):
         wi = min(i + 1 + shift, w) if causal else w
         wi = max(1, min(wi, nbkv))
@@ -217,11 +225,13 @@ def ragged_schedule(nbq: int, nbkv: int, *, width: Optional[int] = None,
 
 
 def ragged_grid_steps(nbq: int, nbkv: int, *, width: Optional[int] = None,
-                      causal: bool = True) -> int:
+                      causal: bool = True,
+                      q_block_offset: Optional[int] = None) -> int:
     """Sequential steps per (batch, head) under :func:`ragged_schedule` —
     the ``grid_steps`` counter benchmarks compare against the uniform
     ``NBq·NBkv`` rectangle."""
-    return int(ragged_schedule(nbq, nbkv, width=width, causal=causal)[1]
+    return int(ragged_schedule(nbq, nbkv, width=width, causal=causal,
+                               q_block_offset=q_block_offset)[1]
                .shape[0])
 
 
@@ -230,7 +240,7 @@ def _kernel_batched(row_ref, slot_ref, idx_ref, cnt_ref, gate_ref,  # SMEM
                     out_ref, stats_ref,           # outputs
                     acc_ref, m_ref, l_ref,        # VMEM scratch (H-indexed)
                     *, block_q: int, block_kv: int, scale: float,
-                    causal: bool):
+                    causal: bool, q_block_offset: int):
     b = pl.program_id(0)
     t = pl.program_id(1)
     h = pl.program_id(2)
@@ -258,7 +268,7 @@ def _kernel_batched(row_ref, slot_ref, idx_ref, cnt_ref, gate_ref,  # SMEM
             preferred_element_type=jnp.float32) * scale  # (bq, bk)
 
         if causal:
-            q_pos = row * block_q + jax.lax.broadcasted_iota(
+            q_pos = (q_block_offset + row) * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 0)
             k_pos = j * block_kv + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_kv), 1)
@@ -309,6 +319,7 @@ def block_sparse_attention_batched(
     block_size: int,
     causal: bool = True,
     stats_gate: Optional[jnp.ndarray] = None,   # (B, H) — emit Ã stats
+    q_block_offset: Optional[int] = None,
     interpret: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Batch-native count-aware block-sparse attention (module docstring).
@@ -326,6 +337,11 @@ def block_sparse_attention_batched(
     are computed; gated-off heads emit −inf, which the scatter maps to the
     "never visited" background.
 
+    ``NBq`` may be smaller than ``NBkv`` (a Q-chunk against the full
+    prefix); ``q_block_offset`` then names the chunk's first q block in the
+    kv grid (default ``NBkv − NBq``, the legacy suffix layout) and flows
+    into both the ragged schedule and the kernel's causal mask.
+
     Returns ``(out (B, H, N, Dv), stats_compact (B, T, H) f32)``; scatter
     the stats with :func:`repro.kernels.indices.scatter_schedule_stats`.
 
@@ -338,11 +354,14 @@ def block_sparse_attention_batched(
     _, h_kv, _, dv = v.shape
     group = h // h_kv
     nbq = n // block_size
-    nbkv = n // block_size
+    nbkv = k.shape[2] // block_size
     w = indices.shape[-1]
     scale = 1.0 / (d ** 0.5)
+    if q_block_offset is None:
+        q_block_offset = nbkv - nbq
 
-    row_map, slot_map = ragged_schedule(nbq, nbkv, width=w, causal=causal)
+    row_map, slot_map = ragged_schedule(nbq, nbkv, width=w, causal=causal,
+                                        q_block_offset=q_block_offset)
     t_steps = int(slot_map.shape[0])
     if stats_gate is None:
         stats_gate = jnp.ones((b, h), jnp.int32)
@@ -350,7 +369,7 @@ def block_sparse_attention_batched(
 
     kernel = functools.partial(
         _kernel_batched, block_q=block_size, block_kv=block_size,
-        scale=scale, causal=causal)
+        scale=scale, causal=causal, q_block_offset=int(q_block_offset))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,

@@ -55,10 +55,17 @@ def chunked_attention(
     window: int = 0,                    # sliding window in tokens (0 = full)
     sink: int = 0,                      # always-visible prefix tokens
     collect_stats: bool = False,
+    q_offset: Optional[int] = None,     # global position of q row 0 (tokens)
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
     """Exact attention, scanned over query blocks.
 
     Returns ``(out (B,H,N,Dv), a_tilde (B,H,NBq,NBkv) | None)``.
+
+    ``q_offset`` places the queries inside the key timeline: q row ``i`` is
+    global position ``q_offset + i``.  The default ``Nkv − N`` keeps the
+    legacy suffix alignment (one-shot prefill, decode tails); chunked
+    prefill passes the chunk's token cursor so an interior Q-chunk sees the
+    causal/window bounds of its own rows.
 
     When no block mask is given and no usable divisor of ``N`` exists (see
     :func:`largest_divisor_block`), the inputs are zero-padded to the
@@ -94,7 +101,7 @@ def chunked_attention(
     k32 = jnp.asarray(k, jnp.float32)
     v32 = jnp.asarray(v, jnp.float32)
     # query i is global position i+offset (original, pre-pad alignment)
-    offset = nkv_orig - n_orig
+    offset = (nkv_orig - n_orig) if q_offset is None else int(q_offset)
 
     kpos = jnp.arange(nkv)
 
@@ -102,13 +109,14 @@ def chunked_attention(
         del carry
         qb = jax.lax.dynamic_slice_in_dim(q32, i * block_size, block_size, 2)
         logits = jnp.einsum("bhqd,bhkd->bhqk", qb, k32) * scale
-        qpos = i * block_size + jnp.arange(block_size) + offset
+        qidx = i * block_size + jnp.arange(block_size)
+        qpos = qidx + offset
         valid = jnp.ones((block_size, nkv), dtype=bool)
         if pad_kv:
             valid &= kpos[None, :] < nkv_orig
         if pad_q:
             # padded query rows must not leak into collect_stats block means
-            valid &= qpos[:, None] < nkv_orig
+            valid &= qidx[:, None] < n_orig
         if causal:
             valid &= kpos[None, :] <= qpos[:, None]
         if window > 0:

@@ -98,11 +98,11 @@ def block_sparse_attention(
 
 @functools.partial(jax.jit,
                    static_argnames=("block_size", "causal", "interpret",
-                                    "width"))
+                                    "width", "q_block_offset"))
 def batched_block_sparse_attention(
     q: jnp.ndarray,             # (B, H, N, Dqk)
-    k: jnp.ndarray,             # (B, Hkv, N, Dqk)
-    v: jnp.ndarray,             # (B, Hkv, N, Dv)
+    k: jnp.ndarray,             # (B, Hkv, Nkv, Dqk)
+    v: jnp.ndarray,             # (B, Hkv, Nkv, Dv)
     block_mask: jnp.ndarray,    # (B, H, NBq, NBkv) bool
     *,
     block_size: int,
@@ -110,6 +110,7 @@ def batched_block_sparse_attention(
     interpret: bool = True,
     width: Optional[int] = None,   # static per-row block budget W
     stats_gate: Optional[jnp.ndarray] = None,   # (B, H) — emit Ã stats
+    q_block_offset: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Batch-native block-sparse attention + scattered Ã.
 
@@ -120,14 +121,20 @@ def batched_block_sparse_attention(
     to the full Ã layout.  ``stats_gate`` limits the fused-stats work to the
     heads whose Ã is consumed (dense-construction heads); gated-off heads
     get all-background (−inf) Ã rows.
+
+    ``NBq < NBkv`` runs a Q-chunk against the full prefix;
+    ``q_block_offset`` (default ``NBkv − NBq``) names the chunk's first q
+    block in the kv grid — chunked prefill's rectangular chunk launch.
     """
     indices, counts = compact_block_mask(block_mask, width=width)
     out, stats_compact = block_sparse_attention_batched(
         q, k, v, indices, counts, block_size=block_size, causal=causal,
-        stats_gate=stats_gate, interpret=interpret)
+        stats_gate=stats_gate, q_block_offset=q_block_offset,
+        interpret=interpret)
     nbq = q.shape[2] // block_size
     row_map, slot_map = ragged_schedule(
-        nbq, block_mask.shape[-1], width=indices.shape[-1], causal=causal)
+        nbq, block_mask.shape[-1], width=indices.shape[-1], causal=causal,
+        q_block_offset=q_block_offset)
     a_tilde = scatter_schedule_stats(stats_compact, indices, row_map,
                                      slot_map, block_mask.shape[-1])
     return out, a_tilde

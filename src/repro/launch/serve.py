@@ -53,6 +53,14 @@ def main():
                     help="slot-based continuous batching (per-slot decode "
                     "positions, EOS early exit, in-flight slot refill) "
                     "instead of batch-at-a-time")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="step-cadence chunked admission: tokens per "
+                    "prefill quantum interleaved with decode steps (0 = "
+                    "whole-sequence one-shot admission); scheduler only")
+    ap.add_argument("--prefill-pack", type=int, default=1,
+                    help="pack up to N same-bucket queued prompts into one "
+                    "chunked prefill run (block-diagonal isolation mask, "
+                    "one slot per segment); needs --prefill-chunk")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulated request arrivals per second (0 = all "
                     "requests arrive at once); the scheduler honours "
@@ -97,6 +105,8 @@ def main():
                      decode_sparse=args.decode_sparse,
                      max_batch=args.max_batch,
                      scheduler=args.scheduler,
+                     prefill_chunk=args.prefill_chunk,
+                     prefill_pack=args.prefill_pack,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -126,8 +136,15 @@ def main():
     if args.scheduler and mode == "batch":
         print("note: --scheduler requested but this family has no per-slot "
               "cache layout; served batch-at-a-time (dense carve-out)")
+    if mode == "scheduler" and engine._chunk_tokens(args.prompt_len):
+        mode = "scheduler-chunked"
+    elif args.prefill_chunk > 0 and args.scheduler:
+        print("note: --prefill-chunk requested but this config cannot be "
+              "chunk-admitted (see ServingEngine._chunk_tokens); served "
+              "with one-shot admission")
     print(f"total wall {wall:.2f}s, method={args.method}, mode={mode}, "
-          f"slot occupancy {engine.slot_occupancy():.3f}")
+          f"slot occupancy {engine.slot_occupancy():.3f}, "
+          f"phase_s={ {k: round(v, 3) for k, v in engine.phase_s.items()} }")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
-from repro.models import hybrid, ssm_stack, transformer, whisper
+from repro.models import (chunked_prefill, hybrid, ssm_stack, transformer,
+                          whisper)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +30,9 @@ class Model:
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
     init_cache: Callable[..., Any]
+    # step-cadence chunked admission (models.chunked_prefill.ChunkPrefillApi);
+    # None on families/layouts that can only prefill one-shot
+    prefill_chunk: Optional[Any] = None
 
     def default_share_prefill(self) -> SharePrefill:
         """Trivial clustering (per-head clusters) until an offline artifact
@@ -82,6 +86,7 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
                 prefill_len=prefill_len, decode_impl=decode_impl)
         ic = lambda batch, cache_len, dtype=jnp.float32: \
             transformer.init_cache(cfg, batch, cache_len, dtype)
+        pc = chunked_prefill.make_chunk_prefill(cfg)
     else:
         fwd = lambda p, tokens, positions=None, embeds=None: \
             mod.forward_train(p, cfg, tokens, positions, embeds)
@@ -95,6 +100,7 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
                 embeds=embeds)
         ic = lambda batch, cache_len, dtype=jnp.float32: \
             mod.init_cache(cfg, batch, cache_len, dtype)
+        pc = None
 
     return Model(
         cfg=cfg,
@@ -103,4 +109,5 @@ def build_model(cfg: ModelConfig, dtype=jnp.float32) -> Model:
         prefill=pf,
         decode=dec,
         init_cache=ic,
+        prefill_chunk=pc,
     )

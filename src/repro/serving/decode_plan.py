@@ -220,6 +220,33 @@ def empty_decode_plan(cfg: ModelConfig, *, batch: int, cache_len: int,
         keep_heads=jnp.zeros(shape + (nb, g), bool))
 
 
+def dense_decode_plan(cfg: ModelConfig, *, cache_len: int,
+                      block_size: int) -> DecodePlan:
+    """Single-row all-keep plan: the per-request dense fallback.
+
+    When one admission yields no pattern dictionary (``sp_state is None`` —
+    e.g. a bucket below ``min_seq_blocks``) the request still needs a plan
+    row that attends the whole cache, not the inert all-False row — an
+    occupied slot with an empty table would emit zeros.  Every block is
+    kept for every head (ascending full tables), so splicing this row makes
+    that one slot decode densely while the other slots keep their sparse
+    tables — the per-request fallback that replaces the scheduler-wide
+    sticky disable.
+    """
+    nb = cache_len // block_size
+    if cache_len % block_size:
+        raise ValueError(f"cache_len {cache_len} must be a multiple of the "
+                         f"pattern block size {block_size}")
+    hkv = max(cfg.num_kv_heads, 1)
+    g = cfg.num_heads // hkv
+    shape = (cfg.num_layers, 1, hkv)
+    return DecodePlan(
+        indices=jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32),
+                                 shape + (nb,)),
+        counts=jnp.full(shape, nb, jnp.int32),
+        keep_heads=jnp.ones(shape + (nb, g), bool))
+
+
 def update_plan_slot(plan: DecodePlan, new: DecodePlan,
                      slot: int) -> DecodePlan:
     """In-flight DecodePlan splicing: replace batch row ``slot``.

@@ -26,6 +26,26 @@ latent caches and the non-transformer families keep the legacy
 batch-at-a-time path below (the dense carve-out — their caches have no
 per-slot write layout).
 
+**Step-cadence chunked admission.**  With ``prefill_chunk > 0`` the
+scheduler stops running admissions as monolithic prefill launches (which
+stall every occupied decode slot for the whole prefill) and instead drives
+them as a sequence of small *quanta* (``repro.models.chunked_prefill`` via
+:meth:`ServingEngine._chunk_fns`): per layer, a full-sequence mask-staging
+quantum, one rectangular Q-chunk × full-KV attention launch per
+``prefill_chunk`` tokens (the batched block-sparse kernel with
+``q_block_offset``), and a full-sequence FFN/dictionary quantum.  The
+engine interleaves at most one quantum with each decode step, writes the
+admitting request's KV rows incrementally per layer
+(:meth:`cache_insert_layer` — the partial-insert invariant: prefill writes
+land in ``[0, seq)`` while inert-slot decode writes stay in the tail, so
+in-flight rows never collide), and splices the DecodePlan row only once
+the final quantum completes.  ``prefill_pack > 1`` additionally packs
+several short queued prompts into one chunked run (per-segment positions +
+a block-diagonal isolation mask; each segment lands in its own slot).
+Quantum programs are cached per ``(total_len, width, seg_blocks)`` shape in
+``_chunk_cache``, layer-indexed by a *traced* scalar so the cache stays
+O(chunks), not O(layers × chunks).
+
 Requests are padded to a block multiple, grouped by sequence bucket, and
 served by two jitted programs (prefill, decode step) shared across request
 shapes; the scheduler reuses the same compiled-program caches (prefill at
@@ -93,6 +113,11 @@ class Request:
     queue_s: float = 0.0                # arrival → prefill start
     ttft_s: float = 0.0                 # arrival → first token
     decode_tokens_per_s: float = 0.0    # (n_tokens - 1) / decode_s
+    prefill_stall_s: float = 0.0        # decode wall time other slots lost
+                                        # to THIS request's admission (its
+                                        # prefill wall while ≥1 slot was
+                                        # occupied; a packed run's stall is
+                                        # split across its segments)
     truncated: bool = False             # prompt clipped to the largest bucket
     finish_reason: str = ""             # "stop" (EOS) | "length"
     pattern_stats: Optional[Dict[str, float]] = None
@@ -134,6 +159,18 @@ class EngineConfig:
     # cache/DecodePlan splicing.  Transformer families only — MLA and the
     # non-transformer caches fall back to the legacy batch-at-a-time path.
     scheduler: bool = False
+    # step-cadence chunked admission (tokens per prefill quantum, rounded up
+    # to the pattern block size; 0 = whole-sequence one-shot admission).
+    # Only takes effect under the scheduler on layouts with a chunkable
+    # prefill (Model.prefill_chunk) — see ServingEngine._chunk_tokens.
+    prefill_chunk: int = 0
+    # multi-prompt prefill packing: concatenate up to this many same-bucket
+    # queued prompts into one chunked run (per-segment positions + block-
+    # diagonal isolation mask; each segment lands in its own slot).  1 = no
+    # packing.  Requires a masked prefill path (method != "dense", pattern
+    # sharing applicable, no sliding window) — unpackable runs fall back to
+    # one prompt per run.
+    prefill_pack: int = 1
 
 
 class ServingEngine:
@@ -145,6 +182,7 @@ class ServingEngine:
         self.ecfg = ecfg
         self._prefill_cache: Dict[Any, Callable] = {}
         self._decode_cache: Dict[Any, Callable] = {}
+        self._chunk_cache: Dict[Any, Dict[str, Callable]] = {}
         self._density_obs: Dict[int, List[float]] = {}
         self._pop_obs: Dict[int, List[float]] = {}   # max_row_pop per batch
         self._width_frozen: Dict[int, Optional[int]] = {}
@@ -153,6 +191,12 @@ class ServingEngine:
         # were actually still emitting tokens (both serving paths update it)
         self.slot_steps = 0
         self.active_slot_steps = 0
+        # per-phase wall-time accounting, reset per serve(): where the
+        # scheduler's step loop spent its time (admission quanta vs decode
+        # steps vs idle sleeps) — the observable that makes admission
+        # interference measurable instead of inferred
+        self.phase_s: Dict[str, float] = {"prefill": 0.0, "decode": 0.0,
+                                          "idle": 0.0}
 
     def slot_occupancy(self) -> float:
         """Mean fraction of decode slot capacity doing useful work during
@@ -282,6 +326,90 @@ class ServingEngine:
             self._decode_cache[key] = jax.jit(fn)
         return self._decode_cache[key]
 
+    def _chunk_tokens(self, seq: int) -> int:
+        """Resolve the admission chunk size (tokens per prefill quantum) for
+        a bucket — 0 means one-shot admission.
+
+        Chunked admission needs the quantum decomposition the transformer
+        families expose (``Model.prefill_chunk``), a chunk-capable attention
+        impl (the batched sparse kernel or the dense chunked path — the
+        single-sample ``ref``/``kernel`` validation pins have no rectangular
+        launch), a block-aligned bucket, and a single-device serve (the
+        quanta are not mesh-routed).  Anything else falls back to the
+        one-shot path, same numerics as before.
+        """
+        c = self.ecfg.prefill_chunk
+        if c <= 0 or not self._supports_scheduler():
+            return 0
+        if self.model.prefill_chunk is None:
+            return 0
+        from repro.models.attention import resolved_attn_impl
+        if resolved_attn_impl(self.ecfg.attn_impl) not in ("chunked",
+                                                           "sparse"):
+            return 0
+        from repro.distributed.sharding import active_model_mesh
+        if active_model_mesh() is not None:
+            return 0
+        bs = min(self.sp.cfg.block_size if self.sp.cfg.enabled else 128, seq)
+        if seq % bs:
+            return 0
+        c = max(((c + bs - 1) // bs) * bs, bs)
+        return min(c, seq)
+
+    def _chunk_fns(self, total: int, width: Optional[int],
+                   seg_blocks: Optional[int]) -> Dict[str, Callable]:
+        """Jitted quantum programs for one (packed) admission shape.
+
+        Keyed by ``(total_len, width, seg_blocks, rules)`` — NOT by layer:
+        every quantum takes the full stacked params plus a *traced* layer
+        index (``models.chunked_prefill._layer_params`` slices in-graph), so
+        one compiled program per quantum kind serves every layer and the
+        cache stays O(chunks) programs per shape.
+        """
+        key = (total, width, seg_blocks, current_rules())
+        if key not in self._chunk_cache:
+            api = self.model.prefill_chunk
+            sp = self.sp
+            method, impl = self.ecfg.method, self.ecfg.attn_impl
+
+            def layer_begin(params, li, x, positions, sp_state, cluster_arr):
+                return api.layer_begin(params, li, x, positions, sp,
+                                       sp_state, cluster_arr, method=method,
+                                       attn_impl=impl, seg_blocks=seg_blocks)
+
+            import functools
+
+            @functools.partial(jax.jit,
+                               static_argnames=("chunk_start",
+                                                "chunk_blocks"))
+            def attn(q, k, v, masks, gate, perm, *, chunk_start,
+                     chunk_blocks):
+                return api.attn(sp, q, k, v, masks, gate, perm,
+                                method=method, attn_impl=impl,
+                                attn_width=width, chunk_start=chunk_start,
+                                chunk_blocks=chunk_blocks)
+
+            def layer_end(params, li, x, outs, k, v, ats, masks, decision,
+                          sp_state, cluster_arr):
+                out = (jnp.concatenate(outs, axis=2) if len(outs) > 1
+                       else outs[0])
+                at = None
+                if ats is not None:
+                    at = (jnp.concatenate(ats, axis=2) if len(ats) > 1
+                          else ats[0])
+                return api.layer_end(params, li, x, out, k, v, at, masks,
+                                     decision, sp, sp_state, cluster_arr,
+                                     method=method)
+
+            self._chunk_cache[key] = {
+                "begin": jax.jit(api.begin),
+                "layer_begin": jax.jit(layer_begin),
+                "attn": attn,
+                "layer_end": jax.jit(layer_end),
+                "finish": jax.jit(api.finish),
+            }
+        return self._chunk_cache[key]
+
     # -- serving ----------------------------------------------------------
     def serve(self, requests: List[Request], *, seed: int = 0
               ) -> List[Request]:
@@ -296,6 +424,7 @@ class ServingEngine:
         t0 = time.time()
         self.slot_steps = 0
         self.active_slot_steps = 0
+        self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0}
         groups: Dict[int, List[Request]] = {}
         for r in requests:
             groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
@@ -363,6 +492,39 @@ class ServingEngine:
                        for c, n in zip(cache["prefix"], new["prefix"])],
             "stack": jax.tree.map(ins(1), cache["stack"], new["stack"]),
         }
+
+    @staticmethod
+    def cache_insert_layer(cache, layer: int, slot: int, k, v, *,
+                           offset: int = 0, length: Optional[int] = None):
+        """Partial :meth:`cache_insert`: write ONE layer's freshly computed
+        K/V (``(Hkv, S, hd)``-shaped after dropping the unit batch axis)
+        into row ``slot`` of the running decode cache (``k``/``v`` keep
+        their unit batch axis: ``(1, Hkv, S, hd)``; ``offset``/``length``
+        trim a packed segment out of the layer's full K/V first).
+
+        This is the incremental-write half of chunked admission: each
+        layer's KV lands as soon as its quantum finishes, while decode
+        keeps stepping the other slots.  Safe by construction — prefill
+        writes stay in ``[0, seq)`` of the admitted slot while an inert
+        slot's decode writes land at its frozen tail position, and decode
+        validity masks the admitted row until its DecodePlan row is
+        spliced.  Stacked transformer layout only (``(L, B, Hkv, S, hd)``);
+        prefix layers are refused by ``make_chunk_prefill``."""
+        if length is not None:
+            # packed run: slice segment [offset, offset+length) out of the
+            # packed sequence axis; the segment always lands at the START of
+            # its own slot's row (slot-local positions restart at 0)
+            k = jax.lax.slice_in_dim(k, offset, offset + length, axis=2)
+            v = jax.lax.slice_in_dim(v, offset, offset + length, axis=2)
+        ck, cv = cache["stack"]
+        start = (layer, slot, 0, 0, 0)
+        # k[None]: (1, 1, Hkv, Sseg, hd) — rank-matches the (L, B, Hkv, S,
+        # hd) stack leaf; the write lands at [layer, slot, :, 0:Sseg, :]
+        ck = jax.lax.dynamic_update_slice(ck, k[None].astype(ck.dtype),
+                                          start)
+        cv = jax.lax.dynamic_update_slice(cv, v[None].astype(cv.dtype),
+                                          start)
+        return {"prefix": cache["prefix"], "stack": (ck, cv)}
 
     def _supports_sparse_decode(self) -> bool:
         cfg = self.model.cfg

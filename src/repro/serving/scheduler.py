@@ -1,6 +1,6 @@
 """Slot-based continuous-batching scheduler for the serving engine.
 
-Owns the request lifecycle — WAITING → PREFILL → DECODE → DONE — over a
+Owns the request lifecycle — WAITING → PREFILLING → DECODE → DONE — over a
 persistent fixed-shape decode state of ``max_batch`` *slots*:
 
   * **Per-slot positions.**  Every slot decodes at its own ``pos`` (the
@@ -10,17 +10,45 @@ persistent fixed-shape decode state of ``max_batch`` *slots*:
     slot-validity mask is per-row, so rows never see each other's state.
   * **In-flight slot replacement.**  When a slot finishes (stop token or
     its own ``max_new_tokens``) it is freed immediately and the next
-    WAITING request is admitted: prefilled alone (batch-1 program), its KV
-    written into the slot's cache row (:meth:`ServingEngine.cache_insert`,
-    the inverse of ``grow_cache``) and — under ``decode_sparse`` — its
-    freshly built DecodePlan row spliced into the live plan
-    (``decode_plan.update_plan_slot_auto``; Hkv-sharded under a mesh)
-    without touching the other slots' tables.
+    WAITING request is admitted: its KV is written into the slot's cache
+    row (:meth:`ServingEngine.cache_insert` /
+    :meth:`~ServingEngine.cache_insert_layer`) and — under
+    ``decode_sparse`` — its freshly built DecodePlan row spliced into the
+    live plan (``decode_plan.update_plan_slot_auto``; Hkv-sharded under a
+    mesh) without touching the other slots' tables.  An admission whose
+    prefill yields no pattern dictionary (``sp_state is None``) gets the
+    all-keep ``decode_plan.dense_decode_plan`` row — a *per-request* dense
+    fallback; the other slots (and later admissions) stay sparse.
+  * **Step-cadence chunked admission** (``EngineConfig.prefill_chunk``).
+    With one-shot admission every occupied slot stalls for the entire
+    prefill launch — the decode-throughput cliff this scheduler originally
+    shipped with.  In chunked mode an admission becomes a
+    :class:`~repro.serving.chunked_prefill.ChunkedPrefillRun` — a sequence
+    of small quanta (mask staging / rectangular Q-chunk attention / FFN +
+    dictionary update, per layer) — and the main loop interleaves **at
+    most one quantum with each decode step**, so the stall per step is
+    bounded by the largest single quantum instead of the whole prefill.
+    Each layer's K/V is inserted into the admitted slot as soon as its
+    quantum completes (safe: prefill writes land in ``[0, seq)`` while
+    inert-slot decode writes stay at the frozen tail position); the
+    DecodePlan row and first sampled token happen only when the final
+    quantum completes, so a half-prefilled slot is never decoded.
+  * **Multi-prompt prefill packing** (``EngineConfig.prefill_pack``).
+    Several short queued prompts concatenate into ONE chunked run — per-
+    segment positions, a block-diagonal isolation mask, one kernel launch
+    — and each segment's K/V slice lands in its own slot, with per-segment
+    DecodePlan rows cut from the packed pattern dictionary
+    (``sparse_decode.packed_decode_keep_blocks``).  Packing needs the masked
+    prefill path (``method != "dense"``, pattern sharing applicable, no
+    sliding window); unpackable configs admit one prompt per run.
   * **Inert slots.**  An unoccupied slot keeps decoding (fixed-shape jitted
     step) but its tables are empty / its sampled tokens discarded; validity
     masking means stale cache values never reach a softmax, so occupied
     rows are bitwise independent of slot churn — with greedy sampling the
-    scheduler's output tokens bit-match the legacy batch-at-a-time serve.
+    scheduler's output tokens bit-match the legacy batch-at-a-time serve,
+    and chunked admission keeps the same guarantee (per-request sampling
+    keys derive from ``uid``; rows are independent, so admission cadence
+    cannot change any request's token stream).
     (Caveat: under the adaptive width policies — ``width_policy="auto"`` /
     ``"count"`` — the prefill cap freezes after the first *observation*,
     which is per single-request prefill here but per batch in the legacy
@@ -29,22 +57,32 @@ persistent fixed-shape decode state of ``max_batch`` *slots*:
     once both paths' caps are frozen equal.)
 
 The scheduler reuses the engine's compiled-program caches (prefill at
-batch 1; the decode program retraces once for vector ``pos``), its width
-policies, and its slot-occupancy accounting.  Arrival simulation: requests
-carry ``arrival_s`` offsets (relative to ``serve()`` start); a request is
-admitted only once its arrival time has passed — the scheduler sleeps only
-when every slot is idle.  Per-request metrics are real, not batch-wide
-copies: ``queue_s`` (arrival → prefill start), ``ttft_s`` (arrival → first
-token), ``decode_s`` / ``decode_tokens_per_s`` (first token → last token).
+batch 1 or the chunk-quantum cache; the decode program retraces once for
+vector ``pos``), its width policies, and its slot-occupancy accounting.
+Admission interference is *measured*, not inferred: every prefill quantum
+(or one-shot launch) adds to ``engine.phase_s["prefill"]`` — decode steps
+and idle sleeps likewise — and wall time a request's admission spent while
+≥ 1 slot was occupied lands in that request's ``prefill_stall_s`` (split
+across a packed run's segments).
+
+Arrival simulation: requests carry ``arrival_s`` offsets (relative to
+``serve()`` start); a request is admitted only once its arrival time has
+passed — the scheduler sleeps only when every slot is idle.  Per-request
+metrics are real, not batch-wide copies: ``queue_s`` (arrival → prefill
+start), ``ttft_s`` (arrival → first token), ``decode_s`` /
+``decode_tokens_per_s`` (first token → last token).
 
 MLA latent caches and the non-transformer families never reach this module
 — ``ServingEngine.serve`` routes them through the legacy batch path (the
-dense carve-out; their caches have no per-slot write layout).
+dense carve-out; their caches have no per-slot write layout).  Configs a
+chunked admission cannot serve (``ServingEngine._chunk_tokens`` → 0) keep
+the one-shot admission path unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import types
 from collections import deque
 from typing import List, Optional
 
@@ -53,6 +91,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import decode_plan as dplan
+from repro.serving import sparse_decode
+from repro.serving.chunked_prefill import ChunkedPrefillRun
 from repro.serving.sampling import sample_token
 
 
@@ -98,14 +138,15 @@ class SlotScheduler:
         self.pos = np.full((self.nslots,), seq, np.int32)
         self.plens = np.full((self.nslots,), seq, np.int32)
         self.cache = None
-        # decode-phase pattern sharing: the same predicate as the legacy
-        # path (sp_state is non-None exactly when sp is enabled+applicable)
-        # decode-phase pattern sharing: pre-commit from the config, but the
-        # first prefill's sp_state stays the source of truth — if it comes
-        # back None the scheduler falls back to dense decode exactly like
-        # the legacy path's `result.sp_state is not None` gate (_start)
+        # decode-phase pattern sharing: committed up front from the config
+        # AND the bucket's pattern applicability — the predicate that makes
+        # the per-request `sp_state is None` fallback (dense_decode_plan in
+        # _start/_complete_run) genuinely per-request instead of the old
+        # sticky scheduler-wide disable
         self.use_sparse = (ecfg.decode_sparse and ecfg.method == "share"
-                           and engine._supports_sparse_decode())
+                           and engine._supports_sparse_decode()
+                           and engine.sp.cfg.enabled
+                           and engine.sp.applicable(seq))
         self.plan = None
         self._empty_row = None
         self._stale_slots = set()       # vacated, plan row not yet emptied
@@ -120,8 +161,16 @@ class SlotScheduler:
                 engine.model.cfg, batch=1, cache_len=self.cache_len,
                 block_size=blk)
 
+        # step-cadence chunked admission (0 = one-shot path)
+        self.chunk = engine._chunk_tokens(seq)
+        self.run_: Optional[ChunkedPrefillRun] = None
+        self._run_wall = 0.0
+
     # -- lifecycle ------------------------------------------------------
     def run(self) -> None:
+        if self.chunk:
+            self._run_chunked()
+            return
         while self.queue or any(s is not None for s in self.slots):
             self._admit()
             self._flush_stale_slots()
@@ -129,6 +178,17 @@ class SlotScheduler:
                 self._decode_step()
         self._flush_stale_slots()       # leave the documented invariant:
                                         # unoccupied slots' tables are empty
+
+    def _run_chunked(self) -> None:
+        """Chunked main loop: one prefill quantum, then one decode step —
+        the fair-share cadence that bounds admission stall per step."""
+        while (self.queue or self.run_ is not None
+               or any(s is not None for s in self.slots)):
+            self._prefill_step()
+            self._flush_stale_slots()
+            if any(s is not None for s in self.slots):
+                self._decode_step()
+        self._flush_stale_slots()
 
     def _flush_stale_slots(self) -> None:
         """Empty the plan rows of slots vacated since the last decode step.
@@ -154,12 +214,14 @@ class SlotScheduler:
                 if any(s is not None for s in self.slots):
                     return              # keep decoding, admit it later
                 time.sleep(wait)        # fully idle: jump to next arrival
+                self.eng.phase_s["idle"] += wait
             self.queue.popleft()
             self._start(r, free[0])
 
     def _start(self, r, slot: int) -> None:
-        """PREFILL → DECODE: prefill one request alone, sample its first
-        token, splice its KV row and DecodePlan row into the live state."""
+        """PREFILL → DECODE: prefill one request alone (one-shot), sample
+        its first token, splice its KV row and DecodePlan row into the live
+        state."""
         eng, seq = self.eng, self.seq
         toks = np.zeros((1, seq), np.int32)
         plen = eng._pad_prompt(r, seq, toks[0])
@@ -172,13 +234,11 @@ class SlotScheduler:
                          jnp.asarray([plen], jnp.int32))
         jax.block_until_ready(result.last_logits)
         r.prefill_s = time.time() - tp
-
-        if self.use_sparse and result.sp_state is None:
-            # same gate as the legacy path: no pattern dictionary came back
-            # (sp disabled / not applicable) → dense decode for this bucket
-            self.use_sparse = False
-            self.plan = self._empty_row = None
-            self._stale_slots.clear()
+        eng.phase_s["prefill"] += r.prefill_s
+        if any(s is not None for s in self.slots):
+            # the whole-sequence launch ran while other slots wanted to
+            # decode — the interference chunked admission amortizes
+            r.prefill_stall_s = r.prefill_s
 
         stats = eng._record_prefill_stats(result, width, seq)
         r.pattern_stats = stats
@@ -212,9 +272,18 @@ class SlotScheduler:
                                               dtype=dt)
         self.cache = eng.cache_insert(self.cache, result.cache, slot)
         if self.use_sparse:
-            rplan = dplan.build_decode_plan_auto(
-                eng.sp, result.sp_state, eng.model.cfg,
-                prefill_len=seq, cache_len=self.cache_len)
+            if result.sp_state is not None:
+                rplan = dplan.build_decode_plan_auto(
+                    eng.sp, result.sp_state, eng.model.cfg,
+                    prefill_len=seq, cache_len=self.cache_len)
+            else:
+                # no pattern dictionary came back for THIS admission → give
+                # its slot the all-keep dense row; every other slot (and
+                # every later admission) keeps sparse decode.  Replaces the
+                # old sticky scheduler-wide use_sparse disable.
+                rplan = dplan.dense_decode_plan(
+                    eng.model.cfg, cache_len=self.cache_len,
+                    block_size=max(eng.sp.cfg.block_size, 1))
             stats.update(eng._plan_stats(rplan, self.cache_len))
             self.plan = dplan.update_plan_slot_auto(self.plan, rplan, slot,
                                                     eng.model.cfg)
@@ -223,10 +292,172 @@ class SlotScheduler:
         self.plens[slot] = plen
         self.slots[slot] = s
 
+    # -- chunked admission ----------------------------------------------
+    def _pack_limit(self) -> int:
+        """Max prompts one chunked run may pack.  Packing concatenates
+        segments on one masked grid, so it needs a mask-carrying prefill
+        (the block-diagonal isolation mask has nowhere to go on the pure
+        dense path), an applicable pattern config at the packed length, and
+        no sliding window (whose width is measured on packed positions)."""
+        eng = self.eng
+        p = max(eng.ecfg.prefill_pack, 1)
+        if p <= 1:
+            return 1
+        if eng.ecfg.method == "dense" or not eng.sp.cfg.enabled:
+            return 1
+        if eng.model.cfg.sliding_window:
+            return 1
+        if self.seq % max(eng.sp.cfg.block_size, 1):
+            return 1
+        while p > 1 and not eng.sp.applicable(self.seq * p):
+            p -= 1
+        return p
+
+    def _assemble_run(self) -> Optional[ChunkedPrefillRun]:
+        """Gather arrived queue heads into the next chunked run — one
+        segment per free slot, up to the pack limit."""
+        eng = self.eng
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return None
+        wait = (self.t0 + self.queue[0].arrival_s) - time.time()
+        if wait > 0:
+            if any(s is not None for s in self.slots):
+                return None             # keep decoding, admit it later
+            time.sleep(wait)            # fully idle: jump to next arrival
+            eng.phase_s["idle"] += wait
+
+        limit = min(self._pack_limit(), len(free))
+        group, now = [], time.time()
+        while (self.queue and len(group) < limit
+               and (self.t0 + self.queue[0].arrival_s) <= now):
+            group.append(self.queue.popleft())
+        if not group:
+            return None
+        for r in group:
+            r.queue_s = max(now - (self.t0 + r.arrival_s), 0.0)
+        # the width-policy observations cover the solo bucket geometry, not
+        # the packed grid — packed runs prefill uncapped
+        width = eng._width_cap(self.seq) if len(group) == 1 else None
+        self._run_wall = 0.0
+        return ChunkedPrefillRun(eng, group, free[: len(group)], self.seq,
+                                 self.chunk, width)
+
+    def _prefill_step(self) -> None:
+        """Advance admission by exactly ONE quantum (assembling a new run
+        first if none is in flight): the chunked loop's prefill share of
+        each scheduler step."""
+        if self.run_ is None:
+            self.run_ = self._assemble_run()
+            if self.run_ is None:
+                return
+        run = self.run_
+        occupied = any(s is not None for s in self.slots)
+        tq = time.time()
+        ev = run.step()
+        dt = time.time() - tq
+        self._run_wall += dt
+        self.eng.phase_s["prefill"] += dt
+        if occupied:
+            # this quantum ran instead of a decode step: charge the stall
+            # to the admitting request(s), split across packed segments
+            share = dt / len(run.requests)
+            for r in run.requests:
+                r.prefill_stall_s += share
+        if ev == "kv":
+            self._insert_kv(run)
+        elif ev == "done":
+            self._complete_run(run)
+            self.run_ = None
+
+    def _insert_kv(self, run: ChunkedPrefillRun) -> None:
+        """Write the just-finalized layer's K/V into the admitted slot(s)
+        — incremental insert, while the other slots keep decoding."""
+        eng = self.eng
+        k, v = run.kv
+        if self.cache is None:
+            self.cache = eng.model.init_cache(self.nslots, self.cache_len,
+                                              dtype=k.dtype)
+        for j, slot in enumerate(run.slot_ids):
+            if run.P > 1:
+                self.cache = eng.cache_insert_layer(
+                    self.cache, run.kv_layer, slot, k, v,
+                    offset=j * self.seq, length=self.seq)
+            else:
+                self.cache = eng.cache_insert_layer(
+                    self.cache, run.kv_layer, slot, k, v)
+
+    def _plan_row(self, run: ChunkedPrefillRun, j: int):
+        """Single-slot DecodePlan row for segment ``j`` of a finished run."""
+        eng = self.eng
+        cfg = eng.model.cfg
+        if run.sp_state is None:
+            # per-request dense fallback — same contract as _start
+            return dplan.dense_decode_plan(
+                cfg, cache_len=self.cache_len,
+                block_size=max(eng.sp.cfg.block_size, 1))
+        if run.P > 1:
+            keep = sparse_decode.packed_decode_keep_blocks(
+                eng.sp, run.sp_state, cfg.num_layers, cfg.num_heads,
+                num_segs=run.P, seg_blocks=run.seg_blocks, segment=j)
+            return dplan.build_decode_plan(
+                eng.sp, run.sp_state, cfg, prefill_len=self.seq,
+                cache_len=self.cache_len, keep_blocks=keep)
+        return dplan.build_decode_plan_auto(
+            eng.sp, run.sp_state, cfg, prefill_len=self.seq,
+            cache_len=self.cache_len)
+
+    def _complete_run(self, run: ChunkedPrefillRun) -> None:
+        """Final quantum done: sample each segment's first token, splice
+        its DecodePlan row, and occupy its slot — the PREFILLING → DECODE
+        transition of chunked admission.  (The KV rows are already in the
+        cache, inserted layer by layer as the quanta completed.)"""
+        eng, seq = self.eng, self.seq
+        shim = types.SimpleNamespace(stats=run.attn_stats)
+        stats = eng._record_prefill_stats(shim, run.width, seq)
+        for j, (r, slot) in enumerate(zip(run.requests, run.slot_ids)):
+            r.prefill_s = self._run_wall
+            rstats = dict(stats)
+            r.pattern_stats = rstats
+
+            if r.max_new_tokens <= 0:   # prefill-only: no token is emitted
+                self._finish(_Slot(req=r, key=jax.random.PRNGKey(0),
+                                   outs=[], last_tok=0,
+                                   t_first=time.time()), "length")
+                continue
+
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r.uid)
+            key, sub = jax.random.split(key)
+            tok0 = int(sample_token(sub, run.logits[j: j + 1],
+                                    r.sampling)[0])
+            t_first = time.time()
+            r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
+
+            s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
+                      t_first=t_first)
+            if r.sampling.is_stop(tok0):
+                self._finish(s, "stop")
+                continue                # slot stays free for the next run
+            if r.max_new_tokens <= 1:
+                self._finish(s, "length")
+                continue
+
+            if self.use_sparse:
+                rplan = self._plan_row(run, j)
+                rstats.update(eng._plan_stats(rplan, self.cache_len))
+                self.plan = dplan.update_plan_slot_auto(
+                    self.plan, rplan, slot, eng.model.cfg)
+                self._stale_slots.discard(slot)
+            self.pos[slot] = seq
+            self.plens[slot] = run.plens[j]
+            self.slots[slot] = s
+
+    # -- decode ----------------------------------------------------------
     def _decode_step(self) -> None:
         """One fixed-shape decode step over all slots (occupied or inert),
         then per-slot sampling, early exit, and slot freeing."""
         eng = self.eng
+        td = time.time()
         occ = [i for i, s in enumerate(self.slots) if s is not None]
         eng.slot_steps += self.nslots
         eng.active_slot_steps += len(occ)
@@ -264,6 +495,7 @@ class SlotScheduler:
                 self._vacate(i, s, "stop")
             elif len(s.outs) >= s.req.max_new_tokens:
                 self._vacate(i, s, "length")
+        eng.phase_s["decode"] += time.time() - td
 
     def _vacate(self, slot: int, s: _Slot, reason: str) -> None:
         """Free a slot mid-decode: the request finalizes and the slot's

@@ -65,6 +65,39 @@ def decode_keep_blocks(sp: SharePrefill, sp_state: PivotalState,
     return jnp.moveaxis(out, 0, 1)                               # (L,B,H,NB)
 
 
+def packed_decode_keep_blocks(sp: SharePrefill, sp_state: PivotalState,
+                              num_layers: int, num_heads: int, *,
+                              num_segs: int, seg_blocks: int,
+                              segment: int) -> jnp.ndarray:
+    """Per-head keep sets for ONE segment of a packed prefill.
+
+    A packed launch prefills ``num_segs`` prompts in one (1, P·seg) row, so
+    the pattern dictionary's masks live on the packed ``(P·NBseg)²`` grid.
+    Segment ``j``'s future decode queries sit at its own tail: the keep-set
+    is the pivot mask's row at ``(j+1)·NBseg − 1`` (that segment's last
+    query block) restricted to segment ``j``'s kv-block columns — the
+    block-diagonal isolation mask guarantees the other segments' columns
+    are False there anyway.  The segment's final block stays for locality,
+    mirroring :func:`decode_keep_blocks`.
+
+    Returns ``(L, B, H, NBseg)`` bool with B the packed batch (1).
+    """
+    ids = jnp.asarray(sp.cluster_ids[:num_layers, :num_heads])   # (L, H)
+    safe = jnp.clip(ids, 0, sp_state.masks.shape[1] - 1)
+    row = (segment + 1) * seg_blocks - 1
+    lo = segment * seg_blocks
+
+    def per_sample(masks, valid):
+        cover = masks[:, row, lo:lo + seg_blocks]      # (C, NBseg)
+        cover = cover.at[:, -1].set(True)
+        keep = cover[safe]                             # (L, H, NBseg)
+        ok = valid[safe] & (ids >= 0)
+        return jnp.where(ok[..., None], keep, True)
+
+    out = jax.vmap(per_sample)(sp_state.masks, sp_state.valid)
+    return jnp.moveaxis(out, 0, 1)                               # (L,B,H,NBseg)
+
+
 def keep_blocks_to_token_mask(keep: jnp.ndarray, block_size: int,
                               cache_len: int,
                               prefill_len: int) -> jnp.ndarray:

@@ -45,9 +45,15 @@ SERVING = {
          "tokens_per_s_decode_mean": 80.0},
         {"mode": "scheduler", "slot_occupancy": 0.9,
          "tokens_per_s_decode_mean": 60.0},
+        {"mode": "scheduler-chunked", "slot_occupancy": 0.9,
+         "tokens_per_s_decode_mean": 72.0},
     ],
     "scheduler_vs_batch": {"ttft_mean_ratio": 0.6, "occupancy_gain": 0.4,
-                           "greedy_tokens_match": True},
+                           "greedy_tokens_match": True,
+                           "ttft_mean_ratio_chunked": 0.65,
+                           "decode_tps_ratio": 0.75,
+                           "decode_tps_ratio_chunked": 0.9,
+                           "greedy_tokens_match_chunked": True},
 }
 
 
@@ -200,13 +206,55 @@ def test_serving_gates():
     assert any("missing" in e for e in errs)
 
 
+def test_chunked_serving_gates():
+    """The decode-throughput gate: chunked admission must retain batch-path
+    decode tokens/s — the regression TTFT + occupancy alone never caught."""
+    # the one-shot scheduler's collapse (77/136 ~ 0.57) is below the floor
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["decode_tps_ratio_chunked"] = 0.57
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("below the 0.70 floor" in e for e in errs)
+
+    # erosion vs baseline fails even above the floor (tight tol isolates it)
+    fresh["scheduler_vs_batch"]["decode_tps_ratio_chunked"] = 0.75
+    assert check_bench.compare_serving(SERVING, fresh) == []
+    errs = check_bench.compare_serving(SERVING, fresh, tol_tokens=0.1)
+    assert any("decode_tps_ratio eroded" in e for e in errs)
+
+    # chunked tokens must bit-match the one-shot scheduler
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["greedy_tokens_match_chunked"] = False
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("one-shot scheduler" in e for e in errs)
+
+    # chunked TTFT has its own, tighter ceiling
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["ttft_mean_ratio_chunked"] = 0.85
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("ttft_mean_ratio_chunked" in e for e in errs)
+
+    # losing the column after the baseline records it is a regression
+    fresh = copy.deepcopy(SERVING)
+    del fresh["scheduler_vs_batch"]["decode_tps_ratio_chunked"]
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("decode_tps_ratio_chunked disappeared" in e for e in errs)
+
+    # a pre-chunked baseline gates nothing (transition path)
+    old = copy.deepcopy(SERVING)
+    old["points"] = old["points"][:2]
+    for k in ("ttft_mean_ratio_chunked", "decode_tps_ratio",
+              "decode_tps_ratio_chunked", "greedy_tokens_match_chunked"):
+        del old["scheduler_vs_batch"][k]
+    assert check_bench.compare_serving(old, SERVING) == []
+
+
 def test_committed_serving_baseline_shows_improvement():
     """The committed BENCH_serving.json records the acceptance invariant:
     scheduler slot occupancy and mean TTFT improve over batch-at-a-time on
     the mixed-max_new workload, with bit-matching greedy tokens."""
     base = json.load(open(os.path.join(REPO, "BENCH_serving.json")))
     by_mode = {p["mode"]: p for p in base["points"]}
-    assert set(by_mode) == {"batch", "scheduler"}
+    assert set(by_mode) == {"batch", "scheduler", "scheduler-chunked"}
     s = base["scheduler_vs_batch"]
     assert s["greedy_tokens_match"] is True
     assert s["ttft_mean_ratio"] < 1.0
@@ -214,6 +262,18 @@ def test_committed_serving_baseline_shows_improvement():
     assert (by_mode["scheduler"]["slot_occupancy"]
             > by_mode["batch"]["slot_occupancy"])
     assert len(set(base["workload"]["max_new_tokens"])) > 1   # mixed
+    # chunked admission: keeps the TTFT win, wins back decode throughput
+    # over one-shot admission, and stays token-exact
+    assert s["greedy_tokens_match_chunked"] is True
+    assert s["ttft_mean_ratio_chunked"] <= 0.8
+    assert s["decode_tps_ratio_chunked"] >= 0.7
+    assert (s["decode_tps_ratio_chunked"] > s["decode_tps_ratio"])
+    chunked = by_mode["scheduler-chunked"]
+    # interference metrics are recorded and show less per-request stall
+    # than one-shot admission on the same workload
+    assert (chunked["prefill_stall_mean_s"]
+            < by_mode["scheduler"]["prefill_stall_mean_s"])
+    assert chunked["phase_decode_s"] > 0
 
 
 def test_committed_prefill_baseline_rows_record_width():

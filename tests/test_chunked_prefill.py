@@ -1,0 +1,335 @@
+"""Chunked admission: quantum equivalence, packing isolation, scheduler
+conformance, and the per-request sparse-decode fallback.
+
+The load-bearing invariants:
+
+  * **Quantum equivalence.**  A :class:`ChunkedPrefillRun` driven to
+    completion reproduces the one-shot ``model.prefill`` launch — last
+    logits (tight allclose; the one-shot path runs under ``lax.scan``,
+    whose XLA fusion differs from the quanta's eager replay at the 1e-6
+    level, so bitwise is the wrong bar), exact greedy argmax, per-layer KV,
+    and the DecodePlan tables built from the resulting pattern dictionary —
+    for several chunk sizes including a non-divisible final chunk and
+    chunk == seq.
+  * **Greedy conformance.**  The chunked (and packed) scheduler's output
+    tokens bit-match the one-shot-admission scheduler: admission cadence
+    must never perturb an occupied row's token stream.
+  * **Packing isolation.**  A packed run's staged block masks are block-
+    diagonal — segment j's rows can never attend segment i's kv blocks.
+  * **Per-request sparse fallback.**  One admission returning
+    ``sp_state=None`` gets the all-keep dense plan row; ``use_sparse``
+    stays on and later admissions keep sparse decode (regression for the
+    old sticky scheduler-wide disable).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.patterns import segment_block_mask
+from repro.data import DataConfig, sample
+from repro.models import build_model
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import decode_plan as dplan
+from repro.serving.chunked_prefill import ChunkedPrefillRun
+from repro.serving.scheduler import SlotScheduler
+
+CFG = get_smoke_config("granite-3-2b")
+KEY = jax.random.PRNGKey(0)
+SEQ = 256
+BS = CFG.share_prefill.block_size       # 64 → 4 q/kv blocks at SEQ
+MAX_NEW = (5, 2, 4, 3)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(KEY)
+    sp = model.default_share_prefill()
+    engines = {}
+
+    def get_engine(**kw) -> ServingEngine:
+        k = tuple(sorted(kw.items()))
+        if k not in engines:
+            engines[k] = ServingEngine(model, params, sp, EngineConfig(
+                method="share", max_batch=2, seq_buckets=(SEQ,),
+                scheduler=True, **kw))
+        return engines[k]
+
+    return model, params, sp, get_engine
+
+
+def _requests(max_new=MAX_NEW, **kw):
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=SEQ,
+                      global_batch=1, task="retrieval")
+    return [Request(uid=i, prompt=sample(dcfg, i)["tokens"],
+                    max_new_tokens=m, **kw) for i, m in enumerate(max_new)]
+
+
+def _drive(run: ChunkedPrefillRun):
+    """Drive a run to completion, collecting each layer's K/V event."""
+    kvs = {}
+    while not run.done:
+        if run.step() == "kv":
+            kvs[run.kv_layer] = run.kv
+    return kvs
+
+
+def _oneshot(eng, prompt, width=None):
+    toks = np.zeros((1, SEQ), np.int32)
+    r = Request(uid=0, prompt=prompt, max_new_tokens=1)
+    plen = eng._pad_prompt(r, SEQ, toks[0])
+    fn = eng._prefill_fn(1, SEQ, width)
+    return fn(eng.params, jnp.asarray(toks),
+              jnp.asarray([plen], jnp.int32)), plen
+
+
+# --------------------------------------------------------------------------
+# Quantum equivalence vs the one-shot prefill
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [BS, 3 * BS, SEQ],
+                         ids=["chunk=1blk", "chunk=3blk_ragged_tail",
+                              "chunk=seq"])
+def test_run_matches_oneshot_prefill(setup, chunk):
+    """Driving the quanta to completion reproduces the one-shot launch:
+    logits (tight allclose + exact argmax), every layer's KV, and the
+    DecodePlan tables derived from the pattern dictionary.  3 blocks does
+    not divide the 4-block grid — the final chunk is 1 block (the ragged
+    tail); chunk == seq degenerates to a single full-width launch."""
+    model, params, sp, get_engine = setup
+    eng = get_engine(prefill_chunk=chunk)
+    prompt = _requests(max_new=(1,))[0].prompt
+
+    run = ChunkedPrefillRun(eng, [Request(uid=0, prompt=prompt,
+                                          max_new_tokens=1)],
+                            [0], SEQ, chunk, None)
+    assert run.chunks[-1][0] + run.chunks[-1][1] == SEQ // BS
+    kvs = _drive(run)
+    result, plen = _oneshot(eng, prompt)
+    assert run.plens == [plen]
+
+    np.testing.assert_allclose(np.asarray(run.logits),
+                               np.asarray(result.last_logits),
+                               rtol=1e-4, atol=1e-4)
+    assert (int(np.argmax(np.asarray(run.logits)[0]))
+            == int(np.argmax(np.asarray(result.last_logits)[0])))
+
+    ck, cv = result.cache["stack"]              # (L, 1, Hkv, S, hd)
+    assert sorted(kvs) == list(range(CFG.num_layers))
+    for l, (k, v) in kvs.items():
+        np.testing.assert_allclose(np.asarray(k), np.asarray(ck[l]),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(cv[l]),
+                                   rtol=1e-4, atol=1e-5)
+
+    # the pattern dictionaries must agree where it matters: the decode
+    # tables built from them are identical
+    cache_len = SEQ + 2 * BS
+    pa = dplan.build_decode_plan(sp, run.sp_state, CFG, prefill_len=SEQ,
+                                 cache_len=cache_len)
+    pb = dplan.build_decode_plan(sp, result.sp_state, CFG, prefill_len=SEQ,
+                                 cache_len=cache_len)
+    for a, b in zip(pa, pb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_run_matches_oneshot_sparse_kernel(setup):
+    """Same equivalence through the batched Pallas kernel backend (the
+    rectangular ``q_block_offset`` launch, interpret mode off-TPU), with a
+    ragged tail chunk."""
+    model, params, sp, get_engine = setup
+    eng = get_engine(prefill_chunk=3 * BS, attn_impl="sparse")
+    prompt = _requests(max_new=(1,))[0].prompt
+    run = ChunkedPrefillRun(eng, [Request(uid=0, prompt=prompt,
+                                          max_new_tokens=1)],
+                            [0], SEQ, 3 * BS, None)
+    _drive(run)
+    result, _ = _oneshot(eng, prompt)
+    np.testing.assert_allclose(np.asarray(run.logits),
+                               np.asarray(result.last_logits),
+                               rtol=1e-4, atol=1e-4)
+    assert (int(np.argmax(np.asarray(run.logits)[0]))
+            == int(np.argmax(np.asarray(result.last_logits)[0])))
+
+
+# --------------------------------------------------------------------------
+# Scheduler conformance: chunked / packed == one-shot admission, bitwise
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(prefill_chunk=BS),
+    dict(prefill_chunk=2 * BS, prefill_pack=2),
+], ids=["chunked", "chunked+packed"])
+def test_chunked_scheduler_bitmatches_oneshot(setup, kw):
+    """Mixed max_new_tokens over 2 slots with staggered arrivals: chunked
+    (and packed) admission interleaves quanta with decode steps and
+    in-flight refills, yet every request's greedy tokens bit-match the
+    one-shot-admission scheduler — and the interference metrics come back
+    populated."""
+    _, _, _, get_engine = setup
+    outs = {}
+    for tag, eng in (("oneshot", get_engine(decode_sparse=True)),
+                     ("chunk", get_engine(decode_sparse=True, **kw))):
+        reqs = _requests(arrival_s=0.0)
+        eng.serve(reqs, seed=0)
+        outs[tag] = [r.output_tokens for r in reqs]
+        assert eng.phase_s["prefill"] > 0.0
+        assert eng.phase_s["decode"] > 0.0
+        for r in reqs:
+            assert r.finish_reason == "length"
+            assert len(r.output_tokens) == r.max_new_tokens
+    for a, b in zip(outs["oneshot"], outs["chunk"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefill_stall_metric(setup):
+    """The first admission runs against idle slots (no stall); admissions
+    that interleave with occupied slots record the decode wall they
+    displaced — and chunked admission is how that stall gets bounded."""
+    _, _, _, get_engine = setup
+    eng = get_engine(decode_sparse=True, prefill_chunk=BS)
+    reqs = _requests(max_new=(8, 8, 4), arrival_s=0.0)
+    eng.serve(reqs, seed=0)
+    assert reqs[0].prefill_stall_s == 0.0
+    assert reqs[2].prefill_stall_s > 0.0     # admitted into a live decode
+    assert reqs[2].prefill_stall_s <= reqs[2].prefill_s + 1e-9
+
+
+# --------------------------------------------------------------------------
+# Packing isolation
+# --------------------------------------------------------------------------
+
+def test_packed_masks_are_block_diagonal(setup):
+    """After a packed run's first layer_begin quantum, every staged head
+    mask is confined to the block-diagonal: segment j never attends
+    segment i's kv blocks (the attention-isolation guarantee packing
+    rests on)."""
+    _, _, _, get_engine = setup
+    eng = get_engine(prefill_chunk=BS, prefill_pack=2)
+    rs = _requests(max_new=(1, 1), arrival_s=0.0)
+    run = ChunkedPrefillRun(eng, rs, [0, 1], SEQ, BS, None)
+    assert run.P == 2 and run.seg_blocks == SEQ // BS
+    run.step()                          # begin
+    run.step()                          # layer 0 layer_begin
+    masks = np.asarray(run._masks)      # (1, H, NB, NB)
+    assert masks is not None and masks.shape[-1] == 2 * (SEQ // BS)
+    seg = np.asarray(segment_block_mask(masks.shape[-1], run.seg_blocks))
+    assert masks.any()                  # staging produced a live pattern
+    assert not np.any(masks & ~seg)     # …and nothing crosses segments
+
+
+def test_packed_decode_plan_rows_cover_own_segment(setup):
+    """Per-segment plan rows cut from a packed dictionary index only the
+    segment's own kv blocks (NBseg-wide tables valid over the slot-local
+    cache), with the dense recent tail appended."""
+    _, _, sp, get_engine = setup
+    eng = get_engine(prefill_chunk=BS, prefill_pack=2)
+    rs = _requests(max_new=(1, 1), arrival_s=0.0)
+    run = ChunkedPrefillRun(eng, rs, [0, 1], SEQ, BS, None)
+    _drive(run)
+    assert run.sp_state is not None
+    from repro.serving.sparse_decode import packed_decode_keep_blocks
+    for j in range(2):
+        keep = packed_decode_keep_blocks(
+            sp, run.sp_state, CFG.num_layers, CFG.num_heads,
+            num_segs=2, seg_blocks=run.seg_blocks, segment=j)
+        assert keep.shape == (CFG.num_layers, 1, CFG.num_heads,
+                              run.seg_blocks)
+        plan = dplan.build_decode_plan(sp, run.sp_state, CFG,
+                                       prefill_len=SEQ,
+                                       cache_len=SEQ + 2 * BS,
+                                       keep_blocks=keep)
+        nb = (SEQ + 2 * BS) // BS
+        assert plan.indices.shape[-1] == nb
+        # the slot-local block ids stay inside the slot's own cache
+        assert int(jnp.max(plan.indices)) < nb
+
+
+# --------------------------------------------------------------------------
+# Admission gating + per-request sparse fallback
+# --------------------------------------------------------------------------
+
+def test_chunk_tokens_gating(setup):
+    """_chunk_tokens: disabled / misaligned / unchunkable configs resolve
+    to one-shot admission; enabled configs round the chunk up to a block
+    multiple and cap it at the bucket."""
+    model, params, sp, get_engine = setup
+    eng = get_engine(prefill_chunk=BS)
+    assert eng._chunk_tokens(SEQ) == BS
+    assert eng._chunk_tokens(SEQ + 1) == 0          # not block-aligned
+    off = get_engine()                              # prefill_chunk=0
+    assert off._chunk_tokens(SEQ) == 0
+    odd = ServingEngine(model, params, sp, EngineConfig(
+        method="share", scheduler=True, seq_buckets=(SEQ,),
+        prefill_chunk=BS + 1))
+    assert odd._chunk_tokens(SEQ) == 2 * BS         # rounds up to blocks
+    assert odd._chunk_tokens(BS) == BS              # capped at the bucket
+    nochunk = ServingEngine(
+        dataclasses.replace(model, prefill_chunk=None), params, sp,
+        EngineConfig(method="share", scheduler=True, seq_buckets=(SEQ,),
+                     prefill_chunk=BS))
+    assert nochunk._chunk_tokens(SEQ) == 0          # no quantum API
+
+
+@pytest.mark.parametrize("chunk", [0, BS], ids=["oneshot", "chunked"])
+def test_sparse_fallback_is_per_request(setup, monkeypatch, chunk):
+    """One admission with no pattern dictionary must NOT disable sparse
+    decode for the rest of the serve: that request's slot gets the
+    all-keep dense plan row, ``use_sparse`` stays on, and later admissions
+    build sparse rows as usual (regression: the old code flipped
+    ``use_sparse`` off scheduler-wide at the first ``sp_state is None``).
+    """
+    model, params, sp, _ = setup
+    eng = ServingEngine(model, params, sp, EngineConfig(
+        method="share", max_batch=2, seq_buckets=(SEQ,), scheduler=True,
+        decode_sparse=True, prefill_chunk=chunk))
+
+    # first prefill (one-shot fn or quantum dictionary) yields no sp_state
+    state = {"first": True}
+    if chunk == 0:
+        real = eng._prefill_fn
+
+        def patched(batch, seq, width=None):
+            fn = real(batch, seq, width)
+
+            def wrapper(*a, **kw):
+                res = fn(*a, **kw)
+                if state["first"]:
+                    state["first"] = False
+                    res = res._replace(sp_state=None)
+                return res
+            return wrapper
+        monkeypatch.setattr(eng, "_prefill_fn", patched)
+    else:
+        real_step = ChunkedPrefillRun.step
+
+        def step(self):
+            ev = real_step(self)
+            if ev == "done" and state["first"]:
+                state["first"] = False
+                self.sp_state = None
+            return ev
+        monkeypatch.setattr(ChunkedPrefillRun, "step", step)
+
+    calls = {"dense": 0, "sparse": 0}
+    real_dense, real_auto = dplan.dense_decode_plan, dplan.build_decode_plan_auto
+    monkeypatch.setattr(dplan, "dense_decode_plan", lambda *a, **k: (
+        calls.__setitem__("dense", calls["dense"] + 1),
+        real_dense(*a, **k))[1])
+    monkeypatch.setattr(dplan, "build_decode_plan_auto", lambda *a, **k: (
+        calls.__setitem__("sparse", calls["sparse"] + 1),
+        real_auto(*a, **k))[1])
+
+    reqs = _requests(max_new=(4, 4, 4), arrival_s=0.0)
+    sched = SlotScheduler(eng, reqs, SEQ, seed=0)
+    sched.run()
+
+    assert sched.use_sparse             # never flipped off
+    assert calls["dense"] == 1          # exactly the no-dictionary request
+    assert calls["sparse"] == 2         # the other admissions stay sparse
+    for r in reqs:
+        assert len(r.output_tokens) == r.max_new_tokens
