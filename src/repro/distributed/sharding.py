@@ -270,6 +270,56 @@ def sharded_flash_decode(
     )(q, cache_k, cache_v, plan.indices, plan.counts, plan.keep_heads, valid)
 
 
+def sharded_flash_decode_paged(
+    q: jax.Array,               # (B, H, D) one token per slot
+    pool_k: jax.Array,          # (P, Hkv, ps, D) shared page pool
+    pool_v: jax.Array,          # (P, Hkv, ps, Dv)
+    page_table: jax.Array,      # (B, NB) int32
+    plan,                       # DecodePlan, one layer's (B, Hkv, …) slice
+    valid: jax.Array,           # (B, NB·ps) bool
+    *,
+    mesh: Mesh,
+    axis: str = "model",
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """:func:`sharded_flash_decode` over a block-paged KV cache.
+
+    The page pool's heads axis (axis 1 of ``(P, Hkv, ps, D)``) shards over
+    ``axis`` exactly like the contiguous cache's — the same ``P(None,
+    axis)`` spec — while the page table and slot validity replicate: page
+    residency is a per-slot property, not a per-head one.  Each device
+    walks its local kv-heads' logical block tables through the (replicated)
+    page table into its local pool shard; head-parallel decode has no
+    cross-shard reductions, so the output equals the single-device
+    :func:`repro.kernels.decode_attn.flash_decode_plan_paged` bitwise.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels.decode_attn import DecodePlan, flash_decode_plan_paged
+
+    if head_shard_count(mesh, axis, q.shape[1], pool_k.shape[1]) <= 1:
+        raise ValueError(
+            f"head counts {q.shape[1]}/{pool_k.shape[1]} do not shard over "
+            f"mesh axis {axis!r} of {mesh.shape}")
+
+    def body(q_l, k_l, v_l, pt_l, idx_l, cnt_l, keep_l, valid_l):
+        return flash_decode_plan_paged(q_l, k_l, v_l, pt_l,
+                                       DecodePlan(idx_l, cnt_l, keep_l),
+                                       valid_l, impl=impl,
+                                       interpret=interpret)
+
+    hs = P(None, axis)
+    rep = P(None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(hs, hs, hs, rep, hs, hs, hs, rep),
+        out_specs=hs,
+        check_rep=False,
+    )(q, pool_k, pool_v, page_table, plan.indices, plan.counts,
+      plan.keep_heads, valid)
+
+
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Annotate with a sharding constraint if a rules context is active.
 

@@ -413,3 +413,107 @@ def block_sparse_attention_batched(
     )(jnp.asarray(row_map), jnp.asarray(slot_map), indices, counts,
       stats_gate, q, k, v)
     return out, stats
+
+
+def _kernel_batched_paged(row_ref, slot_ref, idx_ref, cnt_ref, gate_ref,
+                          pt_ref, *rest, **kw):
+    # pt_ref feeds the K/V BlockSpec index maps only; the body (and hence
+    # the math, causal masking by *logical* block id, stats) is the
+    # contiguous kernel verbatim.
+    del pt_ref
+    _kernel_batched(row_ref, slot_ref, idx_ref, cnt_ref, gate_ref,
+                    *rest, **kw)
+
+
+def block_sparse_attention_batched_paged(
+    q: jnp.ndarray,             # (B, H, N, Dqk) query chunk
+    pool_k: jnp.ndarray,        # (P, Hkv, ps, Dqk) shared page pool
+    pool_v: jnp.ndarray,        # (P, Hkv, ps, Dv)
+    page_table: jnp.ndarray,    # (B, NBkv) int32 logical block → page id
+    indices: jnp.ndarray,       # (B, H, NBq, W) int32 logical kv-block ids
+    counts: jnp.ndarray,        # (B, H, NBq) int32
+    *,
+    block_size: int,
+    causal: bool = True,
+    stats_gate: Optional[jnp.ndarray] = None,
+    q_block_offset: Optional[int] = None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`block_sparse_attention_batched` against a block-paged KV.
+
+    The prefill counterpart of the paged decode kernel: a Q-chunk attends
+    to prefix KV that lives in the shared page pool (chunked prefill over
+    an admitted slot, prefix sharing later).  The schedule, the causal
+    mask, and the index tables all stay *logical* — only the K/V DMA
+    address is translated through the scalar-prefetched page table, so the
+    output is bitwise the contiguous kernel run on the gathered view
+    (``repro.kernels.decode_attn.gather_pages``, also the CPU fallback).
+
+    Requires ``page_size == block_size``; the pool has no batch axis —
+    batch rows resolve their own pages via their page-table row.
+    """
+    b, h, n, d = q.shape
+    _, h_kv, ps, dv = pool_v.shape
+    if ps != block_size:
+        raise ValueError(f"page_size {ps} != block_size {block_size}")
+    group = h // h_kv
+    nbq = n // block_size
+    nbkv = page_table.shape[1]
+    w = indices.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    if q_block_offset is None:
+        q_block_offset = nbkv - nbq
+
+    row_map, slot_map = ragged_schedule(nbq, nbkv, width=w, causal=causal,
+                                        q_block_offset=q_block_offset)
+    t_steps = int(slot_map.shape[0])
+    if stats_gate is None:
+        stats_gate = jnp.ones((b, h), jnp.int32)
+    stats_gate = stats_gate.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel_batched_paged, block_q=block_size, block_kv=block_size,
+        scale=scale, causal=causal, q_block_offset=int(q_block_offset))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(b, t_steps, h),
+        in_specs=[
+            pl.BlockSpec((1, h, block_size, d),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate, pt:
+                         (bb, 0, row[tt], 0)),
+            pl.BlockSpec((1, 1, block_size, d),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate, pt:
+                         (pt[bb, idx[bb, hh, row[tt], slot[tt]]],
+                          hh // group, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, dv),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate, pt:
+                         (pt[bb, idx[bb, hh, row[tt], slot[tt]]],
+                          hh // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, block_size, dv),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate, pt:
+                         (bb, 0, row[tt], 0)),
+            pl.BlockSpec((1, 1, h),
+                         lambda bb, tt, hh, row, slot, idx, cnt, gate, pt:
+                         (bb, tt, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((h, block_size, dv), jnp.float32),
+            pltpu.VMEM((h, block_size, 1), jnp.float32),
+            pltpu.VMEM((h, block_size, 1), jnp.float32),
+        ],
+    )
+
+    out, stats = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, n, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, t_steps, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(row_map), jnp.asarray(slot_map), indices, counts,
+      stats_gate, page_table, q, pool_k, pool_v)
+    return out, stats

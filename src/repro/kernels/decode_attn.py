@@ -462,3 +462,145 @@ def flash_decode_plan(
             q, cache_k, cache_v, plan.indices, plan.counts, plan.keep_heads,
             valid, interpret=interpret)
     return decode_plan_einsum(q, cache_k, cache_v, plan.keep_heads, valid)
+
+
+# --------------------------------------------------------------------------
+# Block-paged variants: K/V live in a shared page pool, one page per block
+# --------------------------------------------------------------------------
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a contiguous per-slot cache view from a page pool.
+
+    pool ``(P, Hkv, ps, D)``, page_table ``(B, NB)`` int32 →
+    ``(B, Hkv, NB·ps, D)``.  A pure gather: the returned values at every
+    resident position are bitwise the page contents, so any contiguous
+    attention path run on the gathered view matches the paged kernels
+    exactly.
+    """
+    b, nb = page_table.shape
+    _, hkv, ps, d = pool.shape
+    g = jnp.take(pool, page_table.reshape(-1), axis=0)   # (B·NB, Hkv, ps, D)
+    g = g.reshape(b, nb, hkv, ps, d)
+    return jnp.moveaxis(g, 1, 2).reshape(b, hkv, nb * ps, d)
+
+
+def _paged_kernel(pt_ref, idx_ref, cnt_ref,
+                  q_ref, k_ref, v_ref, keep_ref, val_ref,
+                  out_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, w_steps: int):
+    # pt_ref is consumed by the K/V BlockSpec index maps only — the kernel
+    # body is the contiguous batched kernel verbatim.
+    del pt_ref
+    _batched_kernel(idx_ref, cnt_ref, q_ref, k_ref, v_ref, keep_ref,
+                    val_ref, out_ref, acc_ref, m_ref, l_ref,
+                    scale=scale, w_steps=w_steps)
+
+
+def flash_decode_sparse_batched_paged(
+    q: jnp.ndarray,             # (B, H, D) one token per slot
+    pool_k: jnp.ndarray,        # (P, Hkv, ps, D) shared page pool
+    pool_v: jnp.ndarray,        # (P, Hkv, ps, Dv)
+    page_table: jnp.ndarray,    # (B, NB) int32 logical block → page id
+    indices: jnp.ndarray,       # (B, Hkv, W) int32 logical block table
+    counts: jnp.ndarray,        # (B, Hkv) int32
+    keep_heads: jnp.ndarray,    # (B, Hkv, NB, G) bool
+    valid: jnp.ndarray,         # (B, NB·ps) bool logical slot validity
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """:func:`flash_decode_sparse_batched` over a block-paged KV cache.
+
+    The DecodePlan stays logical — block ids, keep bits and validity are
+    indexed exactly as in the contiguous kernel — and only the K/V DMA
+    address is translated through the scalar-prefetched page table:
+    ``page = page_table[b, indices[b, h, w]]``.  Since
+    ``page_size == block_size``, a sparse block table row *is* a walk of
+    the slot's resident pages, and the online-softmax body is shared with
+    the contiguous kernel, so outputs are bitwise-identical to running it
+    on the gathered contiguous view.
+
+    Returns (B, H, Dv).
+    """
+    b, h, d = q.shape
+    _, hkv, ps, dv = pool_v.shape
+    g = h // hkv
+    w_steps = indices.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, w_steps=w_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, w_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, h_, w, pt, idx, cnt: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda b_, h_, w, pt, idx, cnt:
+                         (pt[b_, idx[b_, h_, w]], h_, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dv),
+                         lambda b_, h_, w, pt, idx, cnt:
+                         (pt[b_, idx[b_, h_, w]], h_, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g),
+                         lambda b_, h_, w, pt, idx, cnt:
+                         (b_, h_, idx[b_, h_, w], 0)),
+            pl.BlockSpec((1, ps),
+                         lambda b_, h_, w, pt, idx, cnt:
+                         (b_, idx[b_, h_, w])),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda b_, h_, w, pt, idx, cnt:
+                               (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, dv), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    # The pool's K/V tiles carry their page axis as a singleton block dim,
+    # so k_ref/v_ref arrive as (1, 1, ps, D) — same shape the contiguous
+    # kernel sees.
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        interpret=_auto_interpret(interpret),
+    )(page_table, indices, counts, qg, pool_k, pool_v, keep_heads, valid)
+    return out.reshape(b, h, dv)
+
+
+def decode_plan_einsum_paged(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,        # (P, Hkv, ps, D)
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,    # (B, NB)
+    keep_heads: jnp.ndarray,
+    valid: jnp.ndarray,
+) -> jnp.ndarray:
+    """Einsum fallback for the paged cache: gather the resident pages into
+    the contiguous view (``jnp.take``) and reuse the contiguous fallback —
+    bitwise-equal by construction."""
+    return decode_plan_einsum(q, gather_pages(pool_k, page_table),
+                              gather_pages(pool_v, page_table),
+                              keep_heads, valid)
+
+
+def flash_decode_plan_paged(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    page_table: jnp.ndarray,
+    plan: DecodePlan,           # one layer's slice, logical block ids
+    valid: jnp.ndarray,         # (B, NB·ps)
+    *,
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Backend-auto sparse decode over a block-paged cache."""
+    impl = resolve_decode_impl(impl)
+    if impl == "kernel":
+        return flash_decode_sparse_batched_paged(
+            q, pool_k, pool_v, page_table, plan.indices, plan.counts,
+            plan.keep_heads, valid, interpret=interpret)
+    return decode_plan_einsum_paged(q, pool_k, pool_v, page_table,
+                                    plan.keep_heads, valid)

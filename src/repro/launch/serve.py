@@ -12,7 +12,11 @@ request only once it has "arrived"; the batch path records the arrival
 only in the queue/TTFT metrics).  ``--max-new`` accepts a comma-separated
 list cycled over requests to build mixed-length workloads — the traffic
 shape where continuous batching wins (short rows stop idling behind the
-batch's longest member).
+batch's longest member).  ``--paged`` serves from the block-paged KV
+cache (``repro.serving.paged_cache``): decode state in a shared page pool
+addressed through per-slot page tables, one cross-bucket scheduler, and
+admission gated on pool headroom (``--num-pages`` caps the pool; 0
+auto-sizes it).
 
 ``--model-parallel N`` (N > 1) serves under a heads-sharded (data, model)
 mesh: the engine's sparse prefill AND sparse decode hot paths run under
@@ -61,6 +65,15 @@ def main():
                     help="pack up to N same-bucket queued prompts into one "
                     "chunked prefill run (block-diagonal isolation mask, "
                     "one slot per segment); needs --prefill-chunk")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache: decode state in a shared "
+                    "page pool with per-slot page tables (page_size == "
+                    "pattern block size); ONE cross-bucket scheduler, "
+                    "admission gated on pool headroom")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool capacity incl. the reserved null page "
+                    "(0 = auto-size so max-batch slots can never starve); "
+                    "undersized pools keep requests WAITING, never crash")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulated request arrivals per second (0 = all "
                     "requests arrive at once); the scheduler honours "
@@ -107,6 +120,8 @@ def main():
                      scheduler=args.scheduler,
                      prefill_chunk=args.prefill_chunk,
                      prefill_pack=args.prefill_pack,
+                     paged=args.paged,
+                     num_pages=args.num_pages,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -131,13 +146,21 @@ def main():
               f"stats={r.pattern_stats}")
     # the engine silently falls back to batch-at-a-time for MLA / the
     # non-transformer families — label the mode by what actually ran
-    mode = ("scheduler" if args.scheduler and engine._supports_scheduler()
+    sched_req = args.scheduler or args.paged
+    mode = ("scheduler" if sched_req and engine._supports_scheduler()
             else "batch")
-    if args.scheduler and mode == "batch":
-        print("note: --scheduler requested but this family has no per-slot "
-              "cache layout; served batch-at-a-time (dense carve-out)")
+    if sched_req and mode == "batch":
+        print("note: --scheduler/--paged requested but this family has no "
+              "per-slot cache layout; served batch-at-a-time (dense "
+              "carve-out)")
     if mode == "scheduler" and engine._chunk_tokens(args.prompt_len):
         mode = "scheduler-chunked"
+    if mode != "batch" and args.paged:
+        mode += "-paged"
+        pool = {k: round(v, 3) if isinstance(v, float) else v
+                for k, v in engine.page_pool_stats.items()}
+        print(f"page pool: {pool} admissions deferred on headroom: "
+              f"{engine.pages_exhausted_steps}")
     elif args.prefill_chunk > 0 and args.scheduler:
         print("note: --prefill-chunk requested but this config cannot be "
               "chunk-admitted (see ServingEngine._chunk_tokens); served "

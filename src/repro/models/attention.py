@@ -32,10 +32,12 @@ from repro.distributed.sharding import (
     shard,
     shardable_model_mesh,
     sharded_flash_decode,
+    sharded_flash_decode_paged,
 )
 from repro.kernels import batched_sparse_attention_fn, sparse_attention_fn
 from repro.kernels.chunked import chunked_attention, chunked_attention_fn
-from repro.kernels.decode_attn import DecodePlan, flash_decode_plan
+from repro.kernels.decode_attn import (DecodePlan, flash_decode_plan,
+                                       flash_decode_plan_paged, gather_pages)
 from repro.kernels.indices import cap_block_mask
 from repro.kernels.ops import make_attention_fn
 from repro.kernels.ref import decode_attention_ref
@@ -272,6 +274,7 @@ def attention_decode(
     valid_mask: Optional[jnp.ndarray] = None,   # (S,) or (B, S) slot validity
     plan: Optional[DecodePlan] = None,  # one layer's sparse-decode tables
     decode_impl: str = "auto",          # auto | kernel | einsum
+    page_table: Optional[jnp.ndarray] = None,   # (B, NB) block-paged cache
 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """One decode step against the KV cache.
 
@@ -286,12 +289,26 @@ def attention_decode(
     ``repro.serving.decode_plan`` and spliced per slot in-flight by the
     scheduler), dispatched by ``decode_impl`` — the compiled block-skipping
     Pallas kernel on TPU, the grouped einsum elsewhere.
+
+    ``page_table`` switches the cache contract to the block-paged pool:
+    ``cache_k``/``cache_v`` are then one layer's shared page-pool slice
+    ``(P, Hkv, page_size, hd)`` and the table maps each slot's logical
+    block to its page.  The token append becomes a single-sliver in-place
+    scatter through the table (no whole-row copies), and attention walks
+    the pool via the page-aware kernel twins.  Paged decode is a
+    continuous-batching contract: ``pos`` must be the per-slot vector.
     """
     b, _, _ = x.shape
-    s = cache_k.shape[2]
     q, k, v = common.gqa_qkv(params, x)
     q, k = rope_qk(q, k, positions, cfg)
 
+    if page_table is not None:
+        return _attention_decode_paged(
+            params, cfg, q, k, v, cache_k, cache_v, pos, page_table,
+            window=window, sink=sink, valid_mask=valid_mask, plan=plan,
+            decode_impl=decode_impl)
+
+    s = cache_k.shape[2]
     if jnp.ndim(pos):                   # per-slot positions: per-row writes
         upd = lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(
             c, u, p, axis=1)            # row-local seq axis
@@ -363,3 +380,77 @@ def attention_decode(
                      cache_v, preferred_element_type=jnp.float32)
     out = jnp.asarray(out, x.dtype).reshape(b, hkv * g, 1, hd)
     return common.gqa_out(params, out), (cache_k, cache_v)
+
+
+def _attention_decode_paged(params, cfg, q, k, v, pool_k, pool_v, pos,
+                            page_table, *, window, sink, valid_mask, plan,
+                            decode_impl):
+    """Block-paged half of :func:`attention_decode` (post-QKV/rope).
+
+    The append is an in-place sliver scatter: the slot's current logical
+    block resolves to a page via the table and the token's ``(Hkv, hd)``
+    K/V lands at ``pos % page_size`` inside it — nothing else in the pool
+    is touched, so slots are bitwise independent.  Attention then walks
+    the pool through the page-aware kernel twins (or the gathered
+    contiguous view for dense decode), with all masks/tables kept in
+    *logical* slot coordinates over the virtual length ``NB·page_size``.
+    """
+    b = q.shape[0]
+    ps = pool_k.shape[2]
+    sv = page_table.shape[1] * ps
+    if not jnp.ndim(pos):
+        raise ValueError("paged decode requires per-slot (vector) pos")
+    rows = jnp.arange(b)
+    pg = page_table[rows, pos // ps]
+    within = pos % ps
+    pool_k = pool_k.at[pg, :, within, :].set(
+        k[:, :, 0, :].astype(pool_k.dtype))
+    pool_v = pool_v.at[pg, :, within, :].set(
+        v[:, :, 0, :].astype(pool_v.dtype))
+    # pool layout (P, Hkv, ps, hd): heads axis shards exactly like the
+    # contiguous cache's; pages replicate across the batch by construction
+    pool_k = shard(pool_k, None, "kv_heads", None, "heads")
+    pool_v = shard(pool_v, None, "kv_heads", None, "heads")
+
+    pcol = pos[:, None]
+    if valid_mask is None:
+        mask = jnp.broadcast_to(jnp.arange(sv)[None, :] <= pcol, (b, sv))
+    else:
+        mask = (valid_mask[None] if valid_mask.ndim == 1 else valid_mask)
+    if window > 0:
+        pos_idx = jnp.arange(sv)[None, :]
+        mask = mask & (((pos_idx > pcol - window) & (pos_idx <= pcol))
+                       | (pos_idx < sink))
+        mask = jnp.broadcast_to(mask, (b, sv))
+
+    g = cfg.gqa_groups
+    hkv = pool_k.shape[1]
+    hd = q.shape[-1]
+
+    if plan is not None:
+        mesh = shardable_model_mesh(q.shape[1], hkv)
+        if mesh is not None:
+            out = sharded_flash_decode_paged(
+                q.squeeze(2), pool_k, pool_v, page_table, plan, mask,
+                mesh=mesh, impl=decode_impl)
+        else:
+            out = flash_decode_plan_paged(
+                q.squeeze(2), pool_k, pool_v, page_table, plan, mask,
+                impl=decode_impl)
+        out = out[:, :, None, :]                  # (B, H, 1, hd)
+        return common.gqa_out(params, out), (pool_k, pool_v)
+
+    # dense paged decode: gather the resident pages into the contiguous
+    # view, then the same grouped einsum as the contiguous dense path
+    ckg = gather_pages(pool_k, page_table)
+    cvg = gather_pages(pool_v, page_table)
+    qg = q.squeeze(2).reshape(b, hkv, g, hd)
+    scale = 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, ckg,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", jnp.asarray(p, cvg.dtype),
+                     cvg, preferred_element_type=jnp.float32)
+    out = jnp.asarray(out, q.dtype).reshape(b, hkv * g, 1, hd)
+    return common.gqa_out(params, out), (pool_k, pool_v)

@@ -144,7 +144,7 @@ def layer_prefill(layer, x, cfg: ModelConfig, positions, sp: SharePrefill,
 
 def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
                  moe_ffn: bool, window: int = 0, plan=None, valid=None,
-                 decode_impl: str = "auto"):
+                 decode_impl: str = "auto", page_table=None):
     window = window or cfg.sliding_window      # native SWA (Mixtral)
     h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
     if _uses_mla(cfg):
@@ -155,7 +155,7 @@ def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
         a, cache = attn.attention_decode(
             layer["attn"], h, cfg, cache[0], cache[1], pos, positions,
             window=window, valid_mask=valid, plan=plan,
-            decode_impl=decode_impl)
+            decode_impl=decode_impl, page_table=page_table)
     x = x + a
     h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
     f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
@@ -268,8 +268,9 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                 embeds: Optional[jnp.ndarray] = None,
                 plan=None,                  # DecodePlan, (L, B, …) leaves
                 prompt_lens: Optional[jnp.ndarray] = None,   # (B,) int32
-                prefill_len: int = 0,
+                prefill_len=0,              # int, or (B,) per-slot lengths
                 decode_impl: str = "auto",
+                page_table: Optional[jnp.ndarray] = None,    # (B, NB) int32
                 ):
     """One decode step. token (B, 1) → logits (B, V), updated cache.
 
@@ -293,7 +294,15 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     ``prompt_lens``/``prefill_len`` mark right-pad cache
     slots (positions in [prompt_len, prefill_len)) invalid so padded K/V is
     never attended (ignored by MLA layers, which keep the plain length
-    mask)."""
+    mask); under the paged cache ``prefill_len`` is a ``(B,)`` vector —
+    slots of different former buckets coexist, each with its own prefill
+    boundary.
+
+    ``page_table`` switches the cache contract to the block-paged pool:
+    ``cache["stack"]`` leaves are then the shared ``(L, P, Hkv, ps, hd)``
+    page pools (prefix layers unsupported — the pool covers the scanned
+    stack) and each attention layer appends/reads through the table; the
+    virtual cache length is ``page_table.shape[1] · page_size``."""
     b = (embeds.shape[0] if embeds is not None else token.shape[0])
     pos = jnp.asarray(pos)
     if jnp.ndim(pos) and _uses_mla(cfg):
@@ -301,6 +310,11 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
             "per-slot decode positions require the GQA cache layout; MLA "
             "latent caches keep the lockstep scalar pos (dense carve-out — "
             "serve them through the legacy batch path)")
+    if page_table is not None and (not jnp.ndim(pos) or _uses_mla(cfg)
+                                   or cache["prefix"]):
+        raise ValueError(
+            "paged decode requires per-slot (vector) pos and a GQA "
+            "stack-only cache (no MLA / prefix layers)")
     if positions is None:
         positions = (pos[:, None] if jnp.ndim(pos)
                      else jnp.broadcast_to(pos[None, None], (b, 1)))
@@ -310,10 +324,16 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
 
     valid = None
     if prompt_lens is not None:
-        slots = jnp.arange(_cache_seq_len(cache))[None, :]
+        if page_table is not None:
+            sv = page_table.shape[1] * cache["stack"][0].shape[-2]
+        else:
+            sv = _cache_seq_len(cache)
+        slots = jnp.arange(sv)[None, :]
         pcol = pos[:, None] if jnp.ndim(pos) else pos
+        pf = jnp.asarray(prefill_len)
+        pfcol = pf[:, None] if jnp.ndim(pf) else pf
         valid = ((slots <= pcol)
-                 & ((slots < prompt_lens[:, None]) | (slots >= prefill_len)))
+                 & ((slots < prompt_lens[:, None]) | (slots >= pfcol)))
 
     new_prefix = []
     for i, c in enumerate(cache["prefix"]):
@@ -331,7 +351,8 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
             layer, c, lp = xs
             x, c = layer_decode(layer, x, cfg, c, pos, positions,
                                 moe_ffn=moe_ffn, window=window, plan=lp,
-                                valid=valid, decode_impl=decode_impl)
+                                valid=valid, decode_impl=decode_impl,
+                                page_table=page_table)
             return x, c
 
         x, new_caches = jax.lax.scan(
@@ -340,7 +361,8 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
         def body(x, xs):
             layer, c = xs
             x, c = layer_decode(layer, x, cfg, c, pos, positions,
-                                moe_ffn=moe_ffn, window=window, valid=valid)
+                                moe_ffn=moe_ffn, window=window, valid=valid,
+                                page_table=page_table)
             return x, c
 
         x, new_caches = jax.lax.scan(body, x,

@@ -6,11 +6,19 @@ from repro.serving.decode_plan import (
     update_plan_slot,
 )
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.paged_cache import (
+    NULL_PAGE,
+    PageAllocator,
+    gather_pages,
+    init_paged_pool,
+)
 from repro.serving.sampling import SamplingConfig, sample_token
 from repro.serving.scheduler import SlotScheduler
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
-__all__ = ["EngineConfig", "Request", "ServingEngine", "SamplingConfig",
-           "SlotScheduler", "auto_width_cap", "build_decode_plan",
-           "empty_decode_plan", "plan_block_counts", "plan_traffic_fraction",
-           "population_width_cap", "sample_token", "update_plan_slot"]
+__all__ = ["EngineConfig", "NULL_PAGE", "PageAllocator", "Request",
+           "ServingEngine", "SamplingConfig", "SlotScheduler",
+           "auto_width_cap", "build_decode_plan", "empty_decode_plan",
+           "gather_pages", "init_paged_pool", "plan_block_counts",
+           "plan_traffic_fraction", "population_width_cap", "sample_token",
+           "update_plan_slot"]

@@ -1,0 +1,58 @@
+"""Shared per-axis slice/copy primitives for KV-cache maintenance.
+
+``engine.grow_cache`` / ``cache_insert`` / ``cache_insert_layer`` and the
+block-paged pool in :mod:`repro.serving.paged_cache` all manipulate cache
+pytrees whose leaves disagree about where the sequence axis lives (GQA
+stacks put it at ``-2``, MLA latent caches at ``1``, RG-LRU conv state has
+no sequence axis at all).  The shared convention, factored here so the
+legacy and paged paths cannot drift:
+
+* a leaf axis is a *sequence axis* iff its size equals the current cache
+  length AND it is not the trailing (feature) axis — trailing axes that
+  happen to collide with the cache length (e.g. a conv window or head dim
+  equal to ``cache_len``) are never grown;
+* slot writes are ``dynamic_update_slice`` at a per-axis start offset, so
+  they touch only the addressed row/segment and preserve every other
+  slot's bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def seq_grow_pads(shape, old_len: int, extra: int):
+    """Pad widths growing every non-trailing axis whose size == old_len."""
+    nd = len(shape)
+    return [(0, extra) if (s == old_len and i < nd - 1) else (0, 0)
+            for i, s in enumerate(shape)]
+
+
+def grow_leaf(x, old_len: int, extra: int):
+    """Zero-extend a cache leaf's sequence axes from old_len to
+    old_len + extra; leaves without a sequence axis pass through."""
+    if not hasattr(x, "ndim") or x.ndim == 0:
+        return x
+    pads = seq_grow_pads(x.shape, old_len, extra)
+    if not any(p for _, p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def write_slot(dst, src, starts):
+    """``dynamic_update_slice`` src into dst at the given per-axis starts.
+
+    ``starts`` maps axis → start index (unlisted axes start at 0).  src
+    must span each unlisted axis fully; the write touches only the
+    addressed block, leaving all other slots' bits intact.
+    """
+    start = [0] * dst.ndim
+    for ax, ix in starts.items():
+        start[ax] = ix
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                        tuple(start))
+
+
+def slice_segment(x, offset: int, length: int, axis: int):
+    """Static slice of one packed segment along ``axis``."""
+    return jax.lax.slice_in_dim(x, offset, offset + length, axis=axis)

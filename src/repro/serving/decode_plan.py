@@ -247,6 +247,7 @@ def dense_decode_plan(cfg: ModelConfig, *, cache_len: int,
         keep_heads=jnp.ones(shape + (nb, g), bool))
 
 
+
 def update_plan_slot(plan: DecodePlan, new: DecodePlan,
                      slot: int) -> DecodePlan:
     """In-flight DecodePlan splicing: replace batch row ``slot``.
@@ -324,3 +325,32 @@ def plan_block_counts(plan: DecodePlan) -> Tuple[int, int]:
     total = int(plan.counts.size) * nb
     streamed = int(jnp.sum(plan.counts))
     return total, streamed
+
+def pad_plan_row(plan: DecodePlan, nb_target: int) -> DecodePlan:
+    """Widen a plan built at a shorter cache geometry to ``nb_target``
+    blocks without changing what it streams.
+
+    The paged scheduler sizes every slot's table at the *virtual* width
+    (largest bucket + decode tail) but builds each request's row at its own
+    allocation (``bucket + extra``); this pads the row out so
+    :func:`update_plan_slot`'s width check holds: ``indices`` repeat each
+    row's last entry (the same repeat-last-kept-id convention as
+    ``compact_block_mask`` padding — the Pallas pipeline elides the
+    repeated DMA), keep bits pad False, ``counts`` are unchanged.  The
+    padded blocks are therefore never streamed and never kept — a slot's
+    table never addresses pages it does not hold.
+    """
+    w, nb = plan.indices.shape[-1], plan.keep_heads.shape[-2]
+    if nb_target < w or nb_target < nb:
+        raise ValueError(f"cannot narrow plan (W={w}, NB={nb}) "
+                         f"to {nb_target}")
+    idx = plan.indices
+    if nb_target > w:
+        idx = jnp.concatenate(
+            [idx, jnp.repeat(idx[..., -1:], nb_target - w, axis=-1)],
+            axis=-1)
+    keep = plan.keep_heads
+    if nb_target > nb:
+        keep = jnp.pad(keep, [(0, 0)] * (keep.ndim - 2)
+                       + [(0, nb_target - nb), (0, 0)])
+    return DecodePlan(idx, plan.counts, keep)

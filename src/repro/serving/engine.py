@@ -46,10 +46,34 @@ Quantum programs are cached per ``(total_len, width, seg_blocks)`` shape in
 ``_chunk_cache``, layer-indexed by a *traced* scalar so the cache stays
 O(chunks), not O(layers × chunks).
 
-Requests are padded to a block multiple, grouped by sequence bucket, and
-served by two jitted programs (prefill, decode step) shared across request
-shapes; the scheduler reuses the same compiled-program caches (prefill at
-batch 1, decode at ``max_batch`` with vector ``pos``).
+**Block-paged KV cache.**  With ``paged=True`` decode state moves from one
+contiguous ``(B, Hkv, S, hd)`` buffer per sequence bucket into a shared
+page pool ``(L, num_pages, Hkv, page_size, hd)`` with a per-slot page
+table (``repro.serving.paged_cache``; ``page_size == block_size``, page 0
+reserved null).  The DecodePlan's block-index tables and the page tables
+become *the same table* — a head's keep-set is its set of resident pages —
+and the page-aware kernel twins (``flash_decode_plan_paged``,
+``block_sparse_attention_batched_paged``, the Hkv-sharded
+``sharded_flash_decode_paged``) translate only the K/V DMA address through
+the scalar-prefetched table, staying bitwise-equal to the contiguous
+kernels.  Admission allocates ``(bucket + decode_extra) / page_size``
+pages (kept WAITING when the pool lacks headroom —
+``pages_exhausted_steps`` counts the deferrals), prefill KV lands
+page-at-a-time (whole-cache or per layer under chunked admission), the
+decode append is a single in-place sliver scatter through the table
+(retiring ``grow_cache`` reallocation and whole-row ``cache_insert``
+copies on this path), and EOS/finish frees the slot's pages for reuse.
+Because batch shape is now just page-table rows, the scheduler's
+single-bucket restriction is lifted: ONE scheduler serves all requests,
+and slots of different former buckets coexist in one decode batch (each
+with its own per-slot ``prefill_len``), admission gated on pool headroom
+rather than batch shape.
+
+Requests are padded to a block multiple, grouped by sequence bucket
+(contiguous mode) or admitted into one cross-bucket slot set (paged mode),
+and served by two jitted programs (prefill, decode step) shared across
+request shapes; the scheduler reuses the same compiled-program caches
+(prefill at batch 1, decode at ``max_batch`` with vector ``pos``).
 
 **Mesh-active routing:** serving inside a sharding-rules context whose
 "model" axis is non-trivial (``distributed.sharding.active_model_mesh``)
@@ -88,6 +112,7 @@ from repro.configs.base import ModelConfig
 from repro.core.api import SharePrefill
 from repro.distributed.sharding import current_rules
 from repro.models.api import Model
+from repro.serving import cache_ops
 from repro.serving import decode_plan as dplan
 from repro.serving.sampling import SamplingConfig, sample_token
 from repro.serving.width_policy import auto_width_cap, population_width_cap
@@ -171,6 +196,17 @@ class EngineConfig:
     # sharing applicable, no sliding window) — unpackable runs fall back to
     # one prompt per run.
     prefill_pack: int = 1
+    # block-paged KV cache (repro.serving.paged_cache): decode state in a
+    # shared page pool + per-slot page tables (page_size == block_size), ONE
+    # cross-bucket scheduler over all requests, admission gated on pool
+    # headroom.  Implies the scheduler; falls back to the legacy path on the
+    # non-scheduler families (MLA / ssm / hybrid / encdec).
+    paged: bool = False
+    # page-pool capacity (pages, including the reserved null page 0);
+    # 0 = auto-size so the pool can never run out for max_batch slots.
+    # Undersized pools keep requests WAITING (pages_exhausted_steps counts
+    # the deferred admissions) — never a crash or a truncation.
+    num_pages: int = 0
 
 
 class ServingEngine:
@@ -197,6 +233,11 @@ class ServingEngine:
         # interference measurable instead of inferred
         self.phase_s: Dict[str, float] = {"prefill": 0.0, "decode": 0.0,
                                           "idle": 0.0}
+        # paged-cache accounting, reset per serve(): admissions deferred on
+        # pool headroom, and the pool's capacity/peak/utilization summary
+        # (filled by the paged scheduler)
+        self.pages_exhausted_steps = 0
+        self.page_pool_stats: Dict[str, float] = {}
 
     def slot_occupancy(self) -> float:
         """Mean fraction of decode slot capacity doing useful work during
@@ -326,6 +367,34 @@ class ServingEngine:
             self._decode_cache[key] = jax.jit(fn)
         return self._decode_cache[key]
 
+    def _decode_fn_paged(self, batch: int, table_blocks: int,
+                         sparse: bool = False):
+        """Jitted decode step over the block-paged pool.
+
+        The cache operand is the shared ``(L, P, Hkv, ps, hd)`` pool; batch
+        geometry lives entirely in the ``(batch, table_blocks)`` page table
+        and the per-slot ``pos``/``prompt_lens``/``prefill_lens`` vectors,
+        so ONE compiled program serves every bucket mix — the paged
+        scheduler never recompiles on cross-bucket churn."""
+        key = ("paged", batch, table_blocks, sparse, current_rules())
+        if key not in self._decode_cache:
+            if sparse:
+                def fn(params, token, cache, page_table, pos, plens,
+                       pflens, plan):
+                    return self.model.decode(
+                        params, token, cache, pos, plan=plan,
+                        prompt_lens=plens, prefill_len=pflens,
+                        page_table=page_table,
+                        decode_impl=self.ecfg.decode_impl)
+            else:
+                def fn(params, token, cache, page_table, pos, plens,
+                       pflens):
+                    return self.model.decode(
+                        params, token, cache, pos, prompt_lens=plens,
+                        prefill_len=pflens, page_table=page_table)
+            self._decode_cache[key] = jax.jit(fn)
+        return self._decode_cache[key]
+
     def _chunk_tokens(self, seq: int) -> int:
         """Resolve the admission chunk size (tokens per prefill quantum) for
         a bucket — 0 means one-shot admission.
@@ -420,15 +489,30 @@ class ServingEngine:
         (per-slot positions, EOS early exit, in-flight slot refill); other
         families — and ``scheduler=False`` — use the legacy batch-at-a-time
         path (equal-size batches, decode to the longest row).
+
+        With ``EngineConfig(paged=True)`` the bucket grouping disappears
+        entirely: ONE scheduler (block-paged decode state) serves the whole
+        request list, admitting mixed-length requests from different former
+        buckets into the same decode batch as pool headroom allows.
         """
         t0 = time.time()
         self.slot_steps = 0
         self.active_slot_steps = 0
         self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0}
+        self.pages_exhausted_steps = 0
+        self.page_pool_stats = {}
+        use_sched = ((self.ecfg.scheduler or self.ecfg.paged)
+                     and self._supports_scheduler())
+        if self.ecfg.paged and use_sched:
+            from repro.serving.scheduler import SlotScheduler
+            if requests:
+                seq = max(self._bucket(len(r.prompt)) for r in requests)
+                SlotScheduler(self, list(requests), seq, seed=seed, t0=t0,
+                              paged=True).run()
+            return requests
         groups: Dict[int, List[Request]] = {}
         for r in requests:
             groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
-        use_sched = self.ecfg.scheduler and self._supports_scheduler()
         for seq, grp in groups.items():
             if use_sched:
                 from repro.serving.scheduler import SlotScheduler
@@ -455,16 +539,11 @@ class ServingEngine:
         sequence axis before the feature axis).  The trailing axis is never
         grown — it is always a feature/channel dim, and e.g. the RG-LRU
         conv state's channel width can collide with the cache length.  SSM /
-        ring-buffer states have no matching axis and pass through."""
-        def grow(x):
-            if not hasattr(x, "ndim"):
-                return x
-            pads = [(0, extra if (s == old_len and i < x.ndim - 1) else 0)
-                    for i, s in enumerate(x.shape)]
-            if not any(p[1] for p in pads):
-                return x
-            return jnp.pad(x, pads)
-        return jax.tree.map(grow, cache)
+        ring-buffer states have no matching axis and pass through.  (The
+        paged cache never grows — decode headroom is pre-allocated as tail
+        pages; this path serves the legacy contiguous layouts.)"""
+        return jax.tree.map(
+            lambda x: cache_ops.grow_leaf(x, old_len, extra), cache)
 
     @staticmethod
     def cache_insert(cache, new, slot: int):
@@ -479,14 +558,11 @@ class ServingEngine:
         tail keeps whatever the previous occupant wrote — decode validity
         (``slots <= pos[row]``) masks it, so stale tail values never reach
         the softmax and the other rows' numerics are untouched (per-row
-        ops share nothing across the batch axis)."""
-        def ins(axis):
-            def f(dst, src):
-                start = [0] * dst.ndim
-                start[axis] = slot
-                return jax.lax.dynamic_update_slice(
-                    dst, src.astype(dst.dtype), tuple(start))
-            return f
+        ops share nothing across the batch axis).  The paged twin
+        (``paged_cache.insert_prefill``) scatters pages instead of copying
+        a whole row."""
+        ins = lambda axis: (lambda dst, src:
+                            cache_ops.write_slot(dst, src, {axis: slot}))
         return {
             "prefix": [jax.tree.map(ins(0), c, n)
                        for c, n in zip(cache["prefix"], new["prefix"])],
@@ -509,21 +585,20 @@ class ServingEngine:
         slot's decode writes land at its frozen tail position, and decode
         validity masks the admitted row until its DecodePlan row is
         spliced.  Stacked transformer layout only (``(L, B, Hkv, S, hd)``);
-        prefix layers are refused by ``make_chunk_prefill``."""
+        prefix layers are refused by ``make_chunk_prefill``.  The paged
+        twin is ``paged_cache.insert_prefill_layer`` (same segment slicing,
+        pages instead of a row write)."""
         if length is not None:
             # packed run: slice segment [offset, offset+length) out of the
             # packed sequence axis; the segment always lands at the START of
             # its own slot's row (slot-local positions restart at 0)
-            k = jax.lax.slice_in_dim(k, offset, offset + length, axis=2)
-            v = jax.lax.slice_in_dim(v, offset, offset + length, axis=2)
+            k = cache_ops.slice_segment(k, offset, length, axis=2)
+            v = cache_ops.slice_segment(v, offset, length, axis=2)
         ck, cv = cache["stack"]
-        start = (layer, slot, 0, 0, 0)
         # k[None]: (1, 1, Hkv, Sseg, hd) — rank-matches the (L, B, Hkv, S,
         # hd) stack leaf; the write lands at [layer, slot, :, 0:Sseg, :]
-        ck = jax.lax.dynamic_update_slice(ck, k[None].astype(ck.dtype),
-                                          start)
-        cv = jax.lax.dynamic_update_slice(cv, v[None].astype(cv.dtype),
-                                          start)
+        ck = cache_ops.write_slot(ck, k[None], {0: layer, 1: slot})
+        cv = cache_ops.write_slot(cv, v[None], {0: layer, 1: slot})
         return {"prefix": cache["prefix"], "stack": (ck, cv)}
 
     def _supports_sparse_decode(self) -> bool:

@@ -1,0 +1,162 @@
+"""Block-paged KV cache: a shared page pool plus per-slot page tables.
+
+Instead of one contiguous ``(B, Hkv, S, D)`` buffer per sequence bucket,
+decode state lives in a single pool of fixed-size pages
+
+    K, V : (num_layers, num_pages, Hkv, page_size, head_dim)
+
+with a host-side free-list allocator and an int32 page table
+``(nslots, table_blocks)`` mapping each slot's *logical* KV block to the
+page that holds it.  ``page_size == block_size``, so the DecodePlan's
+block-index tables translate to page indices by a single table lookup —
+sparse block tables and page tables are the same table, and a head's
+keep-set is just its set of resident pages.
+
+Conventions:
+
+* **Page 0 is the reserved null page.**  It is never allocated and stays
+  zero; unused page-table entries point at it.  Validity masks and plan
+  keep-bits already exclude unwritten positions, so the null page (and
+  any stale bits in recycled pages) contribute exactly zero.
+* Per-slot allocation is ``(bucket + decode_extra) // page_size`` pages,
+  where ``bucket`` is the request's *former* sequence bucket — slots of
+  different buckets coexist in one decode batch because shape-wise the
+  batch is just ``(nslots, table_blocks)`` table rows.
+* Prefill KV is written page-at-a-time (whole-cache or layer-at-a-time
+  for chunked prefill); the decode append writes a single
+  ``(Hkv, head_dim)`` sliver in place via the page table, retiring the
+  ``grow_cache`` reallocation and whole-row ``cache_insert`` copies.
+* The pool covers the scanned transformer stack only (the families the
+  slot scheduler admits: dense/vlm/moe with GQA caches).  MLA latent
+  layouts keep the contiguous path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attn import gather_pages  # re-export  # noqa: F401
+from repro.serving.cache_ops import slice_segment
+
+NULL_PAGE = 0
+
+
+class PageAllocator:
+    """Host-side free-list over a shared page pool (page 0 reserved)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page "
+                             "(page 0 is the reserved null page)")
+        self.num_pages = num_pages
+        # pop() hands out ascending ids — deterministic and easy to read
+        # in page-table dumps.
+        self._free = list(range(num_pages - 1, 0, -1))
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[np.ndarray]:
+        """n page ids, or None if the pool lacks headroom (caller keeps
+        the request WAITING — never a partial grant)."""
+        if n > len(self._free):
+            return None
+        ids = np.asarray([self._free.pop() for _ in range(n)], np.int32)
+        self.peak_in_use = max(self.peak_in_use, self.used_pages)
+        return ids
+
+    def free(self, ids) -> None:
+        for i in ids:
+            i = int(i)
+            if not 0 < i < self.num_pages:
+                raise ValueError(f"freeing invalid page id {i}")
+            self._free.append(i)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(1, self.num_pages - 1)
+
+
+def init_paged_pool(cfg, *, num_pages: int, page_size: int,
+                    dtype=jnp.float32):
+    """Zeroed page-pool cache pytree ``{"prefix": [], "stack": (K, V)}``.
+
+    Layer axis leads so the decode scan slices one layer's
+    ``(num_pages, Hkv, page_size, head_dim)`` pool per step, mirroring the
+    contiguous stack layout.
+    """
+    from repro.models.transformer import num_prefix_layers
+    if cfg.mla.enabled:
+        raise ValueError("paged KV cache requires GQA stack caches "
+                         "(MLA latent layouts keep the contiguous path)")
+    if num_prefix_layers(cfg):
+        raise ValueError("paged KV cache covers the scanned stack only")
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, num_pages, cfg.num_kv_heads, page_size, hd)
+    return {"prefix": [], "stack": (jnp.zeros(shape, dtype),
+                                    jnp.zeros(shape, dtype))}
+
+
+def _scatter_whole(pool, val, pages):
+    """val (L, Hkv, S, hd) → pool pages along every layer."""
+    l, hkv, s, hd = val.shape
+    ps = pool.shape[3]
+    npg = s // ps
+    v = val.reshape(l, hkv, npg, ps, hd).transpose(0, 2, 1, 3, 4)
+    return pool.at[:, pages].set(v.astype(pool.dtype))
+
+
+def insert_prefill(cache, new, pages):
+    """Write a freshly prefilled request's stacked KV (leaves
+    ``(L, 1, Hkv, S, hd)``) into its ``S // page_size`` pages."""
+    if new["prefix"]:
+        raise ValueError("paged KV cache covers the scanned stack only")
+    ck, cv = cache["stack"]
+    nk, nv = new["stack"]
+    pages = jnp.asarray(pages, jnp.int32)
+    return {"prefix": [], "stack": (_scatter_whole(ck, nk[:, 0], pages),
+                                    _scatter_whole(cv, nv[:, 0], pages))}
+
+
+def insert_prefill_layer(cache, layer: int, k, v, pages, *, offset: int = 0,
+                         length: Optional[int] = None):
+    """Write one layer's prefill K/V ``(1, Hkv, S, hd)`` into pages.
+
+    Chunked-prefill counterpart of :func:`insert_prefill`: KV lands
+    layer-by-layer as each scan step finalizes; packed multi-prompt
+    segments are sliced out with ``offset``/``length`` first.
+    """
+    if length is not None:
+        k = slice_segment(k, offset, length, axis=2)
+        v = slice_segment(v, offset, length, axis=2)
+    ck, cv = cache["stack"]
+    ps = ck.shape[3]
+    pages = jnp.asarray(pages, jnp.int32)
+
+    def ins(pool, val):
+        _, hkv, s, hd = val.shape
+        npg = s // ps
+        vv = val[0].reshape(hkv, npg, ps, hd).transpose(1, 0, 2, 3)
+        return pool.at[layer, pages].set(vv.astype(pool.dtype))
+
+    return {"prefix": [], "stack": (ins(ck, k), ins(cv, v))}
+
+
+def page_bytes(cfg, page_size: int, itemsize: int = 4) -> int:
+    """Bytes one page holds across all layers, K and V."""
+    return (2 * cfg.num_layers * cfg.num_kv_heads * page_size
+            * cfg.resolved_head_dim * itemsize)
+
+
+def contiguous_kv_bytes(cfg, batch: int, cache_len: int,
+                        itemsize: int = 4) -> int:
+    """Bytes the contiguous scheduler holds for the same decode batch."""
+    return (2 * cfg.num_layers * batch * cfg.num_kv_heads * cache_len
+            * cfg.resolved_head_dim * itemsize)

