@@ -26,6 +26,16 @@ against the contiguous layout's fixed ``max_batch × cache_len`` carve-out
 (same per-token byte cost on both sides, so the page-count ratio IS the
 byte ratio).
 
+A third, **degradation** workload drives the hardened request lifecycle
+through a starved pool under injected faults (``repro.serving.faults``):
+five mixed-priority requests over a page pool sized for two residents
+(preemption churn), one NaN-poisoned request and one mid-decode
+cancellation.  The fault-free ample-pool serve is the reference; the gate
+is graceful degradation — every healthy request's tokens bit-match the
+reference (preemption/replay-resume is bitwise-invisible), the poisoned
+and cancelled requests die as exact stream prefixes, completed-request
+throughput holds a floor of the reference's, and the pool drains to zero.
+
 Recorded per mode:
 
   * **TTFT** (arrival → first token, real per-request);
@@ -57,7 +67,14 @@ import time
 import numpy as np
 
 from repro.data import sample
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    CancelAt,
+    EngineConfig,
+    FaultInjector,
+    NaNLogits,
+    Request,
+    ServingEngine,
+)
 from benchmarks.common import (
     BLOCK,
     data_config,
@@ -82,6 +99,23 @@ PACK = 2                    # pack up to two queued short prompts per run
 # long+short pages — under the contiguous 2×long carve-out.
 MIXED_SEQS = (SEQ, 64, 64, 64)
 MIXED_MAX_NEW = (64, 16, 16, 16)
+# degradation workload: 5 short-prompt requests over 3 slots with a page
+# pool sized for TWO residents (5 allocatable pages, 2 per admission), so
+# the third slot's head request starves on pages and the preemption clock
+# evicts a victim every DEG_PREEMPT_AFTER starved steps; uid 3 is
+# NaN-poisoned mid-decode and uid 4 cancelled mid-serve.  uids 0/1 are
+# high priority, steering most eviction churn onto 2/3/4.
+DEG_SEQ = 64
+DEG_MAX_NEW = (20, 18, 12, 8, 10)
+DEG_PRIOS = (1, 1, 0, 0, 0)
+DEG_MAX_BATCH = 3
+DEG_EXTRA = BLOCK     # decode headroom: one page past the prompt bucket
+DEG_POOL = 6          # 5 allocatable -> two 2-page residents + 1 spare
+DEG_PREEMPT_AFTER = 4  # eviction cadence: every eviction re-prefills and
+                       # replays the victim's tokens, so a faster clock
+                       # (2) thrashes the completed-throughput ratio
+                       # under the 0.5 gate floor; 4 still preempts every
+                       # serve while letting residents make real progress
 REPEATS = 3   # serve each mode N times post-warmup, keep the fastest run:
               # wall-clock on a shared CPU container is contention-noisy,
               # and the min-wall run is the least-contended measurement
@@ -136,14 +170,14 @@ def _serve(model, params, sp, reqs_fn, mode, mode_cfg, buckets=(SEQ,)):
     return best
 
 
-def _point(mode: str, engine, reqs, wall) -> dict:
+def _point(mode: str, engine, reqs, wall, seq=SEQ) -> dict:
     ttfts = [r.ttft_s for r in reqs]
     tps = [r.decode_tokens_per_s for r in reqs
            if r.decode_tokens_per_s > 0]
     stalls = [r.prefill_stall_s for r in reqs]
     point = {
         "mode": mode,
-        "seq": SEQ,
+        "seq": seq,
         "block_size": BLOCK,
         "max_batch": MAX_BATCH,
         "n_requests": len(reqs),
@@ -166,7 +200,86 @@ def _point(mode: str, engine, reqs, wall) -> dict:
         point.update({k: (float(v) if isinstance(v, float) else int(v))
                       for k, v in engine.page_pool_stats.items()})
         point["pages_exhausted_steps"] = int(engine.pages_exhausted_steps)
+        point["preemptions"] = int(engine.preemptions)
     return point
+
+
+def _degraded_requests():
+    dcfg = data_config("retrieval", seq=DEG_SEQ)
+    reqs = [Request(uid=i, prompt=sample(dcfg, 90 + i)["tokens"],
+                    max_new_tokens=m) for i, m in enumerate(DEG_MAX_NEW)]
+    for r, p in zip(reqs, DEG_PRIOS):
+        r.priority = p
+    return reqs
+
+
+def _serve_degraded(model, params, sp):
+    """Serve the degradation workload: fault-free ample-pool reference vs
+    a two-resident pool under injected faults.  Best-of-``REPEATS`` like
+    :func:`_serve` (the fault schedule is deterministic — ``serve()``
+    resets the injector, so repeats replay identically); returns the
+    fastest run's (points, summary entries)."""
+    def mk(**kw):
+        return ServingEngine(model, params, sp, EngineConfig(
+            method="share", seq_buckets=(DEG_SEQ,), decode_sparse=True,
+            max_batch=DEG_MAX_BATCH, paged=True, decode_extra=DEG_EXTRA,
+            preempt_after_steps=DEG_PREEMPT_AFTER, **kw))
+    eng_ref, eng_deg = mk(), mk(num_pages=DEG_POOL)
+    faults = FaultInjector(NaNLogits(uid=3, at_token=3),
+                           CancelAt(uid=4, step=10))
+    eng_ref.serve(_degraded_requests())           # warmup: compile programs
+    eng_deg.serve(_degraded_requests(), faults=faults)
+    # both serves are fully deterministic across repeats (tokens, states,
+    # counters — the fault schedule replays identically), so each side
+    # independently keeps its min-wall run: the least-contended
+    # measurement of each engine, like _serve's best-of-N
+    p_ref = p_deg = ref = deg = None
+    for _ in range(REPEATS):
+        rr = _degraded_requests()
+        t0 = time.time()
+        eng_ref.serve(rr)
+        ref_wall = time.time() - t0
+        if p_ref is None or ref_wall < p_ref["wall_s"]:
+            p_ref = _point("degraded-reference", eng_ref, rr, ref_wall,
+                           seq=DEG_SEQ)
+            ref = rr
+        dd = _degraded_requests()
+        t0 = time.time()
+        eng_deg.serve(dd, faults=faults)
+        deg_wall = time.time() - t0
+        if p_deg is None or deg_wall < p_deg["wall_s"]:
+            p_deg = _point("degraded-faults", eng_deg, dd, deg_wall,
+                           seq=DEG_SEQ)
+            deg = dd
+
+    def _completed_tps(reqs, wall):
+        return (sum(len(r.output_tokens) for r in reqs
+                    if r.state == "done") / max(wall, 1e-9))
+
+    # healthy requests must bit-match the fault-free reference; the
+    # poisoned and cancelled requests must die as exact stream prefixes
+    healthy = all(np.array_equal(deg[i].output_tokens, ref[i].output_tokens)
+                  for i in (0, 1, 2))
+    prefixes = all(
+        len(deg[i].output_tokens) < len(ref[i].output_tokens)
+        and np.array_equal(
+            deg[i].output_tokens,
+            ref[i].output_tokens[:len(deg[i].output_tokens)])
+        for i in (3, 4))
+    states = ([r.state for r in deg]
+              == ["done", "done", "done", "failed", "cancelled"])
+    summary = {
+        "healthy_tokens_match_degraded": bool(healthy and prefixes
+                                              and states),
+        # completed-request throughput retained under starvation + faults
+        "degraded_completed_tps_ratio":
+            _completed_tps(deg, p_deg["wall_s"])
+            / max(_completed_tps(ref, p_ref["wall_s"]), 1e-9),
+        "degraded_preemptions": int(p_deg["preemptions"]),
+        "degraded_pages_leaked": int(p_ref["pages_in_use_at_end"]
+                                     + p_deg["pages_in_use_at_end"]),
+    }
+    return [p_ref, p_deg], summary
 
 
 def run() -> dict:
@@ -237,6 +350,10 @@ def run() -> dict:
         "page_pool_utilization": float(pp["peak_utilization"]),
         "pages_exhausted_steps": int(pp["pages_exhausted_steps"]),
     })
+    # degradation workload: graceful behaviour under starvation + faults
+    deg_points, deg_summary = _serve_degraded(model, params, sp)
+    points.extend(deg_points)
+    summary.update(deg_summary)
 
     import jax
     artifact = {
@@ -248,7 +365,12 @@ def run() -> dict:
                      "max_new_tokens": list(MAX_NEW),
                      "prefill_chunk": CHUNK, "prefill_pack": PACK,
                      "mixed_prompt_seqs": list(MIXED_SEQS),
-                     "mixed_max_new_tokens": list(MIXED_MAX_NEW)},
+                     "mixed_max_new_tokens": list(MIXED_MAX_NEW),
+                     "degraded_seq": DEG_SEQ,
+                     "degraded_max_new_tokens": list(DEG_MAX_NEW),
+                     "degraded_priorities": list(DEG_PRIOS),
+                     "degraded_num_pages": DEG_POOL,
+                     "degraded_preempt_after_steps": DEG_PREEMPT_AFTER},
         "points": points,
         "scheduler_vs_batch": summary,
     }

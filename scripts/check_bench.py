@@ -126,6 +126,15 @@ MIN_PAGED_DECODE_TPS_RATIO = 0.9  # paged/contiguous decode tokens/s floor
 # so its floor only guards against collapse; the paged wins on this
 # workload are kv_bytes_ratio, TTFT, and occupancy, gated above
 MIN_MIXED_DECODE_TPS_RATIO = 0.5  # paged-mixed/contiguous-mixed floor
+# degradation gates: the hardened request lifecycle under a starved pool
+# with injected faults (preemption churn, one NaN-poisoned request, one
+# mid-decode cancellation).  Healthy-token match is absolute — preemption
+# with replay-resume must be bitwise-invisible and quarantine must hit
+# exactly the poisoned request.  The completed-request throughput floor
+# is wall-clock and loose: preemption re-prefills and replays tokens, so
+# real cost is expected, but the serve must not collapse.  Leaked pages
+# is a deterministic allocator counter with zero tolerance.
+MIN_DEGRADED_TPS_RATIO = 0.5  # degraded/reference completed tokens/s floor
 
 
 def _load(path: str) -> dict:
@@ -279,6 +288,8 @@ def compare_serving(base: dict, fresh: dict, *,
                     max_kv_bytes_ratio: float = MAX_KV_BYTES_RATIO,
                     min_paged_decode_tps_ratio: float =
                     MIN_PAGED_DECODE_TPS_RATIO,
+                    min_degraded_tps_ratio: float =
+                    MIN_DEGRADED_TPS_RATIO,
                     ) -> List[str]:
     """Continuous-batching serving gates (``BENCH_serving.json``).
 
@@ -312,6 +323,16 @@ def compare_serving(base: dict, fresh: dict, *,
     workload (pure indirection cost), and the cross-geometry mixed ratio
     must stay above the looser ``MIN_MIXED_DECODE_TPS_RATIO`` collapse
     floor.
+
+    Degradation gates (active once the baseline records
+    ``degraded_completed_tps_ratio`` — dropping the column afterwards is
+    itself a regression): under pool starvation with injected faults the
+    healthy requests must bit-match the fault-free reference and the
+    poisoned/cancelled requests must die as exact stream prefixes
+    (``healthy_tokens_match_degraded``), completed-request throughput
+    must retain ``min_degraded_tps_ratio`` of the fault-free reference's,
+    the starved serve must actually preempt, and the pool must drain to
+    zero (no leaked pages).
     """
     errors: List[str] = []
     base_pts = _by_key(base.get("points", []), ("mode",))
@@ -417,6 +438,39 @@ def compare_serving(base: dict, fresh: dict, *,
                 f"serving: decode_tps_ratio_mixed {fr:.2f} below the "
                 f"{MIN_MIXED_DECODE_TPS_RATIO:.2f} floor (cross-bucket "
                 f"paged serving collapsed vs bucket-by-bucket contiguous)")
+
+    # degradation gates: engage once the baseline records the degraded
+    # completed-throughput ratio (older baselines predate the fault
+    # harness and are exempt; once present, losing the column is a
+    # regression)
+    bdg = float(bs.get("degraded_completed_tps_ratio", 0.0))
+    if bdg > 0:
+        if "degraded_completed_tps_ratio" not in fs:
+            errors.append("serving: degraded_completed_tps_ratio "
+                          f"disappeared (baseline {bdg:.2f})")
+            return errors
+        if not fs.get("healthy_tokens_match_degraded", False):
+            errors.append(
+                "serving: healthy_tokens_match_degraded is false — under "
+                "starvation + injected faults the healthy requests no "
+                "longer bit-match the fault-free serve (preemption "
+                "replay-resume or fault quarantine lost isolation)")
+        fdg = float(fs.get("degraded_completed_tps_ratio", 0.0))
+        if fdg < min_degraded_tps_ratio:
+            errors.append(
+                f"serving: degraded_completed_tps_ratio {fdg:.2f} below "
+                f"the {min_degraded_tps_ratio:.2f} floor (completed-"
+                f"request throughput collapsed under pool starvation)")
+        leaked = int(fs.get("degraded_pages_leaked", 0))
+        if leaked != 0:
+            errors.append(
+                f"serving: degraded_pages_leaked = {leaked} — a terminal "
+                f"path (preempt/cancel/fail) stopped returning its pages")
+        if int(fs.get("degraded_preemptions", 0)) < 1:
+            errors.append(
+                "serving: degraded_preemptions = 0 — the starved pool no "
+                "longer exercises preemption (the degradation gates lost "
+                "their subject)")
     return errors
 
 
@@ -450,6 +504,8 @@ def main(argv=None) -> int:
                     default=MAX_KV_BYTES_RATIO)
     ap.add_argument("--min-paged-decode-tps-ratio", type=float,
                     default=MIN_PAGED_DECODE_TPS_RATIO)
+    ap.add_argument("--min-degraded-tps-ratio", type=float,
+                    default=MIN_DEGRADED_TPS_RATIO)
     args = ap.parse_args(argv)
 
     if args.run:
@@ -497,7 +553,9 @@ def main(argv=None) -> int:
                      "max_chunked_ttft_ratio": args.max_chunked_ttft_ratio,
                      "max_kv_bytes_ratio": args.max_kv_bytes_ratio,
                      "min_paged_decode_tps_ratio":
-                         args.min_paged_decode_tps_ratio}
+                         args.min_paged_decode_tps_ratio,
+                     "min_degraded_tps_ratio":
+                         args.min_degraded_tps_ratio}
         errs = cmp_fn(base, fresh, tol_tokens=args.tol_tokens,
                       tol_blocks=args.tol_blocks, **extra)
         print(f"[check_bench] {name} vs {tag}: "

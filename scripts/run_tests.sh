@@ -1,19 +1,25 @@
 #!/usr/bin/env bash
-# Tier-1 test wrapper: the default in-process suite first, then the
-# ``subprocess``-marked tier (forced multi-device CPU-mesh tests — each
-# spawns its own python/JAX process, so they are slower and isolated here
-# to keep the default tier's failure signal fast).
+# Tiered test wrapper: the default in-process suite first, then the
+# ``chaos``-marked fault-injection tier (combined starvation + poison +
+# cancellation serves — slower multi-engine scenarios kept out of the
+# default tier's fast failure signal), then the ``subprocess``-marked
+# tier (forced multi-device CPU-mesh tests — each spawns its own
+# python/JAX process, so they are the slowest and run last).
 #
-#   scripts/run_tests.sh              # both tiers
-#   scripts/run_tests.sh -k decode    # extra pytest args forwarded to both
+#   scripts/run_tests.sh              # all tiers
+#   scripts/run_tests.sh -k decode    # extra pytest args forwarded to all
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier 1: default suite (subprocess tier excluded) =="
-python -m pytest -x -q -m "not subprocess" "$@"
+# exit code 5 = no tests collected (e.g. a -k filter matching nothing in
+# a tier) — a green run, not a failure
+echo "== tier 1: default suite (chaos + subprocess tiers excluded) =="
+python -m pytest -x -q -m "not subprocess and not chaos" "$@"
 
-echo "== tier 2: subprocess tier (forced multi-device CPU meshes) =="
-# exit code 5 = no tests collected (e.g. a -k filter matching none of the
-# subprocess tier) — a green run, not a failure
+echo "== tier 2: chaos tier (fault-injection scenarios) =="
+python -m pytest -x -q -m "chaos and not subprocess" "$@" \
+    || { rc=$?; [ "$rc" -eq 5 ]; }
+
+echo "== tier 3: subprocess tier (forced multi-device CPU meshes) =="
 python -m pytest -x -q -m subprocess "$@" || { rc=$?; [ "$rc" -eq 5 ]; }

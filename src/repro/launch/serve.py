@@ -74,6 +74,15 @@ def main():
                     help="page-pool capacity incl. the reserved null page "
                     "(0 = auto-size so max-batch slots can never starve); "
                     "undersized pools keep requests WAITING, never crash")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="preempt the lowest-priority decoding victim once "
+                    "admission has been pool-starved for this many "
+                    "consecutive steps (paged only; 0 = never preempt — "
+                    "starved requests wait indefinitely)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request wall budget from arrival; exceeded "
+                    "requests finish with reason 'timeout' (0 = none; "
+                    "scheduler only)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="simulated request arrivals per second (0 = all "
                     "requests arrive at once); the scheduler honours "
@@ -107,7 +116,7 @@ def main():
     requests = [
         Request(uid=i, prompt=sample(dcfg, i)["tokens"],
                 max_new_tokens=max_new[i % len(max_new)],
-                arrival_s=i * gap)
+                arrival_s=i * gap, deadline_s=args.deadline_s)
         for i in range(args.num_requests)
     ]
 
@@ -122,6 +131,7 @@ def main():
                      prefill_pack=args.prefill_pack,
                      paged=args.paged,
                      num_pages=args.num_pages,
+                     preempt_after_steps=args.preempt_after,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -139,9 +149,16 @@ def main():
         wall = time.time() - t0
 
     for r in requests:
+        m = r.metrics()
+        lifecycle = (f" deferred={m['waiting_deferred_steps']}"
+                     f" preempts={m['preempted_count']}"
+                     if (m["waiting_deferred_steps"]
+                         or m["preempted_count"]) else "")
+        err = f" error={r.error}" if r.error is not None else ""
         print(f"req {r.uid}: queue={r.queue_s:.3f}s ttft={r.ttft_s:.3f}s "
               f"prefill={r.prefill_s:.3f}s decode={r.decode_s:.3f}s "
-              f"({r.decode_tokens_per_s:.1f} tok/s, {r.finish_reason}) "
+              f"({r.decode_tokens_per_s:.1f} tok/s, "
+              f"{r.finish_reason}/{r.state}){lifecycle}{err} "
               f"out={r.output_tokens[:8].tolist()} "
               f"stats={r.pattern_stats}")
     # the engine silently falls back to batch-at-a-time for MLA / the
@@ -160,7 +177,8 @@ def main():
         pool = {k: round(v, 3) if isinstance(v, float) else v
                 for k, v in engine.page_pool_stats.items()}
         print(f"page pool: {pool} admissions deferred on headroom: "
-              f"{engine.pages_exhausted_steps}")
+              f"{engine.pages_exhausted_steps}, preemptions: "
+              f"{engine.preemptions}")
     elif args.prefill_chunk > 0 and args.scheduler:
         print("note: --prefill-chunk requested but this config cannot be "
               "chunk-admitted (see ServingEngine._chunk_tokens); served "

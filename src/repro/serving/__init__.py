@@ -1,3 +1,44 @@
+"""Serving stack: sparse-prefill inference engine + continuous batching.
+
+Request lifecycle: WAITING → PREFILLING → DECODE → {DONE, FAILED,
+CANCELLED}, with a PREEMPTED → WAITING back-edge (see
+``repro.serving.scheduler`` for the full state machine).
+
+Failure modes — every failure is attributed to exactly one request and
+carries a typed :class:`~repro.serving.errors.RequestError`:
+
+* **Rejected at submit** (``finish_reason="rejected"``): malformed
+  requests — empty/non-integer prompts, negative ``max_new_tokens``,
+  oversize prompts with ``allow_truncation=False``, malformed
+  ``stop_tokens``, negative deadlines — never reach scheduling
+  (:meth:`ServingEngine.validate_request`), so jnp shape errors cannot
+  surface from inside the fused batch.
+* **Cancelled / timed out** (``finish_reason="cancelled"``/``"timeout"``):
+  :meth:`SchedulerHandle.cancel` and ``Request.deadline_s`` terminate
+  WAITING or DECODE requests at the scheduler's next step — pages freed,
+  empty DecodePlan row spliced, chunked prefills aborted between quanta.
+* **Quarantined at runtime** (``finish_reason="failed"``): a per-row
+  isfinite guard on decode logits and try/except isolation around
+  admission prefill fail only the offending request; every other slot's
+  tokens stay bitwise-unaffected.
+* **Preempted** (not terminal): pool-starved admission past
+  ``EngineConfig.preempt_after_steps`` evicts the lowest-priority decode
+  victim, reclaims its pages, and re-queues it WAITING with its generated
+  tokens carried in ``Request.resume_tokens``; the resume re-prefills the
+  original prompt and replays the carry through decode, reproducing the
+  unpreempted stream bitwise (``Request.preempted_count``,
+  ``Request.waiting_deferred_steps`` expose the churn per request).  A
+  forward-progress guard refuses victims that have not grown past their
+  admission carry, so eviction churn cannot livelock.
+* **Fault injection**: :class:`~repro.serving.faults.FaultInjector`
+  (``serve(faults=...)``) deterministically injects NaN logits, allocator
+  exhaustion, slow prefill quanta, and mid-decode cancellations — the
+  chaos harness behind the degradation bench and the chaos test tier.
+
+Pool-leak invariant: every terminal transition returns its pages to the
+allocator free list; ``engine.page_pool_stats["pages_in_use_at_end"]``
+must be 0 after a drained serve.
+"""
 from repro.serving.decode_plan import (
     build_decode_plan,
     empty_decode_plan,
@@ -6,6 +47,15 @@ from repro.serving.decode_plan import (
     update_plan_slot,
 )
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.errors import RequestError
+from repro.serving.faults import (
+    CancelAt,
+    FaultInjector,
+    HoldPages,
+    NaNLogits,
+    PrefillError,
+    SlowQuantum,
+)
 from repro.serving.paged_cache import (
     NULL_PAGE,
     PageAllocator,
@@ -13,11 +63,13 @@ from repro.serving.paged_cache import (
     init_paged_pool,
 )
 from repro.serving.sampling import SamplingConfig, sample_token
-from repro.serving.scheduler import SlotScheduler
+from repro.serving.scheduler import SchedulerHandle, SlotScheduler
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
-__all__ = ["EngineConfig", "NULL_PAGE", "PageAllocator", "Request",
-           "ServingEngine", "SamplingConfig", "SlotScheduler",
+__all__ = ["CancelAt", "EngineConfig", "FaultInjector", "HoldPages",
+           "NULL_PAGE", "NaNLogits", "PageAllocator", "PrefillError",
+           "Request", "RequestError", "SamplingConfig", "SchedulerHandle",
+           "ServingEngine", "SlotScheduler", "SlowQuantum",
            "auto_width_cap", "build_decode_plan", "empty_decode_plan",
            "gather_pages", "init_paged_pool", "plan_block_counts",
            "plan_traffic_fraction", "population_width_cap", "sample_token",

@@ -105,6 +105,22 @@ class ChunkedPrefillRun:
     def done(self) -> bool:
         return self._phase == "done"
 
+    def abort(self) -> None:
+        """Abandon the run between quanta (cancellation / deadline /
+        quarantine): drop every device reference so the admission's working
+        set is released immediately.  Terminal — a later :meth:`step`
+        raises; the scheduler releases the granted pages and slots itself,
+        and any K/V the run already inserted is harmless (the slots were
+        never occupied, so validity masks keep the partial rows dark)."""
+        self.x = None
+        self._q = self._k = self._v = None
+        self._masks = self._decision = self._gate = self._perm = None
+        self._outs, self._ats, self._layer_stats = [], [], []
+        self.kv = None
+        self.sp_state = None
+        self.logits = None
+        self._phase = "done"
+
     def step(self) -> Optional[str]:
         """Run ONE quantum to completion (device-synchronous). Returns
         ``"kv"`` when a layer's K/V is ready to insert, ``"done"`` after the

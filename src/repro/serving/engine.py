@@ -93,9 +93,51 @@ caches and the non-transformer families keep the plain length mask);
 sampling honours each request's own :class:`SamplingConfig`, including
 ``stop_tokens`` (EOS) in both serving paths.  Prompts longer than the
 largest bucket are clipped to its tail — ``Request.truncated`` flags it
-and a warning is logged.  ``width_policy="count"`` resolves the sparse
-kernel's static block budget W from observed row populations, so the
-batched kernel's ragged grid issues steps proportional to *kept* blocks.
+and a warning is logged (``Request.allow_truncation=False`` turns the
+clip into a validation rejection).  ``width_policy="count"`` resolves the
+sparse kernel's static block budget W from observed row populations, so
+the batched kernel's ragged grid issues steps proportional to *kept*
+blocks.
+
+**Request lifecycle (hardened).**  Every request walks the state machine
+
+    WAITING → PREFILLING → DECODE → {DONE, FAILED, CANCELLED}
+
+with a PREEMPTED → WAITING back-edge, tracked in ``Request.state``:
+
+* **Validation** (:meth:`ServingEngine.validate_request`, run by
+  ``serve()`` before any scheduling): empty/non-1D/non-integer prompts,
+  negative ``max_new_tokens`` (0 stays the documented prefill-only
+  contract), a prompt longer than the largest bucket with
+  ``allow_truncation=False``, malformed ``stop_tokens``, and negative
+  deadlines are rejected with a typed
+  :class:`~repro.serving.errors.RequestError` carrying the uid
+  (``finish_reason="rejected"``) instead of surfacing jnp shape errors
+  from inside the fused batch.
+* **Deadlines & cancellation**: ``Request.deadline_s`` (wall budget from
+  arrival) and :class:`~repro.serving.scheduler.SchedulerHandle`
+  (``serve(handle=...)``) terminate WAITING or DECODE requests with
+  ``finish_reason="timeout"``/``"cancelled"``, freeing pages and splicing
+  empty DecodePlan rows immediately; an in-flight chunked admission
+  aborts cleanly between quanta.
+* **Preemption with page reclaim** (``preempt_after_steps``): pool-starved
+  admission evicts the lowest-priority decoding victim, frees its pages,
+  and re-enqueues it WAITING with its generated tokens carried in
+  ``Request.resume_tokens`` — a later admission re-prefills the original
+  prompt (bitwise the first admission) and replays the carry through
+  decode steps as forced tokens, so the resumed stream reproduces the
+  unpreempted serve bitwise.
+* **Fault quarantine**: a per-row isfinite guard on decode logits plus
+  try/except isolation around per-request admission prefill marks only
+  the offending request FAILED (``finish_reason="failed"``, the
+  ``RequestError`` in ``Request.error``), vacates its slot and keeps every
+  other slot's tokens bitwise-unaffected.  ``serve(faults=...)`` accepts a
+  :class:`~repro.serving.faults.FaultInjector` for deterministic chaos
+  testing.
+
+The legacy batch path ignores handles, faults, deadlines, and preemption
+(it has no step loop to reap from) — the hardened lifecycle is a scheduler
+feature, like the rest of continuous batching.
 """
 from __future__ import annotations
 
@@ -114,6 +156,7 @@ from repro.distributed.sharding import current_rules
 from repro.models.api import Model
 from repro.serving import cache_ops
 from repro.serving import decode_plan as dplan
+from repro.serving.errors import RequestError
 from repro.serving.sampling import SamplingConfig, sample_token
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
@@ -131,6 +174,15 @@ class Request:
                                         # start of serve() (scheduler honours
                                         # it for admission; the legacy batch
                                         # path only uses it for metrics)
+    deadline_s: float = 0.0             # wall budget from arrival (0 = none);
+                                        # exceeded → finish_reason "timeout",
+                                        # WAITING or DECODE alike (scheduler)
+    priority: int = 0                   # preemption victim order: lower
+                                        # priority is evicted first (ties →
+                                        # fewest generated tokens)
+    allow_truncation: bool = True       # False: a prompt longer than the
+                                        # largest bucket is REJECTED at
+                                        # validation instead of clipped
     # filled by the engine:
     output_tokens: Optional[np.ndarray] = None
     prefill_s: float = 0.0              # this request's own prefill wall
@@ -144,8 +196,39 @@ class Request:
                                         # occupied; a packed run's stall is
                                         # split across its segments)
     truncated: bool = False             # prompt clipped to the largest bucket
-    finish_reason: str = ""             # "stop" (EOS) | "length"
+    finish_reason: str = ""             # "stop" (EOS) | "length" | "timeout"
+                                        # | "cancelled" | "failed" (runtime
+                                        # quarantine) | "rejected" (validation)
+    state: str = "waiting"              # lifecycle: waiting | prefilling |
+                                        # decode | done | cancelled | failed
+    error: Optional[Exception] = None   # the typed RequestError behind a
+                                        # failed / rejected terminal state
+    waiting_deferred_steps: int = 0     # scheduler steps this request's
+                                        # admission was deferred on pool
+                                        # headroom — per-request starvation,
+                                        # not just the engine-wide counter
+    preempted_count: int = 0            # times evicted mid-decode (pages
+                                        # reclaimed) and re-queued WAITING
+    # preemption carry (scheduler-internal): tokens generated before the
+    # eviction, replayed through decode as forced tokens after the resume
+    # re-prefills the original prompt
+    resume_tokens: List[int] = dataclasses.field(default_factory=list)
     pattern_stats: Optional[Dict[str, float]] = None
+
+    def metrics(self) -> Dict[str, float]:
+        """Per-request serving metrics as one dict — the launcher summary
+        and benches consume this; starvation and preemption are visible
+        per request (``waiting_deferred_steps`` / ``preempted_count``)."""
+        return {
+            "queue_s": self.queue_s,
+            "ttft_s": self.ttft_s,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "decode_tokens_per_s": self.decode_tokens_per_s,
+            "prefill_stall_s": self.prefill_stall_s,
+            "waiting_deferred_steps": self.waiting_deferred_steps,
+            "preempted_count": self.preempted_count,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +290,17 @@ class EngineConfig:
     # Undersized pools keep requests WAITING (pages_exhausted_steps counts
     # the deferred admissions) — never a crash or a truncation.
     num_pages: int = 0
+    # preemption with page reclaim (paged scheduler only): once the head of
+    # the WAITING queue has been deferred on pool headroom for more than
+    # this many consecutive scheduler steps, evict the lowest-priority
+    # decoding victim (fewest generated tokens by default), free its pages,
+    # and re-enqueue it WAITING with its generated tokens carried — a later
+    # admission re-prefills the ORIGINAL prompt at its original bucket and
+    # replays the carry through decode as forced tokens, so the resumed
+    # stream reproduces the unpreempted one bitwise (greedy or sampled).
+    # 0 disables preemption: undersized pools then defer admission
+    # indefinitely (the pre-hardening behavior some tests pin).
+    preempt_after_steps: int = 0
 
 
 class ServingEngine:
@@ -238,6 +332,12 @@ class ServingEngine:
         # (filled by the paged scheduler)
         self.pages_exhausted_steps = 0
         self.page_pool_stats: Dict[str, float] = {}
+        # lifecycle hardening, set per serve(): the caller's cancellation
+        # handle, the fault injector (chaos harness), and the number of
+        # pool-starvation preemptions the scheduler performed
+        self.handle = None
+        self.faults = None
+        self.preemptions = 0
 
     def slot_occupancy(self) -> float:
         """Mean fraction of decode slot capacity doing useful work during
@@ -480,8 +580,70 @@ class ServingEngine:
         return self._chunk_cache[key]
 
     # -- serving ----------------------------------------------------------
-    def serve(self, requests: List[Request], *, seed: int = 0
-              ) -> List[Request]:
+    def validate_request(self, r: Request) -> None:
+        """Reject a malformed request up front with a typed
+        :class:`RequestError` carrying its uid — the submit-time half of
+        fault isolation (a bad prompt shape or stop-token list must never
+        surface as a jnp error from inside the fused batch).
+
+        Checks: non-empty 1-D integer prompt; ``max_new_tokens >= 0``
+        (0 stays the documented prefill-only contract — only *negative*
+        budgets are malformed); ``deadline_s >= 0``; a prompt longer than
+        the largest bucket needs ``allow_truncation`` (the default clips
+        with a warning); ``stop_tokens`` must be non-negative ints."""
+        p = np.asarray(r.prompt)
+        if p.ndim != 1 or p.size == 0:
+            raise RequestError(
+                r.uid, f"prompt must be a non-empty 1-D token array "
+                f"(got shape {p.shape})")
+        if not np.issubdtype(p.dtype, np.integer):
+            raise RequestError(
+                r.uid, f"prompt dtype {p.dtype} is not an integer type")
+        if r.max_new_tokens < 0:
+            raise RequestError(
+                r.uid, f"max_new_tokens={r.max_new_tokens} is negative "
+                "(0 means prefill-only)")
+        if r.deadline_s < 0:
+            raise RequestError(r.uid, f"deadline_s={r.deadline_s} is "
+                               "negative (0 means no deadline)")
+        top = max(self.ecfg.seq_buckets)
+        if p.size > top and not r.allow_truncation:
+            raise RequestError(
+                r.uid, f"prompt of {p.size} tokens exceeds the largest "
+                f"bucket ({top}) and allow_truncation=False")
+        try:
+            bad = [t for t in r.sampling.stop_tokens
+                   if not (isinstance(t, (int, np.integer))
+                           and not isinstance(t, bool) and int(t) >= 0)]
+        except TypeError:
+            raise RequestError(
+                r.uid, f"stop_tokens {r.sampling.stop_tokens!r} is not "
+                "iterable") from None
+        if bad:
+            raise RequestError(
+                r.uid, f"malformed stop_tokens {r.sampling.stop_tokens!r}: "
+                "entries must be non-negative integers")
+
+    def _validate_all(self, requests: List[Request]) -> List[Request]:
+        """Partition submissions: malformed requests finish terminally as
+        ``rejected`` (empty output, the error attached) and everything
+        else is scheduled."""
+        live = []
+        for r in requests:
+            try:
+                self.validate_request(r)
+            except RequestError as e:
+                r.error = e
+                r.finish_reason = "rejected"
+                r.state = "failed"
+                r.output_tokens = np.zeros((0,), np.int32)
+                logger.warning("rejected: %s", e)
+            else:
+                live.append(r)
+        return live
+
+    def serve(self, requests: List[Request], *, seed: int = 0,
+              handle=None, faults=None) -> List[Request]:
         """Serve a list of requests, grouped by sequence bucket.
 
         With ``EngineConfig(scheduler=True)`` the transformer families run
@@ -494,6 +656,17 @@ class ServingEngine:
         entirely: ONE scheduler (block-paged decode state) serves the whole
         request list, admitting mixed-length requests from different former
         buckets into the same decode batch as pool headroom allows.
+
+        ``handle`` — a :class:`~repro.serving.scheduler.SchedulerHandle`
+        whose ``cancel(uid)`` terminates the request at the scheduler's
+        next step.  ``faults`` — a
+        :class:`~repro.serving.faults.FaultInjector` (deterministic chaos
+        harness; re-armed here so repeat serves replay one schedule).
+        Both are scheduler-path features; the legacy batch path ignores
+        them.  Malformed requests are rejected before any scheduling
+        (:meth:`validate_request`) and come back with
+        ``finish_reason="rejected"`` and the ``RequestError`` in
+        ``Request.error``.
         """
         t0 = time.time()
         self.slot_steps = 0
@@ -501,17 +674,23 @@ class ServingEngine:
         self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0}
         self.pages_exhausted_steps = 0
         self.page_pool_stats = {}
+        self.preemptions = 0
+        self.handle = handle
+        self.faults = faults
+        if faults is not None:
+            faults.reset()
+        live = self._validate_all(requests)
         use_sched = ((self.ecfg.scheduler or self.ecfg.paged)
                      and self._supports_scheduler())
         if self.ecfg.paged and use_sched:
             from repro.serving.scheduler import SlotScheduler
-            if requests:
-                seq = max(self._bucket(len(r.prompt)) for r in requests)
-                SlotScheduler(self, list(requests), seq, seed=seed, t0=t0,
+            if live:
+                seq = max(self._bucket(len(r.prompt)) for r in live)
+                SlotScheduler(self, list(live), seq, seed=seed, t0=t0,
                               paged=True).run()
             return requests
         groups: Dict[int, List[Request]] = {}
-        for r in requests:
+        for r in live:
             groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
         for seq, grp in groups.items():
             if use_sched:
@@ -625,14 +804,18 @@ class ServingEngine:
     def _pad_prompt(self, r: Request, seq: int, row: np.ndarray) -> int:
         """Left-align one prompt into ``row``; flag + warn on clipping (a
         prompt longer than the largest bucket loses its head silently
-        otherwise).  Returns the row's valid prompt length."""
-        if len(r.prompt) > seq:
+        otherwise).  A preempted request re-enters here unchanged — the
+        resume re-prefills the ORIGINAL prompt (bitwise the first
+        admission); its carried tokens are replayed through decode, not
+        prefilled.  Returns the row's valid prompt length."""
+        prompt = r.prompt
+        if len(prompt) > seq:
             r.truncated = True
             logger.warning(
                 "request %s: prompt of %d tokens exceeds the largest "
                 "bucket (%d); clipping to the last %d tokens",
-                r.uid, len(r.prompt), seq, seq)
-        p = r.prompt[-seq:]
+                r.uid, len(prompt), seq, seq)
+        p = prompt[-seq:]
         row[: len(p)] = p
         return len(p)
 
@@ -785,3 +968,5 @@ class ServingEngine:
             r.decode_tokens_per_s = self._decode_rate(len(outs[i]),
                                                       r.decode_s)
             r.pattern_stats = stats
+            r.state = "done"        # the batch path has no cancellation /
+                                    # quarantine reaper; rows end DONE

@@ -1,0 +1,28 @@
+"""Typed per-request errors for the serving stack.
+
+A :class:`RequestError` always names the request (``uid``) it belongs to:
+the hardened lifecycle's contract is that a malformed submission or a
+runtime fault is attributed to exactly ONE request — rejected at
+validation or quarantined at runtime (``finish_reason="failed"``, slot
+vacated, pages freed) — and never escapes as a deep jnp shape error or a
+NaN that poisons the fused decode batch.
+"""
+from __future__ import annotations
+
+
+class RequestError(Exception):
+    """A per-request failure: a submit-time validation rejection or a
+    quarantined runtime fault.
+
+    Attributes:
+        uid:  the offending request's uid.
+        kind: machine-readable origin — ``"invalid"`` (validation),
+              ``"prefill"`` (admission prefill raised or produced
+              non-finite logits), ``"decode"`` (the per-row isfinite
+              guard tripped on a decode step).
+    """
+
+    def __init__(self, uid: int, message: str, *, kind: str = "invalid"):
+        self.uid = uid
+        self.kind = kind
+        super().__init__(f"request {uid}: {message}")

@@ -80,6 +80,17 @@ class PageAllocator:
                 raise ValueError(f"freeing invalid page id {i}")
             self._free.append(i)
 
+    def hold(self, n: int) -> np.ndarray:
+        """Take up to ``n`` pages out of circulation — injected allocator
+        exhaustion (``serving.faults.HoldPages``) or reserved headroom.
+        Grants whatever headroom exists (possibly zero ids) instead of
+        refusing like :meth:`alloc`; return the ids with :meth:`free`."""
+        n = min(n, len(self._free))
+        if n <= 0:
+            return np.zeros((0,), np.int32)
+        ids = self.alloc(n)
+        return ids if ids is not None else np.zeros((0,), np.int32)
+
     def utilization(self) -> float:
         return self.used_pages / max(1, self.num_pages - 1)
 

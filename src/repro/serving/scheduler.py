@@ -1,7 +1,20 @@
 """Slot-based continuous-batching scheduler for the serving engine.
 
-Owns the request lifecycle — WAITING → PREFILLING → DECODE → DONE — over a
-persistent fixed-shape decode state of ``max_batch`` *slots*:
+Owns the request lifecycle
+
+    WAITING → PREFILLING → DECODE → {DONE, FAILED, CANCELLED}
+                  ▲                      │
+                  └──── PREEMPTED ◄──────┘   (paged pool starvation:
+                        (back to WAITING,     pages reclaimed, generated
+                         tokens carried,      tokens replayed through
+                         replay on resume)    decode after re-prefill)
+
+over a persistent fixed-shape decode state of ``max_batch`` *slots*.
+Terminal states map to ``Request.finish_reason``: DONE ← "stop"/"length",
+CANCELLED ← "cancelled" (a :class:`SchedulerHandle.cancel`) or "timeout"
+(``Request.deadline_s`` exceeded), FAILED ← "failed" (runtime quarantine)
+or "rejected" (submit-time validation, before the scheduler ever sees the
+request).  Core slot mechanics:
 
   * **Per-slot positions.**  Every slot decodes at its own ``pos`` (the
     ``(B,)`` vector contract of ``transformer.decode_step`` /
@@ -96,6 +109,48 @@ metrics are real, not batch-wide copies: ``queue_s`` (arrival → prefill
 start), ``ttft_s`` (arrival → first token), ``decode_s`` /
 ``decode_tokens_per_s`` (first token → last token).
 
+**Lifecycle hardening.**  Every scheduler step begins with a reap pass
+(:meth:`SlotScheduler._reap`): requests cancelled through the serve's
+:class:`SchedulerHandle` (or an injected :class:`~repro.serving.faults.
+CancelAt`) and requests whose ``deadline_s`` wall budget has expired are
+terminated wherever they stand — WAITING requests finish inert,
+DECODE slots are vacated (pages freed, plan row emptied before the next
+decode step), and an in-flight chunked admission aborts cleanly *between*
+quanta (:meth:`ChunkedPrefillRun.abort`; a packed run aborts only once
+every segment is doomed — live segments ride the run to completion).
+
+**Preemption with page reclaim** (``EngineConfig.preempt_after_steps``,
+paged mode): when the queue head has been deferred on pool headroom for
+more than the configured number of consecutive steps, the lowest-priority
+decoding victim (``Request.priority``, ties → fewest generated tokens) is
+evicted — slot vacated, pages returned to the free list, plan row emptied
+— and re-enqueued WAITING with its generated tokens carried in
+``resume_tokens``.  A later admission re-prefills the ORIGINAL prompt at
+its original bucket — bitwise the first admission — and replays the carry
+through ordinary decode steps as forced tokens: decode rows share nothing
+across the batch axis and the sampling-key chain restarts from the same
+``fold_in`` and splits in the same order, so the resumed stream (and its
+continuation) reproduces the unpreempted serve bitwise, greedy or
+sampled.  Head-of-line starvation becomes bounded-latency degradation,
+and a resume's page footprint never exceeds its first admission's.  A
+forward-progress guard makes the churn livelock-free: a slot is only
+evictable once its carried stream is strictly longer than the carry it
+was admitted with, so every eviction cycle nets at least one new token.
+
+**Per-request fault quarantine.**  A cheap per-row ``np.isfinite`` guard
+on the host-pulled decode logits vacates ONLY the poisoned slot
+(``finish_reason="failed"``, the typed
+:class:`~repro.serving.errors.RequestError` in ``Request.error``); the
+other slots' rows share nothing across the batch axis, so their tokens are
+bitwise-unaffected.  Admission prefill — the one-shot launch and every
+chunked quantum — runs under try/except isolation: an exception fails only
+the admitting request(s) (a packed run's segments share the kernel launch,
+so the quarantine granularity there is the run), releases their pages, and
+the serve continues.  The :class:`~repro.serving.faults.FaultInjector`
+passed via ``serve(faults=...)`` drives all of these paths
+deterministically; the end-of-serve pool summary records
+``pages_in_use_at_end`` so leak-freedom is observable.
+
 MLA latent caches and the non-transformer families never reach this module
 — ``ServingEngine.serve`` routes them through the legacy batch path (the
 dense carve-out; their caches have no per-slot write layout).  Configs a
@@ -105,6 +160,8 @@ the one-shot admission path unchanged.
 from __future__ import annotations
 
 import dataclasses
+import logging
+import threading
 import time
 import types
 from collections import deque
@@ -118,7 +175,34 @@ from repro.serving import decode_plan as dplan
 from repro.serving import paged_cache
 from repro.serving import sparse_decode
 from repro.serving.chunked_prefill import ChunkedPrefillRun
+from repro.serving.errors import RequestError
 from repro.serving.sampling import sample_token
+
+logger = logging.getLogger(__name__)
+
+
+class SchedulerHandle:
+    """Thread-safe cancellation surface for an in-flight ``serve()``.
+
+    Create one, pass it to :meth:`ServingEngine.serve(handle=...)`, and
+    call :meth:`cancel` (from any thread) to terminate a request at the
+    scheduler's next step: WAITING requests finish immediately with
+    ``finish_reason="cancelled"``, DECODE slots are vacated (pages freed,
+    empty plan row spliced), and an in-flight chunked admission aborts
+    between quanta.  Cancelling an unknown or already-finished uid is a
+    no-op."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._uids: set = set()
+
+    def cancel(self, uid: int) -> None:
+        with self._lock:
+            self._uids.add(uid)
+
+    def cancelled(self) -> frozenset:
+        with self._lock:
+            return frozenset(self._uids)
 
 
 @dataclasses.dataclass
@@ -130,6 +214,15 @@ class _Slot:
     outs: List[int]
     last_tok: int
     t_first: float                      # wall time of the first token
+    replay: List[int] = dataclasses.field(default_factory=list)
+                                        # preemption carry not yet re-fed:
+                                        # decode steps force these tokens
+                                        # (instead of the sampled one)
+                                        # until the list drains
+    carry_len: int = 0                  # carry length at admission — a slot
+                                        # is evictable only once its stream
+                                        # has grown past this (progress
+                                        # guard, see _preempt_victim)
 
 
 class SlotScheduler:
@@ -149,6 +242,21 @@ class SlotScheduler:
         ecfg = engine.ecfg
         self.nslots = ecfg.max_batch
         blk = max(engine.sp.cfg.block_size, 1)
+
+        # lifecycle hardening: the serve's cancellation handle and fault
+        # injector (both may be None), the 1-based step counter the reaper
+        # and injector key on, the consecutive-starvation counter behind
+        # preemption, and the doom list for in-flight run segments
+        self.handle = getattr(engine, "handle", None)
+        self.faults = getattr(engine, "faults", None)
+        self.step_i = 0
+        self._starved = 0
+        self._doomed: dict = {}         # uid → terminal reason, applied at
+                                        # run abort/completion
+        self.preempt_after = (ecfg.preempt_after_steps
+                              if self.paged and ecfg.preempt_after_steps > 0
+                              else 0)
+
         # one cache headroom for the whole bucket: covers the longest
         # request and stays a block multiple so the DecodePlan tables tile
         # the grown region exactly (same rounding as the legacy path)
@@ -226,32 +334,150 @@ class SlotScheduler:
 
     # -- lifecycle ------------------------------------------------------
     def run(self) -> None:
-        if self.chunk:
-            self._run_chunked()
+        try:
+            if self.chunk:
+                self._run_chunked()
+            else:
+                while self.queue or any(s is not None for s in self.slots):
+                    self._step_begin()
+                    self._admit()
+                    self._flush_stale_slots()
+                    if any(s is not None for s in self.slots):
+                        self._decode_step()
+                self._flush_stale_slots()   # leave the documented
+                                            # invariant: unoccupied slots'
+                                            # tables are empty
+        finally:
+            # injected page-exhaustion windows must never leak pool pages,
+            # and the pool summary (with its end-of-serve leak accounting)
+            # must publish even if the serve itself blew up
+            if self.faults is not None and self.paged:
+                self.faults.release_pages(self.alloc)
             self._pool_summary()
-            return
-        while self.queue or any(s is not None for s in self.slots):
-            self._admit()
-            self._flush_stale_slots()
-            if any(s is not None for s in self.slots):
-                self._decode_step()
-        self._flush_stale_slots()       # leave the documented invariant:
-                                        # unoccupied slots' tables are empty
-        self._pool_summary()
 
     def _run_chunked(self) -> None:
         """Chunked main loop: one prefill quantum, then one decode step —
         the fair-share cadence that bounds admission stall per step."""
         while (self.queue or self.run_ is not None
                or any(s is not None for s in self.slots)):
+            self._step_begin()
             self._prefill_step()
+            if (self.run_ is not None and self.paged and self.queue
+                    and (self.t0 + self.queue[0].arrival_s) <= time.time()
+                    and self.alloc.free_pages
+                        < self._pages_needed(self.queue[0])):
+                # the queue head would be starved even once the in-flight
+                # run lands — keep the starvation clock ticking so a
+                # decoding victim can be evicted mid-chunked-admission
+                self._note_starved(self.queue[0])
             self._flush_stale_slots()
             if any(s is not None for s in self.slots):
                 self._decode_step()
         self._flush_stale_slots()
 
+    def _step_begin(self) -> None:
+        """Per-step lifecycle tick: advance the step counter, let the
+        fault injector act (due cancels, page-exhaustion windows), then
+        reap cancelled / deadline-expired requests."""
+        self.step_i += 1
+        if self.faults is not None:
+            self.faults.on_step(self.step_i,
+                                alloc=self.alloc if self.paged else None)
+        self._reap()
+
+    def _reap(self) -> None:
+        """Terminate cancelled / deadline-expired requests wherever they
+        stand in the lifecycle: WAITING (finish inert), mid-chunked-prefill
+        (doom the segment; abort the run between quanta once no live
+        segment remains), or DECODE (vacate — pages freed, plan row
+        emptied before the next decode step)."""
+        cancelled = set()
+        if self.handle is not None:
+            cancelled |= self.handle.cancelled()
+        if self.faults is not None:
+            cancelled |= self.faults.cancelled()
+        now = time.time()
+
+        def doom_reason(r):
+            if r.uid in cancelled:
+                return "cancelled"
+            if (r.deadline_s > 0
+                    and now - (self.t0 + r.arrival_s) > r.deadline_s):
+                return "timeout"
+            return None
+
+        for r in list(self.queue):
+            reason = doom_reason(r)
+            if reason is not None:
+                self.queue.remove(r)
+                self._finish_inert(r, reason)
+        run = self.run_
+        if run is not None:
+            for r in run.requests:
+                if r.uid in self._doomed:
+                    continue
+                reason = doom_reason(r)
+                if reason is not None:
+                    self._doomed[r.uid] = reason
+            if all(r.uid in self._doomed for r in run.requests):
+                self._abort_run(run)
+        for i, s in enumerate(self.slots):
+            if s is not None and doom_reason(s.req) is not None:
+                self._vacate(i, s, doom_reason(s.req))
+
+    def _finish_inert(self, r, reason: str, error=None) -> None:
+        """Finalize a request that holds no decode slot (WAITING, or a
+        doomed/quarantined admission): terminal metrics without slot
+        bookkeeping.  A preempted request's carried tokens are its output
+        so far."""
+        if error is not None and r.error is None:
+            r.error = error
+        self._finish(_Slot(req=r, key=jax.random.PRNGKey(0),
+                           outs=list(r.resume_tokens), last_tok=0,
+                           t_first=time.time()), reason)
+
+    def _abort_run(self, run: ChunkedPrefillRun) -> None:
+        """Abort an in-flight chunked admission between quanta: release
+        the granted pages, finalize every doomed segment, drop the run's
+        device state.  Callers doom every live segment first — a packed
+        run's segments share the kernel launch, so the abort granularity
+        is the whole run."""
+        if self.paged:
+            for slot in run.slot_ids:
+                self._release_pages(slot)
+        for r in run.requests:
+            reason = self._doomed.pop(r.uid, "cancelled")
+            if not r.finish_reason:
+                self._finish_inert(r, reason)
+        run.abort()
+        self.run_ = None
+
+    def _quarantine_run(self, run: ChunkedPrefillRun, exc: Exception
+                        ) -> None:
+        """A prefill quantum raised: every live segment of the run is
+        FAILED (per-request quarantine at run granularity — packed
+        segments share the launch), pages released, device state dropped.
+        The rest of the serve continues untouched."""
+        for r in run.requests:
+            if r.finish_reason or r.uid in self._doomed:
+                continue
+            if isinstance(exc, RequestError) and exc.uid == r.uid:
+                err = exc
+            elif isinstance(exc, RequestError):
+                err = RequestError(
+                    r.uid, f"packed run failed alongside request "
+                    f"{exc.uid}", kind="prefill")
+            else:
+                err = RequestError(
+                    r.uid, f"prefill quantum raised "
+                    f"{type(exc).__name__}: {exc}", kind="prefill")
+            self._doomed[r.uid] = "failed"
+            r.error = err
+            logger.warning("quarantined: %s", err)
+        self._abort_run(run)
+
     def _pool_summary(self) -> None:
-        """Publish the pool's capacity/peak accounting on the engine."""
+        """Publish the pool's capacity/peak/leak accounting on the engine."""
         if not self.paged:
             return
         self.eng.page_pool_stats = {
@@ -261,6 +487,9 @@ class SlotScheduler:
             "peak_pages": self.alloc.peak_in_use,
             "peak_utilization": (self.alloc.peak_in_use
                                  / max(1, self.num_pages - 1)),
+            # every terminal transition frees its pages, so a drained serve
+            # must report 0 here — the observable the leak gates pin
+            "pages_in_use_at_end": self.alloc.used_pages,
         }
 
     def _flush_stale_slots(self) -> None:
@@ -282,6 +511,10 @@ class SlotScheduler:
         bucket under paging (mixed lengths coexist in one slot set)."""
         if not self.paged:
             return self.seq
+        # a preempted request re-buckets at its ORIGINAL prompt length:
+        # resume re-prefills the prompt alone (bitwise the first
+        # admission) and replays the carry through decode steps, so its
+        # geometry and page footprint never grow
         b = self.eng._bucket(len(r.prompt))
         if b % self.page_size:
             raise ValueError(
@@ -316,6 +549,69 @@ class SlotScheduler:
             self.alloc.free(pages)
             self.page_table[slot, :] = paged_cache.NULL_PAGE
 
+    def _note_starved(self, r) -> None:
+        """The queue head's admission was deferred on pool headroom this
+        step: count it per request (``waiting_deferred_steps``) and
+        engine-wide, and — once the starvation window
+        (``EngineConfig.preempt_after_steps``) is exceeded — evict a
+        decoding victim so the head's pages eventually materialize."""
+        self.eng.pages_exhausted_steps += 1
+        r.waiting_deferred_steps += 1
+        self._starved += 1
+        if self.preempt_after and self._starved > self.preempt_after:
+            self._preempt_victim()
+
+    def _preempt_victim(self) -> None:
+        """PREEMPTED → WAITING: evict the lowest-priority decoding slot
+        (``Request.priority``, ties → fewest generated tokens), free its
+        pages, and re-enqueue the request at the back of the queue with
+        its generated tokens carried in ``resume_tokens``.  A later
+        admission re-prefills the ORIGINAL prompt at its original bucket
+        (bitwise the first admission) and replays the carry through
+        ordinary decode steps as forced tokens — decode rows share
+        nothing across the batch axis, so the resumed stream reproduces
+        the unpreempted one bitwise (the sampling-key chain restarts from
+        the same fold_in and splits in the same order).
+
+        Forward-progress guard: a slot is only evicted once its carried
+        stream (``outs + replay``) is STRICTLY longer than the carry it
+        was admitted with.  Without it, starvation accumulated while an
+        admission's chunked prefill is in flight (no victims exist yet,
+        so the clock never resets) evicts the slot the moment its prefill
+        lands — and a resumed slot would leave with exactly the carry it
+        arrived with: zero net progress, livelock.  The guard *defers*
+        the eviction rather than falling through to the next candidate,
+        so it cannot promote a higher-priority slot into the victim."""
+        cands = [i for i, s in enumerate(self.slots) if s is not None]
+        if not cands:
+            return
+        victim = min(cands, key=lambda i: (self.slots[i].req.priority,
+                                           len(self.slots[i].outs), i))
+        s = self.slots[victim]
+        if len(s.outs) + len(s.replay) <= s.carry_len:
+            # chosen victim hasn't outgrown its admission carry yet; its
+            # replay drains one token per decode step, so it becomes
+            # evictable in bounded steps — hold the eviction until then
+            return
+        r = s.req
+        npages = len(self.slot_pages.get(victim, ()))
+        self.slots[victim] = None
+        self._release_pages(victim)
+        if self.use_sparse:
+            self._stale_slots.add(victim)
+        # the full stream generated so far: earlier carry (if this is a
+        # second eviction mid-replay) plus this occupancy's tokens
+        r.resume_tokens = list(s.outs) + list(s.replay)
+        r.preempted_count += 1
+        r.state = "waiting"
+        self.eng.preemptions += 1
+        self.queue.append(r)
+        self._starved = 0
+        logger.info(
+            "preempted request %s after %d generated tokens (pool "
+            "starvation, %d pages reclaimed); re-queued with token carry",
+            r.uid, len(s.outs), npages)
+
     def _admit(self) -> None:
         """WAITING → PREFILL: fill free slots from the arrival queue."""
         while self.queue:
@@ -327,8 +623,9 @@ class SlotScheduler:
                     and self.alloc.free_pages < self._pages_needed(r)):
                 # pool exhausted: the head request stays WAITING until a
                 # finishing slot frees its pages (admission stays FIFO —
-                # later, smaller requests do not jump the queue)
-                self.eng.pages_exhausted_steps += 1
+                # later, smaller requests do not jump the queue); past the
+                # starvation window a decoding victim is preempted
+                self._note_starved(r)
                 return
             wait = (self.t0 + r.arrival_s) - time.time()
             if wait > 0:
@@ -344,22 +641,46 @@ class SlotScheduler:
         its first token, splice its KV row and DecodePlan row into the live
         state."""
         eng, seq = self.eng, self._bucket_of(r)
+        self._starved = 0               # the head admitted: starvation over
+        r.state = "prefilling"
         toks = np.zeros((1, seq), np.int32)
         plen = eng._pad_prompt(r, seq, toks[0])
 
         width = eng._width_cap(seq)
         tp = time.time()
         r.queue_s = max(tp - (self.t0 + r.arrival_s), 0.0)
-        prefill = eng._prefill_fn(1, seq, width)
-        result = prefill(eng.params, jnp.asarray(toks),
-                         jnp.asarray([plen], jnp.int32))
-        jax.block_until_ready(result.last_logits)
+        try:
+            # per-request prefill quarantine: an exception (or injected
+            # fault) fails ONLY this request — no slot was occupied and no
+            # pages granted yet, so nothing to unwind
+            if self.faults is not None:
+                self.faults.check_prefill([r.uid])
+            prefill = eng._prefill_fn(1, seq, width)
+            result = prefill(eng.params, jnp.asarray(toks),
+                             jnp.asarray([plen], jnp.int32))
+            jax.block_until_ready(result.last_logits)
+            finite = bool(np.isfinite(np.asarray(result.last_logits)).all())
+        except Exception as e:          # noqa: BLE001 — quarantine wall
+            r.prefill_s = time.time() - tp
+            eng.phase_s["prefill"] += r.prefill_s
+            err = (e if isinstance(e, RequestError) else RequestError(
+                r.uid, f"prefill raised {type(e).__name__}: {e}",
+                kind="prefill"))
+            logger.warning("quarantined: %s", err)
+            self._finish_inert(r, "failed", error=err)
+            return
         r.prefill_s = time.time() - tp
         eng.phase_s["prefill"] += r.prefill_s
         if any(s is not None for s in self.slots):
             # the whole-sequence launch ran while other slots wanted to
             # decode — the interference chunked admission amortizes
             r.prefill_stall_s = r.prefill_s
+        if not finite:
+            err = RequestError(r.uid, "non-finite prefill logits",
+                               kind="prefill")
+            logger.warning("quarantined: %s", err)
+            self._finish_inert(r, "failed", error=err)
+            return
 
         stats = eng._record_prefill_stats(result, width, seq)
         r.pattern_stats = stats
@@ -369,18 +690,27 @@ class SlotScheduler:
                                last_tok=0, t_first=time.time()), "length")
             return
 
+        # preemption carry: the prompt was re-prefilled at its ORIGINAL
+        # bucket (bitwise the first admission), the key chain restarts
+        # from the same fold_in, and the carried tokens are force-fed
+        # through the decode steps — the resumed stream is the
+        # unpreempted stream, bitwise
+        carry = list(r.resume_tokens)
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r.uid)
         key, sub = jax.random.split(key)
         tok0 = int(sample_token(sub, result.last_logits, r.sampling)[0])
+        if carry:
+            tok0 = carry[0]             # carried tokens are verbatim
         t_first = time.time()
-        r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
+        if not carry:                   # TTFT is first-ever token only
+            r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
 
         s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
-                  t_first=t_first)
+                  t_first=t_first, replay=carry[1:], carry_len=len(carry))
         if r.sampling.is_stop(tok0):
             self._finish(s, "stop")
             return                      # slot stays free for the next admit
-        if r.max_new_tokens <= 1:
+        if len(s.outs) >= r.max_new_tokens:
             self._finish(s, "length")
             return
 
@@ -432,6 +762,7 @@ class SlotScheduler:
         self.plens[slot] = plen
         self.pflens[slot] = seq
         self.slots[slot] = s
+        r.state = "decode"
 
     # -- chunked admission ----------------------------------------------
     def _pack_limit(self, seq: int) -> int:
@@ -465,8 +796,9 @@ class SlotScheduler:
         if (self.paged and self.alloc.free_pages
                 < self._pages_needed(self.queue[0])):
             # same FIFO headroom gate as the one-shot path: the head stays
-            # WAITING until a finishing slot frees its pages
-            self.eng.pages_exhausted_steps += 1
+            # WAITING until a finishing slot frees its pages — or a victim
+            # is preempted once the starvation window is exceeded
+            self._note_starved(self.queue[0])
             return None
         wait = (self.t0 + self.queue[0].arrival_s) - time.time()
         if wait > 0:
@@ -498,8 +830,10 @@ class SlotScheduler:
             group.append(self.queue.popleft())
         if not group:
             return None
+        self._starved = 0               # the head admitted: starvation over
         for r in group:
             r.queue_s = max(now - (self.t0 + r.arrival_s), 0.0)
+            r.state = "prefilling"
         # the width-policy observations cover the solo bucket geometry, not
         # the packed grid — packed runs prefill uncapped
         width = eng._width_cap(seq) if len(group) == 1 else None
@@ -524,7 +858,20 @@ class SlotScheduler:
         run = self.run_
         occupied = any(s is not None for s in self.slots)
         tq = time.time()
-        ev = run.step()
+        try:
+            if self.faults is not None:
+                # injected prefill faults land between quanta: a raised
+                # PrefillError quarantines the run; a SlowQuantum delay
+                # stretches the quantum so deadlines can expire it
+                self.faults.check_prefill([r.uid for r in run.requests])
+                d = self.faults.quantum_delay([r.uid for r in run.requests])
+                if d > 0:
+                    time.sleep(d)
+            ev = run.step()
+        except Exception as e:          # noqa: BLE001 — quarantine wall
+            self.eng.phase_s["prefill"] += time.time() - tq
+            self._quarantine_run(run, e)
+            return
         dt = time.time() - tq
         self._run_wall += dt
         self.eng.phase_s["prefill"] += dt
@@ -602,9 +949,29 @@ class SlotScheduler:
         shim = types.SimpleNamespace(stats=run.attn_stats)
         stats = eng._record_prefill_stats(shim, run.width, seq)
         for j, (r, slot) in enumerate(zip(run.requests, run.slot_ids)):
+            reason = self._doomed.pop(r.uid, None)
+            if reason is not None:
+                # cancelled / expired mid-prefill in a packed run whose
+                # OTHER segments stayed live: the doomed segment never
+                # occupies its slot; its pages return here
+                if self.paged:
+                    self._release_pages(slot)
+                self._finish_inert(r, reason)
+                continue
             r.prefill_s = self._run_wall
             rstats = dict(stats)
             r.pattern_stats = rstats
+
+            if not bool(np.isfinite(np.asarray(run.logits[j])).all()):
+                # per-segment quarantine at completion: this segment's
+                # logits are poisoned but its neighbours' are usable
+                if self.paged:
+                    self._release_pages(slot)
+                err = RequestError(r.uid, "non-finite prefill logits",
+                                   kind="prefill")
+                logger.warning("quarantined: %s", err)
+                self._finish_inert(r, "failed", error=err)
+                continue
 
             if r.max_new_tokens <= 0:   # prefill-only: no token is emitted
                 if self.paged:
@@ -614,21 +981,28 @@ class SlotScheduler:
                                    t_first=time.time()), "length")
                 continue
 
+            # preemption carry: same replay contract as _start — prompt
+            # re-prefilled at its original bucket, carry force-fed
+            carry = list(r.resume_tokens)
             key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r.uid)
             key, sub = jax.random.split(key)
             tok0 = int(sample_token(sub, run.logits[j: j + 1],
                                     r.sampling)[0])
+            if carry:
+                tok0 = carry[0]         # carried tokens are verbatim
             t_first = time.time()
-            r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
+            if not carry:               # TTFT is first-ever token only
+                r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
 
             s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
-                      t_first=t_first)
+                      t_first=t_first, replay=carry[1:],
+                      carry_len=len(carry))
             if r.sampling.is_stop(tok0):
                 if self.paged:
                     self._release_pages(slot)
                 self._finish(s, "stop")
                 continue                # slot stays free for the next run
-            if r.max_new_tokens <= 1:
+            if len(s.outs) >= r.max_new_tokens:
                 if self.paged:
                     self._release_pages(slot)
                 self._finish(s, "length")
@@ -646,6 +1020,7 @@ class SlotScheduler:
             self.plens[slot] = run.plens[j]
             self.pflens[slot] = seq
             self.slots[slot] = s
+            r.state = "decode"
 
     # -- decode ----------------------------------------------------------
     def _decode_step(self) -> None:
@@ -685,12 +1060,32 @@ class SlotScheduler:
         for i in occ:
             self.pos[i] += 1            # this step wrote at the old pos
             s = self.slots[i]
+            row = logits_h[i]
+            if self.faults is not None:
+                row = self.faults.corrupt_logits(s.req.uid, len(s.outs),
+                                                 row)
+            if not np.isfinite(row).all():
+                # per-request fault quarantine: only this slot dies — the
+                # decode rows share nothing across the batch axis, so
+                # every other slot's tokens are bitwise-unaffected
+                err = RequestError(s.req.uid, "non-finite decode logits",
+                                   kind="decode")
+                logger.warning("quarantined: %s", err)
+                if s.req.error is None:
+                    s.req.error = err
+                self._vacate(i, s, "failed")
+                continue
             if s.req.sampling.temperature <= 0.0:
-                tok = int(np.argmax(logits_h[i]))
+                tok = int(np.argmax(row))
             else:
                 s.key, sub = jax.random.split(s.key)
                 tok = int(sample_token(sub, logits[i: i + 1],
                                        s.req.sampling)[0])
+            if s.replay:
+                # preemption carry: force the already-generated token (the
+                # sampling above still ran, keeping the key chain aligned
+                # for the post-replay stream)
+                tok = s.replay.pop(0)
             s.outs.append(tok)
             s.last_tok = tok
             if s.req.sampling.is_stop(tok):
@@ -713,12 +1108,20 @@ class SlotScheduler:
             self._stale_slots.add(slot)
         self._finish(s, reason)
 
+    # terminal Request.state per finish_reason (rejected requests never
+    # reach the scheduler — listed for the shared vocabulary's sake)
+    _TERMINAL_STATE = {"stop": "done", "length": "done",
+                       "cancelled": "cancelled", "timeout": "cancelled",
+                       "failed": "failed", "rejected": "failed"}
+
     def _finish(self, s: _Slot, reason: str) -> None:
-        """DECODE → DONE: finalize the request's output + real metrics."""
+        """→ {DONE, CANCELLED, FAILED}: finalize the request's output +
+        real metrics and pin its terminal lifecycle state."""
         r = s.req
         now = time.time()
         r.output_tokens = np.asarray(s.outs, np.int32)
         r.finish_reason = reason
+        r.state = self._TERMINAL_STATE.get(reason, "done")
         r.decode_s = max(now - s.t_first, 0.0)
         r.decode_tokens_per_s = self.eng._decode_rate(len(s.outs),
                                                       r.decode_s)

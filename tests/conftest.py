@@ -11,6 +11,10 @@ Markers (also registered in pyproject.toml):
               tiers) — select with ``-m subprocess``, exclude with
               ``-m "not subprocess"``; scripts/run_tests.sh runs the
               default suite first and this tier second.
+  chaos       fault-injection scenarios (combined starvation + poison +
+              cancellation serves) — select with
+              ``-m "chaos and not subprocess"``; run_tests.sh runs this
+              tier after the default suite.
 """
 import jax
 import numpy as np
@@ -23,6 +27,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "subprocess: spawns a fresh python/JAX process "
         "(forced multi-device CPU-mesh tiers)")
+    config.addinivalue_line(
+        "markers", "chaos: fault-injection scenarios (combined "
+        "starvation + poison + cancellation serves)")
 
 
 @pytest.fixture(scope="session")

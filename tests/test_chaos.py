@@ -1,0 +1,168 @@
+"""Chaos tier: combined fault-injection scenarios over the hardened
+request lifecycle (``-m "chaos and not subprocess"``).
+
+Where test_lifecycle.py pins each hardening mechanism in isolation, this
+tier composes them the way production incidents do: pool starvation with
+preemption, a NaN-poisoned request, and a mid-decode cancellation in ONE
+serve — and asserts the acceptance contract: every healthy request's
+tokens bit-match the fault-free serve, the preempted request resumes and
+finishes, exactly the poisoned request fails and exactly the cancelled
+one cancels, and the page pool drains to zero (no leaks).  Transient
+allocator exhaustion (held pages) and slow prefill quanta racing a
+deadline are pinned separately.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, sample
+from repro.models import build_model
+from repro.serving import (
+    CancelAt,
+    EngineConfig,
+    FaultInjector,
+    HoldPages,
+    NaNLogits,
+    Request,
+    RequestError,
+    ServingEngine,
+    SlowQuantum,
+)
+
+pytestmark = pytest.mark.chaos
+
+CFG = get_smoke_config("granite-3-2b")
+S64, S256 = 64, 256
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    sp = model.default_share_prefill()
+    engines = {}
+
+    def get_engine(**kw) -> ServingEngine:
+        k = tuple(sorted(kw.items()))
+        if k not in engines:
+            engines[k] = ServingEngine(model, params, sp, EngineConfig(
+                method="share", **kw))
+        return engines[k]
+
+    return get_engine
+
+
+def _requests(max_new, seq=S64, priorities=None, **kw):
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=seq,
+                      global_batch=1, task="retrieval")
+    reqs = [Request(uid=i, prompt=sample(dcfg, i)["tokens"],
+                    max_new_tokens=m, **kw) for i, m in enumerate(max_new)]
+    for r, p in zip(reqs, priorities or []):
+        r.priority = p
+    return reqs
+
+
+def test_combined_starvation_poison_and_cancel(setup):
+    """The acceptance scenario: a pool sized for three of five requests,
+    preemption on, one NaN-poisoned request and one mid-serve
+    cancellation — in one serve.  Healthy requests bit-match the
+    fault-free serve, a preempted request resumes and finishes, exactly
+    the poisoned request FAILED and the cancelled one CANCELLED, and the
+    pool leaks nothing."""
+    get_engine = setup
+    base = dict(max_batch=3, seq_buckets=(S64,), paged=True,
+                decode_sparse=True, decode_extra=S64)
+    MAX_NEW = (20, 18, 12, 8, 10)
+    # uids 0/1 are high priority: whenever a normal-priority request is
+    # resident it is the preferred victim, so most churn lands on 2/3/4
+    # (replay-resume keeps every eviction bitwise-invisible regardless)
+    PRIOS = (1, 1, 0, 0, 0)
+
+    eng_a = get_engine(**base)
+    clean = _requests(MAX_NEW, priorities=PRIOS)
+    eng_a.serve(clean, seed=0)
+    assert all(r.finish_reason == "length" for r in clean)
+
+    # 5 allocatable pages, 2 per admission: two requests admit, leaving
+    # a FREE slot whose head request starves on pages (1 free < 2) until
+    # a victim is evicted — the regime where preemption must churn
+    eng_t = get_engine(**base, num_pages=6, preempt_after_steps=2)
+    reqs = _requests(MAX_NEW, priorities=PRIOS)
+    faults = FaultInjector(NaNLogits(uid=3, at_token=3),
+                           CancelAt(uid=4, step=10))
+    eng_t.serve(reqs, seed=0, faults=faults)
+
+    # exactly the poisoned request failed, exactly the cancelled one
+    # cancelled; everyone else finished
+    assert {r.uid for r in reqs if r.state == "failed"} == {3}
+    assert {r.uid for r in reqs if r.state == "cancelled"} == {4}
+    assert {r.uid for r in reqs if r.state == "done"} == {0, 1, 2}
+
+    # healthy requests: bitwise vs the fault-free serve
+    for i in (0, 1, 2):
+        assert reqs[i].finish_reason == "length"
+        np.testing.assert_array_equal(reqs[i].output_tokens,
+                                      clean[i].output_tokens)
+    # the poisoned and cancelled requests died cleanly mid-stream: their
+    # partial outputs are exact prefixes of the fault-free streams
+    assert isinstance(reqs[3].error, RequestError)
+    assert reqs[3].error.kind == "decode"
+    for i in (3, 4):
+        n = len(reqs[i].output_tokens)
+        assert n < len(clean[i].output_tokens)
+        np.testing.assert_array_equal(reqs[i].output_tokens,
+                                      clean[i].output_tokens[:n])
+
+    # starvation really happened, a preempted request really resumed and
+    # finished, and every terminal path returned its pages
+    assert eng_t.pages_exhausted_steps > 0
+    assert eng_t.preemptions > 0
+    assert any(r.preempted_count > 0 and r.state == "done" for r in reqs)
+    assert eng_t.page_pool_stats["pages_in_use_at_end"] == 0
+
+
+def test_held_pages_window_defers_then_recovers(setup):
+    """A transient allocator-exhaustion window (pages held by the
+    injector) defers admissions instead of crashing; once the window
+    closes the serve completes with bitwise-identical tokens and the
+    injector's hold is returned (no leak)."""
+    get_engine = setup
+    base = dict(max_batch=2, seq_buckets=(S64,), paged=True,
+                decode_extra=S64)
+    eng = get_engine(**base)
+    clean = _requests((6, 5, 4))
+    eng.serve(clean, seed=0)
+    assert eng.pages_exhausted_steps == 0
+
+    reqs = _requests((6, 5, 4))
+    eng.serve(reqs, seed=0,
+              faults=FaultInjector(HoldPages(pages=4, from_step=1,
+                                             until_step=6)))
+    assert eng.pages_exhausted_steps > 0
+    for a, b in zip(clean, reqs):
+        assert b.finish_reason == "length"
+        np.testing.assert_array_equal(a.output_tokens, b.output_tokens)
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
+
+
+def test_slow_quanta_race_deadline_aborts_between_quanta(setup):
+    """Injected slow prefill quanta push a chunk-admitted request past
+    its deadline: the run aborts cleanly between quanta (timeout, no
+    tokens) and the next request's serve is bitwise-unaffected."""
+    get_engine = setup
+    eng = get_engine(max_batch=2, seq_buckets=(S256,), scheduler=True,
+                     prefill_chunk=64)
+    clean = _requests((5, 6), seq=S256)
+    eng.serve(clean, seed=0)
+
+    reqs = _requests((5, 6), seq=S256)
+    reqs[0].deadline_s = 0.2
+    eng.serve(reqs, seed=0,
+              faults=FaultInjector(SlowQuantum(uid=0, delay_s=0.15)))
+    assert reqs[0].finish_reason == "timeout"
+    assert reqs[0].state == "cancelled"
+    assert reqs[0].output_tokens.size == 0
+    assert reqs[1].finish_reason == "length"
+    np.testing.assert_array_equal(reqs[1].output_tokens,
+                                  clean[1].output_tokens)

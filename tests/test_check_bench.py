@@ -56,6 +56,14 @@ SERVING = {
          "tokens_per_s_decode_mean": 70.0, "peak_pages": 9,
          "table_blocks": 6, "peak_utilization": 0.75,
          "pages_exhausted_steps": 0},
+        {"mode": "degraded-reference", "slot_occupancy": 0.8,
+         "tokens_per_s_decode_mean": 60.0, "peak_pages": 6,
+         "table_blocks": 2, "pages_in_use_at_end": 0,
+         "pages_exhausted_steps": 0, "preemptions": 0},
+        {"mode": "degraded-faults", "slot_occupancy": 0.7,
+         "tokens_per_s_decode_mean": 55.0, "peak_pages": 5,
+         "table_blocks": 2, "pages_in_use_at_end": 0,
+         "pages_exhausted_steps": 12, "preemptions": 4},
     ],
     "scheduler_vs_batch": {"ttft_mean_ratio": 0.6, "occupancy_gain": 0.4,
                            "greedy_tokens_match": True,
@@ -69,12 +77,19 @@ SERVING = {
                            "greedy_tokens_match_mixed": True,
                            "kv_bytes_ratio": 0.75,
                            "page_pool_utilization": 0.75,
-                           "pages_exhausted_steps": 0},
+                           "pages_exhausted_steps": 0,
+                           "healthy_tokens_match_degraded": True,
+                           "degraded_completed_tps_ratio": 0.8,
+                           "degraded_preemptions": 4,
+                           "degraded_pages_leaked": 0},
 }
 PAGED_KEYS = ("decode_tps_ratio_paged", "greedy_tokens_match_paged",
               "decode_tps_ratio_mixed", "greedy_tokens_match_mixed",
               "kv_bytes_ratio", "page_pool_utilization",
               "pages_exhausted_steps")
+DEGRADED_KEYS = ("healthy_tokens_match_degraded",
+                 "degraded_completed_tps_ratio",
+                 "degraded_preemptions", "degraded_pages_leaked")
 
 
 def test_identical_artifacts_pass():
@@ -264,7 +279,7 @@ def test_chunked_serving_gates():
     old["points"] = old["points"][:2]
     for k in ("ttft_mean_ratio_chunked", "decode_tps_ratio",
               "decode_tps_ratio_chunked",
-              "greedy_tokens_match_chunked") + PAGED_KEYS:
+              "greedy_tokens_match_chunked") + PAGED_KEYS + DEGRADED_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -311,7 +326,50 @@ def test_paged_serving_gates():
     # a pre-paged baseline gates nothing (transition path)
     old = copy.deepcopy(SERVING)
     old["points"] = old["points"][:3]
-    for k in PAGED_KEYS:
+    for k in PAGED_KEYS + DEGRADED_KEYS:
+        del old["scheduler_vs_batch"][k]
+    assert check_bench.compare_serving(old, SERVING) == []
+
+
+def test_degraded_serving_gates():
+    """Degradation gates: under a starved pool with injected faults the
+    healthy requests must stay bitwise, completed throughput must hold a
+    floor, preemption must actually fire, and the pool must drain."""
+    # healthy requests no longer bit-match the fault-free reference
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["healthy_tokens_match_degraded"] = False
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("healthy_tokens_match_degraded" in e for e in errs)
+
+    # completed-request throughput collapsed under starvation
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["degraded_completed_tps_ratio"] = 0.3
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("below the 0.50 floor" in e for e in errs)
+
+    # a terminal path stopped returning its pages
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["degraded_pages_leaked"] = 2
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("degraded_pages_leaked" in e for e in errs)
+
+    # the starved serve must actually preempt (else the gates are inert)
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["degraded_preemptions"] = 0
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("degraded_preemptions = 0" in e for e in errs)
+
+    # losing the column after the baseline records it is a regression
+    fresh = copy.deepcopy(SERVING)
+    del fresh["scheduler_vs_batch"]["degraded_completed_tps_ratio"]
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("degraded_completed_tps_ratio " in e and "disappeared" in e
+               for e in errs)
+
+    # a pre-hardening baseline gates nothing (transition path)
+    old = copy.deepcopy(SERVING)
+    old["points"] = old["points"][:6]
+    for k in DEGRADED_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -324,7 +382,8 @@ def test_committed_serving_baseline_shows_improvement():
     by_mode = {p["mode"]: p for p in base["points"]}
     assert set(by_mode) == {"batch", "scheduler", "scheduler-chunked",
                             "scheduler-paged", "scheduler-mixed",
-                            "paged-mixed"}
+                            "paged-mixed", "degraded-reference",
+                            "degraded-faults"}
     s = base["scheduler_vs_batch"]
     assert s["greedy_tokens_match"] is True
     assert s["ttft_mean_ratio"] < 1.0
@@ -356,6 +415,16 @@ def test_committed_serving_baseline_shows_improvement():
     assert 0 < pm["peak_pages"] < base["workload"]["max_batch"] \
         * pm["table_blocks"]
     assert len(set(base["workload"]["mixed_prompt_seqs"])) > 1
+    # degradation workload: healthy requests bitwise under starvation +
+    # faults, preemption actually fired, completed throughput held the
+    # floor, and both pools drained to zero
+    assert s["healthy_tokens_match_degraded"] is True
+    assert s["degraded_completed_tps_ratio"] >= 0.5
+    assert s["degraded_preemptions"] > 0
+    assert s["degraded_pages_leaked"] == 0
+    deg = by_mode["degraded-faults"]
+    assert deg["pages_exhausted_steps"] > 0
+    assert deg["pages_in_use_at_end"] == 0
 
 
 def test_committed_prefill_baseline_rows_record_width():
