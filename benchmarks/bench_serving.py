@@ -26,6 +26,13 @@ against the contiguous layout's fixed ``max_batch × cache_len`` carve-out
 (same per-token byte cost on both sides, so the page-count ratio IS the
 byte ratio).
 
+A **shared-prefix** workload (three duplicate prompts + one distinct)
+exercises prefix sharing on the paged scheduler: the unshared paged serve
+is the reference, and the shared serve must reproduce it bitwise while
+recording the hit rate, the KV pages a hit did not acquire, the COW
+copies at the decode boundary, and the TTFT ratio of the SAME requests
+served as hits vs. served cold.
+
 A third, **degradation** workload drives the hardened request lifecycle
 through a starved pool under injected faults (``repro.serving.faults``):
 five mixed-priority requests over a page pool sized for two residents
@@ -116,6 +123,13 @@ DEG_PREEMPT_AFTER = 4  # eviction cadence: every eviction re-prefills and
                        # (2) thrashes the completed-throughput ratio
                        # under the 0.5 gate floor; 4 still preempts every
                        # serve while letting residents make real progress
+# shared-prefix workload: three requests serve ONE prompt + one distinct
+# request — the traffic shape prefix sharing exists for (system prompts,
+# few-shot preambles).  The unshared paged serve is the reference; the
+# shared serve must produce the same tokens bitwise while skipping the
+# duplicate prefill launches (TTFT win) and mapping the donor's KV pages
+# instead of acquiring fresh ones (pages saved).
+PREFIX_MAX_NEW = (12, 10, 8, 6)
 REPEATS = 3   # serve each mode N times post-warmup, keep the fastest run:
               # wall-clock on a shared CPU container is contention-noisy,
               # and the min-wall run is the least-contended measurement
@@ -282,6 +296,67 @@ def _serve_degraded(model, params, sp):
     return [p_ref, p_deg], summary
 
 
+def _prefix_requests():
+    dcfg = data_config("retrieval", seq=SEQ)
+    shared = sample(dcfg, 60)["tokens"]
+    reqs = [Request(uid=i, prompt=shared.copy(), max_new_tokens=m)
+            for i, m in enumerate(PREFIX_MAX_NEW[:-1])]
+    reqs.append(Request(uid=len(reqs), prompt=sample(dcfg, 61)["tokens"],
+                        max_new_tokens=PREFIX_MAX_NEW[-1]))
+    return reqs
+
+
+def _serve_prefix(model, params, sp):
+    """Shared-prefix workload: paged serve with prefix sharing off
+    (reference) vs on.  Best-of-``REPEATS`` per side like
+    :func:`_serve_degraded`; returns (points, summary entries)."""
+    def mk(**kw):
+        return ServingEngine(model, params, sp, EngineConfig(
+            method="share", seq_buckets=(SEQ,), decode_sparse=True,
+            max_batch=MAX_BATCH, paged=True, **kw))
+    eng_un, eng_sh = mk(), mk(prefix_sharing=True)
+    eng_un.serve(_prefix_requests())          # warmup: compile programs
+    eng_sh.serve(_prefix_requests())
+    p_un = p_sh = un = sh = None
+    for _ in range(REPEATS):
+        rr = _prefix_requests()
+        t0 = time.time()
+        eng_un.serve(rr)
+        wall = time.time() - t0
+        if p_un is None or wall < p_un["wall_s"]:
+            p_un = _point("prefix-unshared", eng_un, rr, wall)
+            un = rr
+        rr = _prefix_requests()
+        t0 = time.time()
+        eng_sh.serve(rr)
+        wall = time.time() - t0
+        if p_sh is None or wall < p_sh["wall_s"]:
+            p_sh = _point("prefix-shared", eng_sh, rr, wall)
+            sh = rr
+
+    # sharing must be bitwise-invisible: every request's tokens equal the
+    # unshared paged serve's
+    match = all(np.array_equal(a.output_tokens, b.output_tokens)
+                for a, b in zip(un, sh))
+    stats = eng_sh.prefix_stats
+    hits = [i for i, r in enumerate(sh) if r.prefix_hit]
+    hit_ttft = float(np.mean([sh[i].ttft_s for i in hits])) if hits else 0.0
+    # the SAME requests served cold are the "miss" baseline for the ratio
+    miss_ttft = float(np.mean([un[i].ttft_s for i in hits])) if hits else 0.0
+    summary = {
+        "prefix_hit_rate": float(stats.get("prefix_hit_rate", 0.0)),
+        "prefix_pages_saved": int(stats.get("prefix_pages_saved", 0)),
+        "prefix_tokens_match": bool(match),
+        # < 1.0 = a hit beats its own cold serve to first token (it skips
+        # the prefill launch entirely)
+        "prefix_ttft_hit_vs_miss": hit_ttft / max(miss_ttft, 1e-9),
+        "prefix_cow_copies": int(stats.get("prefix_cow_copies", 0)),
+        "prefix_pages_leaked": int(p_un["pages_in_use_at_end"]
+                                   + p_sh["pages_in_use_at_end"]),
+    }
+    return [p_un, p_sh], summary
+
+
 def run() -> dict:
     cfg, model, params = get_bench_model()
     sp = get_clustering()
@@ -354,6 +429,10 @@ def run() -> dict:
     deg_points, deg_summary = _serve_degraded(model, params, sp)
     points.extend(deg_points)
     summary.update(deg_summary)
+    # shared-prefix workload: duplicate prompts served from one prefill
+    pfx_points, pfx_summary = _serve_prefix(model, params, sp)
+    points.extend(pfx_points)
+    summary.update(pfx_summary)
 
     import jax
     artifact = {
@@ -370,7 +449,8 @@ def run() -> dict:
                      "degraded_max_new_tokens": list(DEG_MAX_NEW),
                      "degraded_priorities": list(DEG_PRIOS),
                      "degraded_num_pages": DEG_POOL,
-                     "degraded_preempt_after_steps": DEG_PREEMPT_AFTER},
+                     "degraded_preempt_after_steps": DEG_PREEMPT_AFTER,
+                     "prefix_max_new_tokens": list(PREFIX_MAX_NEW)},
         "points": points,
         "scheduler_vs_batch": summary,
     }

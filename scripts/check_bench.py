@@ -50,7 +50,14 @@ point regresses:
     contiguous ``max_batch × cache_len`` carve-out (a deterministic page
     counter), and paged decode tokens/s must retain at least
     ``--min-paged-decode-tps-ratio`` of the contiguous scheduler's (the
-    page-table gather indirection must stay near-free).
+    page-table gather indirection must stay near-free);
+  * **prefix sharing** (when the baseline records ``prefix_hit_rate``):
+    the shared-prefix serve's tokens must bitwise-match the unshared
+    paged serve, duplicate prompts must keep hitting the index (the hit
+    rate is a deterministic counter on the bench workload), hits must
+    save KV pages, a hit's TTFT must beat the same request's cold serve,
+    and both serves must drain their pools (refcounted release paths
+    leak nothing).
 
 Points are matched by ``seq`` (and ``cache_len`` for decode, ``mode`` for
 serving); a fresh artifact missing a baseline point is a regression
@@ -135,6 +142,17 @@ MIN_MIXED_DECODE_TPS_RATIO = 0.5  # paged-mixed/contiguous-mixed floor
 # real cost is expected, but the serve must not collapse.  Leaked pages
 # is a deterministic allocator counter with zero tolerance.
 MIN_DEGRADED_TPS_RATIO = 0.5  # degraded/reference completed tokens/s floor
+# prefix-sharing gates: the shared-prefix workload serves 3 duplicate
+# prompts + 1 distinct over the paged scheduler with sharing on.  The
+# token match is absolute — sharing must be bitwise-invisible.  The hit
+# rate and pages-saved are deterministic counters (on the bench workload
+# the donor and the distinct request miss, the two other duplicates hit:
+# rate 0.5), so their floors are tight; the hit-vs-cold TTFT ratio is
+# wall-clock and forgiving, but a hit that skips its prefill launch
+# should land far below it.  Leaked pages has zero tolerance (refcounted
+# release paths are the PR's correctness sweep).
+MIN_PREFIX_HIT_RATE = 0.5     # hits / (hits + misses) floor (deterministic)
+MAX_PREFIX_TTFT_RATIO = 0.9   # hit TTFT / same-request cold TTFT ceiling
 
 
 def _load(path: str) -> dict:
@@ -290,6 +308,8 @@ def compare_serving(base: dict, fresh: dict, *,
                     MIN_PAGED_DECODE_TPS_RATIO,
                     min_degraded_tps_ratio: float =
                     MIN_DEGRADED_TPS_RATIO,
+                    min_prefix_hit_rate: float = MIN_PREFIX_HIT_RATE,
+                    max_prefix_ttft_ratio: float = MAX_PREFIX_TTFT_RATIO,
                     ) -> List[str]:
     """Continuous-batching serving gates (``BENCH_serving.json``).
 
@@ -333,6 +353,16 @@ def compare_serving(base: dict, fresh: dict, *,
     must retain ``min_degraded_tps_ratio`` of the fault-free reference's,
     the starved serve must actually preempt, and the pool must drain to
     zero (no leaked pages).
+
+    Prefix-sharing gates (active once the baseline records
+    ``prefix_hit_rate`` — dropping the column afterwards is itself a
+    regression): the shared serve's tokens must bitwise-match the
+    unshared paged serve (``prefix_tokens_match``), the hit rate must
+    hold the workload's deterministic ``min_prefix_hit_rate`` floor,
+    hits must actually save pages (``prefix_pages_saved > 0``), a hit
+    must beat its own cold serve to first token
+    (``prefix_ttft_hit_vs_miss`` under ``max_prefix_ttft_ratio``), and
+    both serves must drain their pools (``prefix_pages_leaked == 0``).
     """
     errors: List[str] = []
     base_pts = _by_key(base.get("points", []), ("mode",))
@@ -471,6 +501,44 @@ def compare_serving(base: dict, fresh: dict, *,
                 "serving: degraded_preemptions = 0 — the starved pool no "
                 "longer exercises preemption (the degradation gates lost "
                 "their subject)")
+
+    # prefix-sharing gates: engage once the baseline records the hit rate
+    # (older baselines predate prefix sharing and are exempt; once
+    # present, losing the column is a regression)
+    bpr = float(bs.get("prefix_hit_rate", 0.0))
+    if bpr > 0:
+        if "prefix_hit_rate" not in fs:
+            errors.append(f"serving: prefix_hit_rate disappeared "
+                          f"(baseline {bpr:.2f})")
+            return errors
+        if not fs.get("prefix_tokens_match", False):
+            errors.append(
+                "serving: prefix_tokens_match is false — prefix-hit "
+                "serving no longer bitwise-matches the unshared paged "
+                "serve (sharing must be bitwise-invisible)")
+        fpr = float(fs.get("prefix_hit_rate", 0.0))
+        if fpr < min_prefix_hit_rate:
+            errors.append(
+                f"serving: prefix_hit_rate {fpr:.2f} below the "
+                f"{min_prefix_hit_rate:.2f} floor (duplicate prompts no "
+                f"longer hit the prefix index — a deterministic counter "
+                f"on this workload)")
+        if int(fs.get("prefix_pages_saved", 0)) <= 0:
+            errors.append(
+                "serving: prefix_pages_saved = 0 — hits no longer map "
+                "the donor's KV pages (the memory win sharing exists for)")
+        fpt = float(fs.get("prefix_ttft_hit_vs_miss", 1.0))
+        if fpt > max_prefix_ttft_ratio:
+            errors.append(
+                f"serving: prefix_ttft_hit_vs_miss {fpt:.2f} above the "
+                f"{max_prefix_ttft_ratio:.2f} ceiling (a hit no longer "
+                f"beats its own cold serve to first token)")
+        leaked = int(fs.get("prefix_pages_leaked", 0))
+        if leaked != 0:
+            errors.append(
+                f"serving: prefix_pages_leaked = {leaked} — a shared-"
+                f"reference release path (COW, index eviction, end-of-"
+                f"serve clear) stopped draining the pool")
     return errors
 
 

@@ -1,0 +1,33 @@
+"""Pytest plugin: pin ``PYTHONHASHSEED`` by re-exec'ing the interpreter.
+
+Loaded via ``addopts = "-p repro.hashseed_pin"`` (pyproject.toml), so the
+import-time side effect below runs during pytest's *preparse* — before the
+capture plugin swaps the process's stdout/stderr fds (re-exec'ing any later,
+e.g. from ``conftest.py``, would strand all test output in the dead
+process's capture tempfile).
+
+Why pin at all: the tiny smoke models the suite serves sit on argmax knife
+edges — several vocabulary entries land within float ulps of each other —
+and jax/XLA trace construction is sensitive to Python's randomized string
+hashing (set/dict ordering inside the tracer perturbs HLO instruction
+order, which perturbs CPU reduction order by last-ulp amounts).  Under a
+random hash seed the greedy token streams, and with them every
+cross-engine bitwise-equivalence test, differ from one ``pytest``
+invocation to the next: a handful of tests become coin flips.  Pinning the
+seed makes the tier-1 suite a pure function of the tree.
+
+An externally-set ``PYTHONHASHSEED`` is respected (no re-exec), so a
+deliberate seed sweep is still one env var away.
+"""
+import os
+import sys
+
+if os.environ.get("PYTHONHASHSEED") is None:
+    os.environ["PYTHONHASHSEED"] = "1"
+    if os.path.basename(sys.argv[0]) == "__main__.py":
+        # ``python -m pytest``: relaunch through -m so sys.path keeps cwd
+        argv = [sys.executable, "-m", "pytest"] + sys.argv[1:]
+    else:
+        # console-script entry point (argv[0] is the pytest shim script)
+        argv = [sys.executable] + sys.argv
+    os.execv(sys.executable, argv)

@@ -16,7 +16,13 @@ batch's longest member).  ``--paged`` serves from the block-paged KV
 cache (``repro.serving.paged_cache``): decode state in a shared page pool
 addressed through per-slot page tables, one cross-bucket scheduler, and
 admission gated on pool headroom (``--num-pages`` caps the pool; 0
-auto-sizes it).
+auto-sizes it).  ``--prefix-sharing`` (paged only) serves duplicate
+prompts from one prefill: a completed prefill publishes its page run to
+the prefix index, matching requests map the pages read-only (refcount++)
+and skip the launch, and copy-on-write moves writers onto private pages
+at the decode boundary — bitwise-invisible, so outputs equal the
+unshared serve.  ``--repeat-prompt N`` makes the first N requests share
+request 0's prompt so the sharing path is observable from the CLI.
 
 ``--model-parallel N`` (N > 1) serves under a heads-sharded (data, model)
 mesh: the engine's sparse prefill AND sparse decode hot paths run under
@@ -74,6 +80,14 @@ def main():
                     help="page-pool capacity incl. the reserved null page "
                     "(0 = auto-size so max-batch slots can never starve); "
                     "undersized pools keep requests WAITING, never crash")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="prefill-once prompt sharing over the paged pool: "
+                    "duplicate (clipped) prompts map the donor's KV pages "
+                    "read-only and skip their prefill launch; bitwise-"
+                    "invisible (COW at the decode boundary); needs --paged")
+    ap.add_argument("--repeat-prompt", type=int, default=0,
+                    help="first N requests reuse request 0's prompt (a "
+                    "shared-prefix workload for --prefix-sharing)")
     ap.add_argument("--preempt-after", type=int, default=0,
                     help="preempt the lowest-priority decoding victim once "
                     "admission has been pool-starved for this many "
@@ -114,7 +128,9 @@ def main():
     max_new = [int(m) for m in str(args.max_new).split(",")]
     gap = 1.0 / args.arrival_rate if args.arrival_rate > 0 else 0.0
     requests = [
-        Request(uid=i, prompt=sample(dcfg, i)["tokens"],
+        Request(uid=i,
+                prompt=sample(dcfg, 0 if i < args.repeat_prompt
+                              else i)["tokens"],
                 max_new_tokens=max_new[i % len(max_new)],
                 arrival_s=i * gap, deadline_s=args.deadline_s)
         for i in range(args.num_requests)
@@ -132,6 +148,7 @@ def main():
                      paged=args.paged,
                      num_pages=args.num_pages,
                      preempt_after_steps=args.preempt_after,
+                     prefix_sharing=args.prefix_sharing,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -154,6 +171,8 @@ def main():
                      f" preempts={m['preempted_count']}"
                      if (m["waiting_deferred_steps"]
                          or m["preempted_count"]) else "")
+        if r.prefix_hit:
+            lifecycle += " prefix-hit"
         err = f" error={r.error}" if r.error is not None else ""
         print(f"req {r.uid}: queue={r.queue_s:.3f}s ttft={r.ttft_s:.3f}s "
               f"prefill={r.prefill_s:.3f}s decode={r.decode_s:.3f}s "
@@ -179,6 +198,9 @@ def main():
         print(f"page pool: {pool} admissions deferred on headroom: "
               f"{engine.pages_exhausted_steps}, preemptions: "
               f"{engine.preemptions}")
+        if args.prefix_sharing and engine.prefix_stats:
+            pfx = {k: round(v, 3) for k, v in engine.prefix_stats.items()}
+            print(f"prefix sharing: {pfx}")
     elif args.prefill_chunk > 0 and args.scheduler:
         print("note: --prefill-chunk requested but this config cannot be "
               "chunk-admitted (see ServingEngine._chunk_tokens); served "

@@ -35,9 +35,26 @@ carries a typed :class:`~repro.serving.errors.RequestError`:
   exhaustion, slow prefill quanta, and mid-decode cancellations — the
   chaos harness behind the degradation bench and the chaos test tier.
 
+* **Allocator misuse** (:class:`~repro.serving.paged_cache.
+  PageAllocatorError`): the page allocator refcounts every grant and
+  validates each release list *atomically before mutating* — a
+  double-free, an unallocated-page free, or the null page anywhere in a
+  release list raises the typed error and leaves the pool untouched, so
+  a buggy release path can never alias one KV page into two slots.
+* **Prefix sharing** (``EngineConfig.prefix_sharing``): published page
+  runs are pinned by one index-held reference each and are read-only —
+  a copy-on-write fence before every decode step moves writers onto
+  private pages — so a prefix-hit request's tokens are bitwise the cold
+  serve and a donor finishing cannot recycle pages out from under its
+  hits.  COW under pool exhaustion sheds LRU index entries, then falls
+  back to preempting the writer (bitwise resume).
+
 Pool-leak invariant: every terminal transition returns its pages to the
 allocator free list; ``engine.page_pool_stats["pages_in_use_at_end"]``
-must be 0 after a drained serve.
+must be 0 after a drained serve — with prefix sharing, index references
+are dropped (``PrefixIndex.clear``) before that summary, so the
+invariant extends to refcounts: every page in the free list has
+refcount 0 and no live references remain.
 """
 from repro.serving.decode_plan import (
     build_decode_plan,
@@ -59,18 +76,21 @@ from repro.serving.faults import (
 from repro.serving.paged_cache import (
     NULL_PAGE,
     PageAllocator,
+    PageAllocatorError,
     gather_pages,
     init_paged_pool,
 )
+from repro.serving.prefix_cache import PrefixEntry, PrefixIndex, prefix_digest
 from repro.serving.sampling import SamplingConfig, sample_token
 from repro.serving.scheduler import SchedulerHandle, SlotScheduler
 from repro.serving.width_policy import auto_width_cap, population_width_cap
 
 __all__ = ["CancelAt", "EngineConfig", "FaultInjector", "HoldPages",
-           "NULL_PAGE", "NaNLogits", "PageAllocator", "PrefillError",
+           "NULL_PAGE", "NaNLogits", "PageAllocator", "PageAllocatorError",
+           "PrefillError", "PrefixEntry", "PrefixIndex",
            "Request", "RequestError", "SamplingConfig", "SchedulerHandle",
            "ServingEngine", "SlotScheduler", "SlowQuantum",
            "auto_width_cap", "build_decode_plan", "empty_decode_plan",
            "gather_pages", "init_paged_pool", "plan_block_counts",
-           "plan_traffic_fraction", "population_width_cap", "sample_token",
-           "update_plan_slot"]
+           "plan_traffic_fraction", "population_width_cap", "prefix_digest",
+           "sample_token", "update_plan_slot"]

@@ -42,6 +42,15 @@ the same per-shard layout the PR-4 mesh path consumes).
 all-False keep bits and zero counts make an unoccupied slot inert (the
 kernel's empty-table contract emits exact zeros; the einsum fallback
 masks everything).
+
+Paged mode: plan rows are COW-invisible
+---------------------------------------
+Under the paged scheduler a plan row's ``indices`` are *logical* block
+indices into the slot's page-table row — the kernel translates them to
+physical pages at DMA time.  Prefix sharing exploits this: a prefix-hit
+slot reuses the donor's plan row verbatim (same logical blocks), and a
+copy-on-write that swaps a physical page behind a logical block needs no
+plan rebuild — only the page-table entry changes.
 """
 from __future__ import annotations
 

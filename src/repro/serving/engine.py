@@ -209,6 +209,11 @@ class Request:
                                         # not just the engine-wide counter
     preempted_count: int = 0            # times evicted mid-decode (pages
                                         # reclaimed) and re-queued WAITING
+    prefix_hit: bool = False            # admission hit the prompt-prefix
+                                        # index: pages mapped read-only from
+                                        # a donor's published run, prefill
+                                        # launch skipped (bitwise the cold
+                                        # serve; COW at the decode boundary)
     # preemption carry (scheduler-internal): tokens generated before the
     # eviction, replayed through decode as forced tokens after the resume
     # re-prefills the original prompt
@@ -228,6 +233,7 @@ class Request:
             "prefill_stall_s": self.prefill_stall_s,
             "waiting_deferred_steps": self.waiting_deferred_steps,
             "preempted_count": self.preempted_count,
+            "prefix_hit": float(self.prefix_hit),
         }
 
 
@@ -301,6 +307,25 @@ class EngineConfig:
     # 0 disables preemption: undersized pools then defer admission
     # indefinitely (the pre-hardening behavior some tests pin).
     preempt_after_steps: int = 0
+    # prompt-prefix sharing (paged scheduler only): a completed prefill
+    # publishes its page run into an in-serve LRU index keyed on
+    # (model, bucket, digest of the block-aligned CLIPPED prompt); a later
+    # identical prompt maps the pages read-only (refcount++ per page —
+    # acquiring ZERO fresh pool pages), skips its prefill launch entirely,
+    # and replays the donor's cached first-token logits + DecodePlan row.
+    # Bitwise-invisible: the donor's launch and the hit's hypothetical
+    # cold launch are the same deterministic program on identical inputs,
+    # and the sampling key chain derives from the hit's own uid — greedy
+    # or sampled.  Published runs are read-only; the scheduler's COW guard
+    # moves any writer (donor included) onto a fresh page at the decode
+    # boundary.  (Caveat: with prefill_pack > 1 and temperature > 0,
+    # sharing can re-compose packed runs, shifting OTHER requests' logits
+    # by the pack-fusion delta — greedy streams are unaffected, the same
+    # guarantee packing itself ships with.)
+    prefix_sharing: bool = False
+    # LRU capacity of the prefix index (entries; each pins its page run
+    # until evicted — under pool pressure the index sheds entries first)
+    prefix_max_entries: int = 32
 
 
 class ServingEngine:
@@ -332,6 +357,9 @@ class ServingEngine:
         # (filled by the paged scheduler)
         self.pages_exhausted_steps = 0
         self.page_pool_stats: Dict[str, float] = {}
+        # prefix-sharing accounting, reset per serve(): hit/miss/pages-
+        # saved counters the paged scheduler publishes at end of serve
+        self.prefix_stats: Dict[str, float] = {}
         # lifecycle hardening, set per serve(): the caller's cancellation
         # handle, the fault injector (chaos harness), and the number of
         # pool-starvation preemptions the scheduler performed
@@ -674,6 +702,7 @@ class ServingEngine:
         self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0}
         self.pages_exhausted_steps = 0
         self.page_pool_stats = {}
+        self.prefix_stats = {}
         self.preemptions = 0
         self.handle = handle
         self.faults = faults
@@ -832,6 +861,23 @@ class ServingEngine:
             "max_row_pop": float(result.stats.max_row_pop),
             "prefill_width_cap": 0 if width is None else int(width),
         }
+        if self.ecfg.width_policy == "auto":
+            self._density_obs.setdefault(seq, []).append(
+                stats["block_density"])
+        elif self.ecfg.width_policy == "count":
+            self._pop_obs.setdefault(seq, []).append(
+                stats["max_row_pop"])
+        return stats
+
+    def _replay_prefill_stats(self, stats: Dict[str, float],
+                              seq: int) -> Dict[str, float]:
+        """Width-policy observation replay for a prefix-cache hit: the
+        hit's hypothetical cold prefill would have produced exactly the
+        donor's stats (identical clipped prompt, bucket, and width cap),
+        so re-feeding the cached observation keeps the cap evolution —
+        and with it every later admission's masks — bitwise-identical to
+        the sharing-disabled serve."""
+        stats = dict(stats)
         if self.ecfg.width_policy == "auto":
             self._density_obs.setdefault(seq, []).append(
                 stats["block_density"])

@@ -26,12 +26,33 @@ Conventions:
   for chunked prefill); the decode append writes a single
   ``(Hkv, head_dim)`` sliver in place via the page table, retiring the
   ``grow_cache`` reallocation and whole-row ``cache_insert`` copies.
+* **Pages are refcounted.**  :meth:`PageAllocator.acquire` grants fresh
+  pages at refcount 1; :meth:`PageAllocator.share` takes an extra
+  reference on already-allocated pages (the prefix-sharing path: a
+  prompt-cache hit maps a donor's pages read-only, and the prefix index
+  itself pins published runs); :meth:`PageAllocator.release` drops one
+  reference and recycles the page onto the free list only at refcount 0.
+  A page with refcount > 1 is *shared* and must never be written —
+  writers copy-on-write first (:func:`copy_page`; the scheduler's
+  ``_cow_append_page`` rewrites the table entry at the decode boundary).
+  ``alloc``/``free`` remain as aliases of acquire/release for the
+  single-owner call sites.
+* **Release is atomic and guarded.**  The whole id list is validated
+  *before* any mutation — out-of-range ids and over-releases (a double
+  free, or more releases than references in one call) raise the typed
+  :class:`PageAllocatorError` and leave the allocator untouched, so a
+  bad id mid-list can never strand earlier ids half-freed, and a page
+  can never be pushed onto the free list twice (the silent KV-aliasing
+  bug where one page is later granted to two slots).
+  :meth:`PageAllocator.check_consistency` audits the free-list/refcount
+  partition; the test suite runs it after every scheduler-path test.
 * The pool covers the scanned transformer stack only (the families the
   slot scheduler admits: dense/vlm/moe with GQA caches).  MLA latent
   layouts keep the contiguous path.
 """
 from __future__ import annotations
 
+from collections import Counter
 from typing import Optional
 
 import jax.numpy as jnp
@@ -43,8 +64,17 @@ from repro.serving.cache_ops import slice_segment
 NULL_PAGE = 0
 
 
+class PageAllocatorError(ValueError):
+    """Typed allocator-misuse error: releasing or sharing a page the
+    allocator does not consider allocated (double free / free-list
+    corruption) or an out-of-range id.  Raised *before* any mutation —
+    the allocator state is unchanged when this propagates."""
+
+
 class PageAllocator:
-    """Host-side free-list over a shared page pool (page 0 reserved)."""
+    """Refcounted host-side free-list over a shared page pool (page 0
+    reserved).  ``acquire`` grants fresh pages at refcount 1, ``share``
+    adds references, ``release`` drops them and recycles at zero."""
 
     def __init__(self, num_pages: int):
         if num_pages < 2:
@@ -54,6 +84,10 @@ class PageAllocator:
         # pop() hands out ascending ids — deterministic and easy to read
         # in page-table dumps.
         self._free = list(range(num_pages - 1, 0, -1))
+        # per-page reference count; 0 = free (or the null page).  The
+        # refcount column doubles as the allocated-set: releasing a page
+        # whose count is 0 is a double free, not a state change.
+        self._refs = np.zeros((num_pages,), np.int32)
         self.peak_in_use = 0
 
     @property
@@ -64,35 +98,108 @@ class PageAllocator:
     def used_pages(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
-    def alloc(self, n: int) -> Optional[np.ndarray]:
-        """n page ids, or None if the pool lacks headroom (caller keeps
-        the request WAITING — never a partial grant)."""
+    def refcount(self, page) -> int:
+        """References held on ``page`` (0 = free).  Refcount > 1 means
+        shared: the page is read-only and writers must COW first."""
+        return int(self._refs[int(page)])
+
+    def acquire(self, n: int) -> Optional[np.ndarray]:
+        """n fresh page ids at refcount 1, or None if the pool lacks
+        headroom (caller keeps the request WAITING — never a partial
+        grant)."""
         if n > len(self._free):
             return None
         ids = np.asarray([self._free.pop() for _ in range(n)], np.int32)
+        self._refs[ids] = 1
         self.peak_in_use = max(self.peak_in_use, self.used_pages)
         return ids
 
-    def free(self, ids) -> None:
-        for i in ids:
-            i = int(i)
+    def share(self, ids) -> None:
+        """Take one extra reference on each already-allocated page —
+        the prefix-sharing path (a hit maps a donor's run; the prefix
+        index pins published runs).  Validates the whole list before
+        mutating: sharing a free or out-of-range page raises
+        :class:`PageAllocatorError` with the allocator untouched."""
+        arr = [int(i) for i in ids]
+        for i in arr:
             if not 0 < i < self.num_pages:
-                raise ValueError(f"freeing invalid page id {i}")
-            self._free.append(i)
+                raise PageAllocatorError(f"sharing invalid page id {i}")
+            if self._refs[i] <= 0:
+                raise PageAllocatorError(
+                    f"sharing unallocated page {i} (refcount 0)")
+        for i in arr:
+            self._refs[i] += 1
+
+    def release(self, ids) -> None:
+        """Drop one reference per listed page; a page returns to the free
+        list only when its refcount reaches 0.  The WHOLE list is
+        validated before any mutation: an out-of-range id or an
+        over-release (double free, or a page listed more often than it
+        has references) raises :class:`PageAllocatorError` and leaves
+        every refcount and the free list exactly as they were."""
+        counts = Counter(int(i) for i in ids)
+        for i, c in counts.items():
+            if not 0 < i < self.num_pages:
+                raise PageAllocatorError(f"releasing invalid page id {i}")
+            if self._refs[i] < c:
+                raise PageAllocatorError(
+                    f"over-release of page {i}: {c} release(s) against "
+                    f"refcount {int(self._refs[i])} — double free")
+        for i, c in counts.items():
+            self._refs[i] -= c
+            if self._refs[i] == 0:
+                self._free.append(i)
+
+    # single-owner aliases (pre-refcount API; scheduler internals, fault
+    # injection, and older tests call these)
+    def alloc(self, n: int) -> Optional[np.ndarray]:
+        return self.acquire(n)
+
+    def free(self, ids) -> None:
+        self.release(ids)
 
     def hold(self, n: int) -> np.ndarray:
         """Take up to ``n`` pages out of circulation — injected allocator
         exhaustion (``serving.faults.HoldPages``) or reserved headroom.
         Grants whatever headroom exists (possibly zero ids) instead of
-        refusing like :meth:`alloc`; return the ids with :meth:`free`."""
+        refusing like :meth:`acquire`; return the ids with
+        :meth:`release`."""
         n = min(n, len(self._free))
         if n <= 0:
             return np.zeros((0,), np.int32)
-        ids = self.alloc(n)
+        ids = self.acquire(n)
         return ids if ids is not None else np.zeros((0,), np.int32)
 
     def utilization(self) -> float:
         return self.used_pages / max(1, self.num_pages - 1)
+
+    def check_consistency(self) -> None:
+        """Audit the free-list/refcount partition; raises
+        :class:`PageAllocatorError` on the first violated invariant.
+        The invariants: the null page is never referenced, refcounts are
+        never negative, the free list holds no duplicates, free pages
+        have refcount 0, and every non-null page is either free or
+        referenced (no page is ever lost or granted twice)."""
+        if self._refs[NULL_PAGE] != 0:
+            raise PageAllocatorError("null page has a nonzero refcount")
+        if (self._refs < 0).any():
+            bad = int(np.argmin(self._refs))
+            raise PageAllocatorError(
+                f"negative refcount on page {bad}: {int(self._refs[bad])}")
+        if len(set(self._free)) != len(self._free):
+            raise PageAllocatorError("duplicate ids on the free list")
+        for i in self._free:
+            if not 0 < i < self.num_pages:
+                raise PageAllocatorError(f"invalid id {i} on the free list")
+            if self._refs[i] != 0:
+                raise PageAllocatorError(
+                    f"page {i} is on the free list with refcount "
+                    f"{int(self._refs[i])}")
+        allocated = int((self._refs[1:] > 0).sum())
+        if len(self._free) + allocated != self.num_pages - 1:
+            raise PageAllocatorError(
+                f"page accounting broken: {len(self._free)} free + "
+                f"{allocated} allocated != {self.num_pages - 1} pages")
 
 
 def init_paged_pool(cfg, *, num_pages: int, page_size: int,
@@ -158,6 +265,23 @@ def insert_prefill_layer(cache, layer: int, k, v, pages, *, offset: int = 0,
         return pool.at[layer, pages].set(vv.astype(pool.dtype))
 
     return {"prefix": [], "stack": (ins(ck, k), ins(cv, v))}
+
+
+def copy_page(cache, src: int, dst: int):
+    """Copy one page's K/V (every layer) from page ``src`` to ``dst`` —
+    the copy half of copy-on-write at the decode boundary.
+
+    A slot about to append into a *shared* page (refcount > 1: a prefix
+    cache hit mapped it, or the prefix index pinned it) acquires a fresh
+    page, copies the shared page's partial block here, and rewrites its
+    table entry; the original stays read-only for the other holders.
+    The ``.at[].set`` runs outside jit and copies the pool once per COW —
+    bounded by the decode-tail page count per request, and the pool is
+    small on the CPU smoke configs this repo serves (donated-buffer jit
+    would avoid the copy on accelerators if it ever matters)."""
+    ck, cv = cache["stack"]
+    return {"prefix": [], "stack": (ck.at[:, dst].set(ck[:, src]),
+                                    cv.at[:, dst].set(cv[:, src]))}
 
 
 def page_bytes(cfg, page_size: int, itemsize: int = 4) -> int:

@@ -1,0 +1,168 @@
+"""Prompt-prefix index for the paged scheduler: prefill once, share many.
+
+The paper's core observation — sparse attention patterns are similar
+across heads and remarkably consistent across inputs — has a serving
+corollary: requests that share a prompt also share their prefill work,
+their KV pages, *and* their decode-phase pattern-dictionary plan.  This
+module is the index that realizes it: when a cold prefill completes, the
+scheduler publishes the request's page run here under a digest of its
+**block-aligned clipped prompt**; when a later request with the same
+digest reaches admission, the scheduler maps the published pages into
+the new slot's page table read-only (``PageAllocator.share`` — one extra
+refcount per page), skips the prefill launch entirely, and replays the
+donor's cached first-token logits and DecodePlan row.
+
+**Why full-prompt hits (and not partial-prefix tail prefill).**  Under
+``method="share"`` the per-head sparse pattern is estimated from the
+*last query block's* strip over the whole padded sequence (Algorithm 3)
+and the pivotal-pattern dictionary is updated across layers from
+dense-construction heads over all rows — so the masks applied at prefix
+rows, and therefore the prefix KV itself, depend on the tail tokens.  A
+tail-only prefill over a donor's partial-prefix KV measurably diverges
+from the cold serve (the same class of divergence PR 8 found for
+prompt-extension resume).  A *full* clipped-prompt hit has no such term:
+the donor's launch and the hit's hypothetical cold launch are the same
+deterministic compiled program on identical inputs, so replaying the
+donor's pages/logits/plan IS the cold result, bitwise — greedy or
+sampled (the sampling key chain derives from the hit's own ``uid``).
+
+**Clipped, not raw** (the stale-hash bug this guards): ``_pad_prompt``
+serves ``r.prompt[-bucket:]`` when a prompt overflows the largest bucket
+(``Request.truncated``), so two prompts differing only in the clipped-
+away head are the *same* effective prompt — and a preempted + resumed
+truncated request must re-enter the index under the digest of what was
+actually prefilled.  :func:`prefix_digest` therefore hashes the clipped
+tokens (plus the bucket, the effective length, and a model salt — the
+``(model, bucket, prefix-hash)`` key of the index).
+
+**Liveness contract.**  The index holds ONE reference on every page of a
+published run (``share`` at publish), so a donor finishing — or being
+preempted — does not recycle the pages out from under the index or its
+hits.  Published runs are read-only: the scheduler's COW guard at the
+decode boundary moves any writer (the donor appending into its own
+now-published tail included) onto a fresh page first.  Entries are LRU:
+the capacity bound and the allocator-pressure path
+(:meth:`PrefixIndex.evict_one`, called when a COW or admission needs
+pages) both release the cold end.  :meth:`PrefixIndex.clear` drops every
+reference at end of serve, restoring the pool to fully-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def prefix_digest(prompt, bucket: int, salt: str = "") -> str:
+    """Digest of the block-aligned *clipped* prompt: what ``_pad_prompt``
+    actually serves at this bucket (``prompt[-bucket:]``), never the raw
+    prompt — a truncated request hashes identically before and after a
+    preempt/resume cycle, and two prompts differing only in the clipped
+    head share an entry.  ``salt`` carries the model identity so one
+    process serving several engines cannot alias entries."""
+    p = np.asarray(prompt, np.int32)[-int(bucket):]
+    h = hashlib.blake2b(digest_size=16)
+    h.update(salt.encode())
+    h.update(np.int64(bucket).tobytes())
+    h.update(np.int64(len(p)).tobytes())
+    h.update(np.ascontiguousarray(p).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One published prefill: the donor's page run plus everything a hit
+    needs to skip the launch and still be bitwise the cold serve."""
+    digest: str
+    bucket: int                 # the donor's seq bucket (also in digest)
+    plen: int                   # effective (clipped) prompt length
+    pages: np.ndarray           # full run: prompt pages + decode tail
+    prompt_pages: int           # how many of ``pages`` hold prefill KV
+    logits: Any                 # (1, V) last-prompt-token logits (device)
+    plan_row: Any               # padded batch-1 DecodePlan row, or None
+    stats: Dict[str, float]     # pattern stats incl. the width-policy
+                                # observation a hit must replay
+    width: Optional[int]        # prefill width cap the donor ran under —
+                                # a hit is only valid while the current
+                                # cap matches (else the cold launch would
+                                # have produced different masks/KV)
+    hits: int = 0
+
+
+class PrefixIndex:
+    """LRU map ``digest → PrefixEntry`` holding one page reference per
+    published page.  All methods take the allocator explicitly — the
+    index never outlives the serve's :class:`PageAllocator`."""
+
+    def __init__(self, max_entries: int = 32):
+        self.max_entries = max(1, int(max_entries))
+        self._entries: "OrderedDict[str, PrefixEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.pages_saved = 0    # pages a hit did NOT acquire at admission
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, digest: str) -> Optional[PrefixEntry]:
+        """The entry for ``digest`` (refreshing its LRU position), or
+        None.  Callers decide hit/miss accounting — admission gating
+        peeks several times per admitted request."""
+        e = self._entries.get(digest)
+        if e is not None:
+            self._entries.move_to_end(digest)
+        return e
+
+    def publish(self, entry: PrefixEntry, alloc) -> bool:
+        """Pin ``entry.pages`` (one shared reference each) and insert the
+        entry, evicting the LRU end past ``max_entries``.  An existing
+        entry under the same digest and width is kept (identical prompt →
+        identical content); a same-digest entry published under a
+        *different* width cap replaces the stale one."""
+        old = self._entries.get(entry.digest)
+        if old is not None:
+            if old.width == entry.width:
+                return False
+            self._release(old, alloc)
+            del self._entries[entry.digest]
+        alloc.share(entry.pages)
+        self._entries[entry.digest] = entry
+        while len(self._entries) > self.max_entries:
+            self.evict_one(alloc)
+        return True
+
+    def evict_one(self, alloc) -> bool:
+        """Release the LRU entry's page references (allocator-pressure
+        shedding: a page frees only if no slot still maps it)."""
+        if not self._entries:
+            return False
+        _, old = self._entries.popitem(last=False)
+        self._release(old, alloc)
+        self.evictions += 1
+        return True
+
+    def clear(self, alloc) -> None:
+        """Drop every entry's references — end of serve.  Counters stay
+        readable for the pool summary."""
+        while self._entries:
+            _, old = self._entries.popitem(last=False)
+            self._release(old, alloc)
+
+    @staticmethod
+    def _release(entry: PrefixEntry, alloc) -> None:
+        alloc.release(entry.pages)
+
+    def stats(self) -> Dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "prefix_hits": float(self.hits),
+            "prefix_misses": float(self.misses),
+            "prefix_hit_rate": self.hits / total if total else 0.0,
+            "prefix_pages_saved": float(self.pages_saved),
+            "prefix_entries": float(len(self._entries)),
+            "prefix_evictions": float(self.evictions),
+        }

@@ -151,6 +151,35 @@ passed via ``serve(faults=...)`` drives all of these paths
 deterministically; the end-of-serve pool summary records
 ``pages_in_use_at_end`` so leak-freedom is observable.
 
+**Prefix sharing + copy-on-write** (``EngineConfig.prefix_sharing``,
+paged mode): when a cold prefill completes, the request's full page run
+(prompt pages + decode tail) is published to a
+:class:`~repro.serving.prefix_cache.PrefixIndex` keyed on the digest of
+the **clipped** prompt at its bucket (plus a model salt) — the index
+holds one extra refcount per page, so the run is read-only from that
+moment on.  A queued request whose digest (and current width-policy cap)
+matches skips the prefill launch entirely: admission maps the published
+pages into its page table (``PageAllocator.share`` — refcount++, zero
+pages acquired, headroom gate skipped), replays the donor's cached
+first-token logits, DecodePlan row, and width-policy observation, and
+proceeds straight to decode.  Because a full-prompt hit replays the same
+deterministic compiled program's outputs on identical inputs, the hit's
+token stream is bitwise the cold serve — greedy or sampled (sampling
+keys derive from the hit's own ``uid``).  Writes are fenced at the
+decode boundary: before each decode step, any slot whose append-target
+page has refcount > 1 (the donor's own tail included) is moved onto a
+fresh private page first — ``paged_cache.copy_page`` + page-table/
+``slot_pages`` rewrite + release of the shared page
+(:meth:`SlotScheduler._cow_append_page`).  The index is a cache, so it
+yields under memory pressure: both a starved cold admission
+(:meth:`SlotScheduler._shed_index_for`) and a COW copy that cannot
+acquire a page evict LRU entries for headroom, and COW as a last
+resort preempts the writing slot itself through the ordinary bitwise
+preempt/resume machinery.  Packed runs (``prefill_pack`` > 1 segments) are never
+published — the pack-fusion delta is greedy-exact but not bitwise — and
+the index is cleared (all references released) before the end-of-serve
+pool summary, so the zero-leak invariant is unchanged.
+
 MLA latent caches and the non-transformer families never reach this module
 — ``ServingEngine.serve`` routes them through the legacy batch path (the
 dense carve-out; their caches have no per-slot write layout).  Configs a
@@ -173,6 +202,7 @@ import numpy as np
 
 from repro.serving import decode_plan as dplan
 from repro.serving import paged_cache
+from repro.serving import prefix_cache
 from repro.serving import sparse_decode
 from repro.serving.chunked_prefill import ChunkedPrefillRun
 from repro.serving.errors import RequestError
@@ -290,7 +320,16 @@ class SlotScheduler:
                     f"paged serving needs block-aligned seq buckets; got "
                     f"bucket {seq} with page_size {blk}")
             self.table_blocks = self.cache_len // blk
-            cap = ecfg.num_pages or (1 + self.nslots * self.table_blocks)
+            # auto-sizing: every slot can hold a full run — plus, under
+            # prefix sharing, headroom for what sharing adds on top of
+            # slot-held runs (one published run pinned by the index and
+            # one COW tail per slot); without it the exactly-sized pool
+            # COW-exhausts on every shared decode and churns through
+            # preempt/resume cycles instead of just copying a page
+            share_extra = ((self.table_blocks + self.nslots)
+                           if ecfg.prefix_sharing else 0)
+            cap = ecfg.num_pages or (1 + self.nslots * self.table_blocks
+                                     + share_extra)
             if cap - 1 < self.table_blocks:
                 raise ValueError(
                     f"num_pages={cap} cannot hold one max-length request "
@@ -301,6 +340,20 @@ class SlotScheduler:
             self.page_table = np.full((self.nslots, self.table_blocks),
                                       paged_cache.NULL_PAGE, np.int32)
             self.slot_pages: dict = {}
+        # prompt-prefix sharing (repro.serving.prefix_cache): completed
+        # prefills publish their page run under a digest of the CLIPPED
+        # prompt; an identical later prompt maps the pages read-only and
+        # skips its prefill launch.  Shared pages are protected by the
+        # COW guard at the decode boundary (_cow_append_page).
+        self.prefix = None
+        self._cow_copies = 0
+        if self.paged and ecfg.prefix_sharing:
+            self.prefix = prefix_cache.PrefixIndex(ecfg.prefix_max_entries)
+            mcfg = engine.model.cfg
+            self._prefix_salt = (
+                f"{getattr(mcfg, 'name', '')}/{mcfg.family}/"
+                f"{mcfg.num_layers}/{mcfg.num_heads}/"
+                f"{mcfg.resolved_head_dim}")
         # decode-phase pattern sharing: committed up front from the config
         # AND the bucket's pattern applicability — the predicate that makes
         # the per-request `sp_state is None` fallback (dense_decode_plan in
@@ -349,8 +402,11 @@ class SlotScheduler:
                                             # tables are empty
         finally:
             # injected page-exhaustion windows must never leak pool pages,
-            # and the pool summary (with its end-of-serve leak accounting)
+            # the prefix index must drop its pinned page references, and
+            # the pool summary (with its end-of-serve leak accounting)
             # must publish even if the serve itself blew up
+            if self.prefix is not None:
+                self.prefix.clear(self.alloc)
             if self.faults is not None and self.paged:
                 self.faults.release_pages(self.alloc)
             self._pool_summary()
@@ -364,12 +420,15 @@ class SlotScheduler:
             self._prefill_step()
             if (self.run_ is not None and self.paged and self.queue
                     and (self.t0 + self.queue[0].arrival_s) <= time.time()
-                    and self.alloc.free_pages
+                    and self._prefix_entry(self.queue[0]) is None):
+                self._shed_index_for(self.queue[0])
+                if (self.alloc.free_pages
                         < self._pages_needed(self.queue[0])):
-                # the queue head would be starved even once the in-flight
-                # run lands — keep the starvation clock ticking so a
-                # decoding victim can be evicted mid-chunked-admission
-                self._note_starved(self.queue[0])
+                    # the queue head would be starved even once the
+                    # in-flight run lands — keep the starvation clock
+                    # ticking so a decoding victim can be evicted
+                    # mid-chunked-admission
+                    self._note_starved(self.queue[0])
             self._flush_stale_slots()
             if any(s is not None for s in self.slots):
                 self._decode_step()
@@ -480,7 +539,7 @@ class SlotScheduler:
         """Publish the pool's capacity/peak/leak accounting on the engine."""
         if not self.paged:
             return
-        self.eng.page_pool_stats = {
+        stats = {
             "num_pages": self.num_pages,
             "page_size": self.page_size,
             "table_blocks": self.table_blocks,
@@ -491,6 +550,12 @@ class SlotScheduler:
             # must report 0 here — the observable the leak gates pin
             "pages_in_use_at_end": self.alloc.used_pages,
         }
+        if self.prefix is not None:
+            pstats = self.prefix.stats()
+            pstats["prefix_cow_copies"] = float(self._cow_copies)
+            stats.update(pstats)
+            self.eng.prefix_stats = pstats
+        self.eng.page_pool_stats = stats
 
     def _flush_stale_slots(self) -> None:
         """Empty the plan rows of slots vacated since the last decode step.
@@ -549,6 +614,21 @@ class SlotScheduler:
             self.alloc.free(pages)
             self.page_table[slot, :] = paged_cache.NULL_PAGE
 
+    def _shed_index_for(self, r) -> None:
+        """Admission memory pressure: the prefix index is a cache, so its
+        pinned page runs yield (LRU-first) before the queue head is
+        deferred on headroom — or a decoding victim preempted.  Without
+        this, a cold request can starve FOREVER against pages held only
+        by the index: no slot is decoding, so starvation preemption has
+        no victim and the run loop never makes progress.  Evicting an
+        entry only frees pages no live slot still shares, so the loop is
+        bounded by the index size."""
+        if self.prefix is None:
+            return
+        while (len(self.prefix)
+               and self.alloc.free_pages < self._pages_needed(r)):
+            self.prefix.evict_one(self.alloc)
+
     def _note_starved(self, r) -> None:
         """The queue head's admission was deferred on pool headroom this
         step: count it per request (``waiting_deferred_steps``) and
@@ -593,6 +673,16 @@ class SlotScheduler:
             # replay drains one token per decode step, so it becomes
             # evictable in bounded steps — hold the eviction until then
             return
+        self._preempt_slot(victim, "pool starvation")
+
+    def _preempt_slot(self, victim: int, why: str) -> None:
+        """Evict one occupied slot PREEMPTED → WAITING: slot vacated,
+        page references released, plan row staled, request re-enqueued
+        with its generated tokens carried in ``resume_tokens``.  Shared
+        mechanics of starvation preemption (:meth:`_preempt_victim`) and
+        the COW-exhaustion fallback (:meth:`_cow_append_page`) — either
+        way the resume replays the carry bitwise."""
+        s = self.slots[victim]
         r = s.req
         npages = len(self.slot_pages.get(victim, ()))
         self.slots[victim] = None
@@ -608,9 +698,81 @@ class SlotScheduler:
         self.queue.append(r)
         self._starved = 0
         logger.info(
-            "preempted request %s after %d generated tokens (pool "
-            "starvation, %d pages reclaimed); re-queued with token carry",
-            r.uid, len(s.outs), npages)
+            "preempted request %s after %d generated tokens (%s, "
+            "%d page refs reclaimed); re-queued with token carry",
+            r.uid, len(s.outs), why, npages)
+
+    # -- prompt-prefix sharing ------------------------------------------
+    def _prefix_digest(self, r) -> str:
+        """The (model, bucket, clipped-prompt) digest — always over the
+        CLIPPED prompt (``prompt[-bucket:]``), so truncated requests hash
+        what was actually prefilled and a preempt/resume cycle re-enters
+        the index under the same key (never the raw prompt's stale
+        hash)."""
+        return prefix_cache.prefix_digest(r.prompt, self._bucket_of(r),
+                                          self._prefix_salt)
+
+    def _prefix_entry(self, r):
+        """The publishable entry matching ``r``, or None.  A hit is only
+        valid while the current width cap equals the donor's — under an
+        unfrozen width policy the cold launch would have run capped
+        differently, producing different masks and KV."""
+        if self.prefix is None:
+            return None
+        e = self.prefix.lookup(self._prefix_digest(r))
+        if e is None or e.width != self.eng._width_cap(e.bucket):
+            return None
+        return e
+
+    def _publish_prefix(self, r, slot: int, logits, plan_row, stats,
+                        plen: int, seq: int, width) -> None:
+        """Publish a just-completed cold prefill into the prefix index:
+        the slot's FULL page run (prompt pages + decode tail) is pinned
+        with one shared reference per page, making it read-only — the
+        donor's own next decode append COWs off its tail (the "first
+        decode append into a shared page" boundary), and later identical
+        prompts map the run instead of prefilling."""
+        if self.prefix is None:
+            return
+        pages = np.array(self.slot_pages[slot], np.int32)
+        entry = prefix_cache.PrefixEntry(
+            digest=self._prefix_digest(r), bucket=seq, plen=plen,
+            pages=pages, prompt_pages=seq // self.page_size,
+            logits=logits, plan_row=plan_row, stats=dict(stats),
+            width=width)
+        self.prefix.publish(entry, self.alloc)
+
+    def _cow_append_page(self, slot: int) -> None:
+        """Copy-on-write at the decode boundary: this step appends KV at
+        ``pos[slot]``; if the page holding that position is *shared*
+        (refcount > 1 — the slot mapped it from the prefix index, or
+        published it there), acquire a fresh page, copy the partial
+        block, rewrite the slot's table entry, and drop the shared
+        reference.  The other holders keep the original bit-for-bit.
+
+        Pool pressure resolves in order: shed LRU index entries until a
+        page frees (the index is a cache — under memory pressure it
+        yields first); if the pool is genuinely exhausted, preempt THIS
+        slot (pages reclaimed, tokens carried, bitwise replay on resume)
+        rather than ever letting a live append land in a shared page."""
+        b = int(self.pos[slot]) // self.page_size
+        old = int(self.page_table[slot, b])
+        if old == paged_cache.NULL_PAGE or self.alloc.refcount(old) <= 1:
+            return
+        fresh = self.alloc.acquire(1)
+        while fresh is None and self.prefix is not None and len(self.prefix):
+            self.prefix.evict_one(self.alloc)
+            fresh = self.alloc.acquire(1)
+        if fresh is None:
+            self._preempt_slot(slot, "COW page exhaustion")
+            return
+        new = int(fresh[0])
+        self.cache = paged_cache.copy_page(self.cache, old, new)
+        self.page_table[slot, b] = new
+        pages = self.slot_pages[slot]
+        pages[pages == old] = new
+        self.alloc.release([old])
+        self._cow_copies += 1
 
     def _admit(self) -> None:
         """WAITING → PREFILL: fill free slots from the arrival queue."""
@@ -619,14 +781,18 @@ class SlotScheduler:
             if not free:
                 return
             r = self.queue[0]
-            if (self.paged
-                    and self.alloc.free_pages < self._pages_needed(r)):
-                # pool exhausted: the head request stays WAITING until a
-                # finishing slot frees its pages (admission stays FIFO —
-                # later, smaller requests do not jump the queue); past the
-                # starvation window a decoding victim is preempted
-                self._note_starved(r)
-                return
+            if self.paged and self._prefix_entry(r) is None:
+                self._shed_index_for(r)
+                if self.alloc.free_pages < self._pages_needed(r):
+                    # pool exhausted: the head request stays WAITING until
+                    # a finishing slot frees its pages (admission stays
+                    # FIFO — later, smaller requests do not jump the
+                    # queue); past the starvation window a decoding victim
+                    # is preempted.  A prefix-cache hit skips the gate: it
+                    # maps shared pages instead of acquiring, so headroom
+                    # is not required.
+                    self._note_starved(r)
+                    return
             wait = (self.t0 + r.arrival_s) - time.time()
             if wait > 0:
                 if any(s is not None for s in self.slots):
@@ -641,6 +807,12 @@ class SlotScheduler:
         its first token, splice its KV row and DecodePlan row into the live
         state."""
         eng, seq = self.eng, self._bucket_of(r)
+        entry = self._prefix_entry(r)
+        if entry is not None:
+            self._start_from_prefix(r, slot, entry)
+            return
+        if self.prefix is not None:
+            self.prefix.misses += 1
         self._starved = 0               # the head admitted: starvation over
         r.state = "prefilling"
         toks = np.zeros((1, seq), np.int32)
@@ -734,6 +906,7 @@ class SlotScheduler:
                 self.cache, result.cache, pages[: seq // self.page_size])
         else:
             self.cache = eng.cache_insert(self.cache, result.cache, slot)
+        prow = None
         if self.use_sparse:
             # the row is built at the request's own allocation (its bucket
             # + the shared decode tail); under paging it is then padded to
@@ -758,8 +931,100 @@ class SlotScheduler:
             self.plan = dplan.update_plan_slot_auto(self.plan, rplan, slot,
                                                     eng.model.cfg)
             self._stale_slots.discard(slot)    # refill replaced the row
+            prow = rplan
         self.pos[slot] = seq
         self.plens[slot] = plen
+        self.pflens[slot] = seq
+        self.slots[slot] = s
+        r.state = "decode"
+        self._publish_prefix(r, slot, result.last_logits, prow, stats,
+                             plen, seq, width)
+
+    def _start_from_prefix(self, r, slot: int, entry) -> None:
+        """PREFIX HIT → DECODE: an identical (clipped) prompt was already
+        prefilled this serve — map the donor's page run into this slot's
+        table read-only (one shared reference per page; acquiring ZERO
+        fresh pages), skip the prefill launch, and replay the donor's
+        cached first-token logits and DecodePlan row.
+
+        Bitwise the cold serve: the donor's launch and this request's
+        hypothetical cold launch are the same deterministic compiled
+        program on identical inputs (same clipped tokens, same bucket,
+        same width cap — _prefix_entry refuses mismatched caps), and the
+        sampling key chain derives from THIS request's uid exactly as a
+        cold admission's would.  The width-policy observation is replayed
+        too, so later buckets' cap evolution cannot diverge.  Decode
+        appends land in the mapped (shared) tail pages only after the COW
+        guard moves the slot onto fresh private copies."""
+        eng, seq = self.eng, self._bucket_of(r)
+        self._starved = 0               # the head admitted: starvation over
+        r.state = "prefilling"
+        # the hit never reaches _pad_prompt, so flag the clip here — the
+        # digest already hashed the clipped tokens (that IS the hit)
+        r.truncated = len(np.asarray(r.prompt)) > seq
+        tp = time.time()
+        r.queue_s = max(tp - (self.t0 + r.arrival_s), 0.0)
+        try:
+            # injected prefill faults still apply: a poisoned request
+            # fails deterministically whether or not its prompt is cached
+            if self.faults is not None:
+                self.faults.check_prefill([r.uid])
+        except Exception as e:          # noqa: BLE001 — quarantine wall
+            err = (e if isinstance(e, RequestError) else RequestError(
+                r.uid, f"prefill raised {type(e).__name__}: {e}",
+                kind="prefill"))
+            logger.warning("quarantined: %s", err)
+            self._finish_inert(r, "failed", error=err)
+            return
+        r.prefill_s = time.time() - tp  # ≈ 0: the hit skips the launch
+        eng.phase_s["prefill"] += r.prefill_s
+        r.prefix_hit = True
+        entry.hits += 1
+        self.prefix.hits += 1
+        stats = eng._replay_prefill_stats(entry.stats, seq)
+        r.pattern_stats = stats
+
+        if r.max_new_tokens <= 0:       # prefill-only: no token is emitted
+            self._finish(_Slot(req=r, key=jax.random.PRNGKey(0), outs=[],
+                               last_tok=0, t_first=time.time()), "length")
+            return
+
+        # same carry/key contract as _start — tok0 comes from the donor's
+        # cached last-prompt-token logits, which ARE this prompt's logits
+        carry = list(r.resume_tokens)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), r.uid)
+        key, sub = jax.random.split(key)
+        tok0 = int(sample_token(sub, entry.logits, r.sampling)[0])
+        if carry:
+            tok0 = carry[0]             # carried tokens are verbatim
+        t_first = time.time()
+        if not carry:                   # TTFT is first-ever token only
+            r.ttft_s = max(t_first - (self.t0 + r.arrival_s), 0.0)
+
+        s = _Slot(req=r, key=key, outs=[tok0], last_tok=tok0,
+                  t_first=t_first, replay=carry[1:], carry_len=len(carry))
+        if r.sampling.is_stop(tok0):
+            self._finish(s, "stop")
+            return                      # no pages were mapped yet
+        if len(s.outs) >= r.max_new_tokens:
+            self._finish(s, "length")
+            return
+
+        # DECODE: map the donor's run — refcount++ on every page, table
+        # row rewritten, zero pages acquired.  The run length always
+        # matches (same bucket, scheduler-wide decode tail).
+        if len(entry.pages) != self._pages_needed(r):
+            raise RuntimeError("prefix entry geometry mismatch")
+        self.prefix.pages_saved += len(entry.pages)
+        self.alloc.share(entry.pages)
+        self.slot_pages[slot] = np.array(entry.pages, np.int32)
+        self.page_table[slot, : len(entry.pages)] = entry.pages
+        if self.use_sparse:
+            self.plan = dplan.update_plan_slot_auto(
+                self.plan, entry.plan_row, slot, eng.model.cfg)
+            self._stale_slots.discard(slot)
+        self.pos[slot] = seq
+        self.plens[slot] = entry.plen
         self.pflens[slot] = seq
         self.slots[slot] = s
         r.state = "decode"
@@ -793,11 +1058,14 @@ class SlotScheduler:
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
             return None
-        if (self.paged and self.alloc.free_pages
+        head_hit = self._prefix_entry(self.queue[0]) is not None
+        if (self.paged and not head_hit and self.alloc.free_pages
                 < self._pages_needed(self.queue[0])):
             # same FIFO headroom gate as the one-shot path: the head stays
             # WAITING until a finishing slot frees its pages — or a victim
-            # is preempted once the starvation window is exceeded
+            # is preempted once the starvation window is exceeded.  A
+            # prefix-cache hit maps shared pages instead of acquiring, so
+            # it skips the gate.
             self._note_starved(self.queue[0])
             return None
         wait = (self.t0 + self.queue[0].arrival_s) - time.time()
@@ -806,6 +1074,12 @@ class SlotScheduler:
                 return None             # keep decoding, admit it later
             time.sleep(wait)            # fully idle: jump to next arrival
             eng.phase_s["idle"] += wait
+        if head_hit:
+            # a prefix-cache hit needs no chunked run at all — _start
+            # routes it through the hit path (cached logits + mapped
+            # pages); the loop assembles the next cold run next step
+            self._start(self.queue.popleft(), free[0])
+            return None
 
         seq = self._bucket_of(self.queue[0])
         chunk = self.chunk if not self.paged else eng._chunk_tokens(seq)
@@ -823,6 +1097,9 @@ class SlotScheduler:
                 r = self.queue[0]
                 if self._bucket_of(r) != seq:
                     break       # packing needs one shared segment length
+                if group and self._prefix_entry(r) is not None:
+                    break       # a hit never rides a packed run — it is
+                                # admitted launch-free next step instead
                 need = self._pages_needed(r)
                 if need > reserve:
                     break       # the rest of the group waits for headroom
@@ -830,6 +1107,8 @@ class SlotScheduler:
             group.append(self.queue.popleft())
         if not group:
             return None
+        if self.prefix is not None:
+            self.prefix.misses += len(group)
         self._starved = 0               # the head admitted: starvation over
         for r in group:
             r.queue_s = max(now - (self.t0 + r.arrival_s), 0.0)
@@ -1008,6 +1287,7 @@ class SlotScheduler:
                 self._finish(s, "length")
                 continue
 
+            prow = None
             if self.use_sparse:
                 rplan = self._plan_row(run, j)
                 rstats.update(eng._plan_stats(rplan, seq + self.extra_len))
@@ -1016,11 +1296,20 @@ class SlotScheduler:
                 self.plan = dplan.update_plan_slot_auto(
                     self.plan, rplan, slot, eng.model.cfg)
                 self._stale_slots.discard(slot)
+                prow = rplan
             self.pos[slot] = seq
             self.plens[slot] = run.plens[j]
             self.pflens[slot] = seq
             self.slots[slot] = s
             r.state = "decode"
+            if run.P == 1:
+                # packed (P > 1) segments are never published: their
+                # logits/KV carry the pack-composition fusion delta
+                # (greedy-exact but not bitwise vs a solo launch), and a
+                # hit must replay the donor's SOLO cold behavior exactly
+                self._publish_prefix(r, slot, run.logits[j: j + 1], prow,
+                                     rstats, int(run.plens[j]), seq,
+                                     run.width)
 
     # -- decode ----------------------------------------------------------
     def _decode_step(self) -> None:
@@ -1028,6 +1317,15 @@ class SlotScheduler:
         then per-slot sampling, early exit, and slot freeing."""
         eng = self.eng
         td = time.time()
+        if self.prefix is not None:
+            # COW guard at the decode boundary: every occupied slot about
+            # to append into a shared page is moved onto a fresh private
+            # copy first (or, on true pool exhaustion, preempted) — a
+            # shared page is never written.  Runs before ``occ`` is
+            # computed so a COW-preempted slot sits this step out.
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    self._cow_append_page(i)
         occ = [i for i, s in enumerate(self.slots) if s is not None]
         eng.slot_steps += self.nslots
         eng.active_slot_steps += len(occ)

@@ -64,6 +64,12 @@ SERVING = {
          "tokens_per_s_decode_mean": 55.0, "peak_pages": 5,
          "table_blocks": 2, "pages_in_use_at_end": 0,
          "pages_exhausted_steps": 12, "preemptions": 4},
+        {"mode": "prefix-unshared", "slot_occupancy": 0.85,
+         "tokens_per_s_decode_mean": 58.0, "peak_pages": 12,
+         "table_blocks": 6, "pages_in_use_at_end": 0},
+        {"mode": "prefix-shared", "slot_occupancy": 0.85,
+         "tokens_per_s_decode_mean": 58.0, "peak_pages": 10,
+         "table_blocks": 6, "pages_in_use_at_end": 0},
     ],
     "scheduler_vs_batch": {"ttft_mean_ratio": 0.6, "occupancy_gain": 0.4,
                            "greedy_tokens_match": True,
@@ -81,7 +87,13 @@ SERVING = {
                            "healthy_tokens_match_degraded": True,
                            "degraded_completed_tps_ratio": 0.8,
                            "degraded_preemptions": 4,
-                           "degraded_pages_leaked": 0},
+                           "degraded_pages_leaked": 0,
+                           "prefix_hit_rate": 0.5,
+                           "prefix_pages_saved": 12,
+                           "prefix_tokens_match": True,
+                           "prefix_ttft_hit_vs_miss": 0.2,
+                           "prefix_cow_copies": 5,
+                           "prefix_pages_leaked": 0},
 }
 PAGED_KEYS = ("decode_tps_ratio_paged", "greedy_tokens_match_paged",
               "decode_tps_ratio_mixed", "greedy_tokens_match_mixed",
@@ -90,6 +102,9 @@ PAGED_KEYS = ("decode_tps_ratio_paged", "greedy_tokens_match_paged",
 DEGRADED_KEYS = ("healthy_tokens_match_degraded",
                  "degraded_completed_tps_ratio",
                  "degraded_preemptions", "degraded_pages_leaked")
+PREFIX_KEYS = ("prefix_hit_rate", "prefix_pages_saved",
+               "prefix_tokens_match", "prefix_ttft_hit_vs_miss",
+               "prefix_cow_copies", "prefix_pages_leaked")
 
 
 def test_identical_artifacts_pass():
@@ -279,7 +294,8 @@ def test_chunked_serving_gates():
     old["points"] = old["points"][:2]
     for k in ("ttft_mean_ratio_chunked", "decode_tps_ratio",
               "decode_tps_ratio_chunked",
-              "greedy_tokens_match_chunked") + PAGED_KEYS + DEGRADED_KEYS:
+              "greedy_tokens_match_chunked") + PAGED_KEYS + DEGRADED_KEYS \
+            + PREFIX_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -326,7 +342,7 @@ def test_paged_serving_gates():
     # a pre-paged baseline gates nothing (transition path)
     old = copy.deepcopy(SERVING)
     old["points"] = old["points"][:3]
-    for k in PAGED_KEYS + DEGRADED_KEYS:
+    for k in PAGED_KEYS + DEGRADED_KEYS + PREFIX_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -369,7 +385,56 @@ def test_degraded_serving_gates():
     # a pre-hardening baseline gates nothing (transition path)
     old = copy.deepcopy(SERVING)
     old["points"] = old["points"][:6]
-    for k in DEGRADED_KEYS:
+    for k in DEGRADED_KEYS + PREFIX_KEYS:
+        del old["scheduler_vs_batch"][k]
+    assert check_bench.compare_serving(old, SERVING) == []
+
+
+def test_prefix_serving_gates():
+    """Prefix-sharing gates: bitwise token match is absolute, the hit
+    rate and pages-saved floors are deterministic counters, the hit-TTFT
+    ceiling guards the latency win, and leaked pages have zero
+    tolerance."""
+    # sharing is no longer bitwise-invisible
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["prefix_tokens_match"] = False
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_tokens_match" in e for e in errs)
+
+    # duplicate prompts stopped hitting the index
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["prefix_hit_rate"] = 0.2
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_hit_rate" in e and "floor" in e for e in errs)
+
+    # hits stopped mapping the donor's pages
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["prefix_pages_saved"] = 0
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_pages_saved" in e for e in errs)
+
+    # a hit no longer beats its own cold serve to first token
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["prefix_ttft_hit_vs_miss"] = 1.05
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_ttft_hit_vs_miss" in e for e in errs)
+
+    # a shared-reference release path stopped draining the pool
+    fresh = copy.deepcopy(SERVING)
+    fresh["scheduler_vs_batch"]["prefix_pages_leaked"] = 1
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_pages_leaked" in e for e in errs)
+
+    # losing the column after the baseline records it is a regression
+    fresh = copy.deepcopy(SERVING)
+    del fresh["scheduler_vs_batch"]["prefix_hit_rate"]
+    errs = check_bench.compare_serving(SERVING, fresh)
+    assert any("prefix_hit_rate disappeared" in e for e in errs)
+
+    # a pre-sharing baseline gates nothing (transition path)
+    old = copy.deepcopy(SERVING)
+    old["points"] = old["points"][:8]
+    for k in PREFIX_KEYS:
         del old["scheduler_vs_batch"][k]
     assert check_bench.compare_serving(old, SERVING) == []
 
@@ -383,7 +448,8 @@ def test_committed_serving_baseline_shows_improvement():
     assert set(by_mode) == {"batch", "scheduler", "scheduler-chunked",
                             "scheduler-paged", "scheduler-mixed",
                             "paged-mixed", "degraded-reference",
-                            "degraded-faults"}
+                            "degraded-faults", "prefix-unshared",
+                            "prefix-shared"}
     s = base["scheduler_vs_batch"]
     assert s["greedy_tokens_match"] is True
     assert s["ttft_mean_ratio"] < 1.0
@@ -425,6 +491,14 @@ def test_committed_serving_baseline_shows_improvement():
     deg = by_mode["degraded-faults"]
     assert deg["pages_exhausted_steps"] > 0
     assert deg["pages_in_use_at_end"] == 0
+    # prefix sharing: bitwise-invisible, deterministic hit rate on the
+    # duplicate-prompt workload, real page + TTFT wins, drained pools
+    assert s["prefix_tokens_match"] is True
+    assert s["prefix_hit_rate"] >= 0.5
+    assert s["prefix_pages_saved"] > 0
+    assert s["prefix_ttft_hit_vs_miss"] < 0.9
+    assert s["prefix_cow_copies"] > 0
+    assert s["prefix_pages_leaked"] == 0
 
 
 def test_committed_prefill_baseline_rows_record_width():

@@ -1,0 +1,419 @@
+"""Prefix sharing + refcounted page allocator: correctness sweep.
+
+Two tiers.  The allocator tier pins the refcount/atomicity contract
+without a model: ``release`` validates its whole id list before mutating
+(an invalid id mid-list leaves NOTHING half-freed), double-frees and
+unallocated shares raise the typed :class:`PageAllocatorError`, and a
+seeded random walk over acquire/share/release/hold asserts the
+hypothesis-style invariants — no page is ever granted to two owners,
+refcounts never go negative, ``peak_in_use`` is monotone within a
+lifetime, and a drained allocator always returns to fully-free.
+
+The serving tier pins the tentpole guarantee — **sharing is bitwise
+invisible**: a prefix-hit request (identical clipped prompt) produces
+exactly the tokens it would have produced against a cold cache, greedy
+and sampled, one-shot and chunked, including through copy-on-write at
+the decode boundary, COW-exhaustion preemption + resume under a starved
+pool, truncated prompts (the digest hashes the *clipped* tokens, so
+prompts differing only in the clipped-away head share an entry, and a
+preempted + resumed truncated request re-enters the index under the
+same digest), and fault quarantine / cancellation of hit slots (every
+release path drops shared references without corrupting the pool — the
+autouse conftest guard audits refcount consistency after each test).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, sample
+from repro.models import build_model
+from repro.serving import (
+    CancelAt,
+    EngineConfig,
+    FaultInjector,
+    NULL_PAGE,
+    NaNLogits,
+    PageAllocator,
+    PageAllocatorError,
+    PrefixEntry,
+    PrefixIndex,
+    Request,
+    SamplingConfig,
+    ServingEngine,
+    prefix_digest,
+)
+
+
+# --------------------------------------------------------------------------
+# Allocator: refcounts, atomic guarded release, misuse errors
+# --------------------------------------------------------------------------
+
+def test_refcount_share_release_lifecycle():
+    a = PageAllocator(8)
+    ids = a.acquire(3)
+    assert all(a.refcount(i) == 1 for i in ids)
+    a.share(ids)                        # index/hit takes a reference
+    assert all(a.refcount(i) == 2 for i in ids)
+    a.release(ids)                      # owner leaves; pages stay live
+    assert all(a.refcount(i) == 1 for i in ids)
+    assert a.free_pages == 4            # nothing recycled yet
+    a.release(ids)                      # last reference → recycled
+    assert all(a.refcount(i) == 0 for i in ids)
+    assert a.free_pages == 7
+    a.check_consistency()
+
+
+def test_release_validates_whole_list_before_mutating():
+    """The PR-9 bugfix: an invalid id mid-list must leave EVERY earlier
+    id still allocated — no partial free, no inconsistent allocator."""
+    a = PageAllocator(8)
+    ids = [int(i) for i in a.acquire(3)]
+    free_before = a.free_pages
+    with pytest.raises(PageAllocatorError):
+        a.release([ids[0], 77])             # out-of-range mid-list
+    with pytest.raises(PageAllocatorError):
+        a.release([ids[1], NULL_PAGE])      # null page mid-list
+    with pytest.raises(PageAllocatorError):
+        a.release([ids[2], ids[2]])         # over-release in ONE call
+    # ...and nothing moved:
+    assert a.free_pages == free_before
+    assert all(a.refcount(i) == 1 for i in ids)
+    a.check_consistency()
+    a.release(ids)
+    assert a.free_pages == 7
+
+
+def test_double_free_raises_typed_error():
+    a = PageAllocator(6)
+    ids = a.acquire(2)
+    a.release(ids)
+    with pytest.raises(PageAllocatorError):
+        a.release([int(ids[0])])            # already back on the free list
+    with pytest.raises(PageAllocatorError):
+        a.release([5])                      # never allocated
+    assert a.free_pages == 5                # guards mutated nothing
+    a.check_consistency()
+
+
+def test_share_guards():
+    a = PageAllocator(6)
+    ids = a.acquire(2)
+    with pytest.raises(PageAllocatorError):
+        a.share([int(ids[0]), 5])           # 5 is free: invalid share
+    assert a.refcount(ids[0]) == 1          # atomic: untouched
+    with pytest.raises(PageAllocatorError):
+        a.share([NULL_PAGE])
+    with pytest.raises(PageAllocatorError):
+        a.share([99])
+    a.release(ids)
+    a.check_consistency()
+
+
+def test_allocator_random_walk_invariants():
+    """Hypothesis-style sweep: random acquire/share/release/hold
+    sequences can never grant one page to two owners, drive a refcount
+    negative, or shrink ``peak_in_use``; draining always restores the
+    fully-free pool."""
+    rng = np.random.default_rng(1234)
+    for _trial in range(6):
+        a = PageAllocator(17)
+        refs = {}                       # page -> shadow refcount
+        last_peak = 0
+        for _step in range(250):
+            op = int(rng.integers(0, 4))
+            if op == 0:
+                ids = a.acquire(int(rng.integers(1, 5)))
+                if ids is not None:
+                    for i in ids.tolist():
+                        # a fresh grant of a live page would alias KV
+                        assert i not in refs
+                        refs[i] = 1
+            elif op == 1 and refs:
+                k = min(len(refs), int(rng.integers(1, 4)))
+                pick = rng.choice(list(refs), size=k, replace=False)
+                a.share(pick)
+                for i in pick.tolist():
+                    refs[i] += 1
+            elif op == 2 and refs:
+                k = min(len(refs), int(rng.integers(1, 4)))
+                pick = rng.choice(list(refs), size=k, replace=False)
+                a.release(pick)
+                for i in pick.tolist():
+                    refs[i] -= 1
+                    if refs[i] == 0:
+                        del refs[i]
+            else:
+                for i in a.hold(int(rng.integers(0, 3))).tolist():
+                    assert i not in refs
+                    refs[i] = 1
+            assert a.peak_in_use >= last_peak       # monotone
+            last_peak = a.peak_in_use
+            for i, c in refs.items():
+                assert a.refcount(i) == c
+            a.check_consistency()
+        for i, c in list(refs.items()):             # drain
+            a.release([i] * c)
+        assert a.free_pages == a.num_pages - 1
+        a.check_consistency()
+
+
+# --------------------------------------------------------------------------
+# Prefix digest + index mechanics (no model)
+# --------------------------------------------------------------------------
+
+def test_prefix_digest_hashes_clipped_prompt():
+    long = np.arange(300, dtype=np.int32) % 50
+    other = long.copy()
+    other[:40] = 7                      # differs only in the clipped head
+    assert prefix_digest(long, 256) == prefix_digest(other, 256)
+    tail = long.copy()
+    tail[-1] += 1                       # differs in the served tail
+    assert prefix_digest(long, 256) != prefix_digest(tail, 256)
+    # bucket and model salt are part of the key
+    assert prefix_digest(long, 256) != prefix_digest(long, 128)
+    assert (prefix_digest(long, 256, salt="m1")
+            != prefix_digest(long, 256, salt="m2"))
+    # shorter-than-bucket prompts: every token counts
+    short = np.arange(10, dtype=np.int32)
+    bump = short.copy()
+    bump[0] += 1
+    assert prefix_digest(short, 256) != prefix_digest(bump, 256)
+
+
+def _entry(digest, pages):
+    return PrefixEntry(digest=digest, bucket=64, plen=4,
+                       pages=np.asarray(pages, np.int32),
+                       prompt_pages=len(pages), logits=None, plan_row=None,
+                       stats={}, width=None)
+
+
+def test_prefix_index_pins_and_releases_pages():
+    a = PageAllocator(10)
+    idx = PrefixIndex(max_entries=2)
+    p1 = a.acquire(2)
+    assert idx.publish(_entry("d1", p1), a)
+    assert all(a.refcount(p) == 2 for p in p1)      # index pin
+    a.release(p1)                       # donor finishes; entry keeps run alive
+    assert all(a.refcount(p) == 1 for p in p1)
+    assert idx.lookup("d1") is not None
+
+    p2 = a.acquire(2)
+    idx.publish(_entry("d2", p2), a)
+    a.release(p2)
+    p3 = a.acquire(2)
+    idx.publish(_entry("d3", p3), a)
+    a.release(p3)
+    # capacity 2 → LRU d1 evicted, ITS pages recycled
+    assert idx.lookup("d1") is None and len(idx) == 2
+    assert all(a.refcount(p) == 0 for p in p1)
+    assert idx.evict_one(a)             # pressure shedding
+    idx.clear(a)                        # end of serve
+    assert a.free_pages == 9
+    a.check_consistency()
+
+
+# --------------------------------------------------------------------------
+# Serving: prefix hits are bitwise-invisible
+# --------------------------------------------------------------------------
+
+CFG = get_smoke_config("granite-3-2b")
+SEQ = 256
+S64 = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    sp = model.default_share_prefill()
+    engines = {}
+
+    def get_engine(**kw) -> ServingEngine:
+        k = tuple(sorted(kw.items()))
+        if k not in engines:
+            engines[k] = ServingEngine(model, params, sp, EngineConfig(
+                method="share", max_batch=2, **kw))
+        return engines[k]
+
+    return get_engine
+
+
+def _prompt(seq, uid):
+    dcfg = DataConfig(vocab_size=CFG.vocab_size, seq_len=seq,
+                      global_batch=1, task="retrieval")
+    return sample(dcfg, uid)["tokens"]
+
+
+def _dup_requests(max_new=(6, 6, 5, 4), seq=SEQ, **kw):
+    """Three requests sharing one prompt + one distinct request."""
+    shared = _prompt(seq, 7)
+    reqs = [Request(uid=i, prompt=shared.copy(), max_new_tokens=m, **kw)
+            for i, m in enumerate(max_new[:-1])]
+    reqs.append(Request(uid=99, prompt=_prompt(seq, 42),
+                        max_new_tokens=max_new[-1], **kw))
+    return reqs
+
+
+def _assert_bitwise(ref, got):
+    for a, b in zip(ref, got):
+        assert b.finish_reason == a.finish_reason
+        np.testing.assert_array_equal(a.output_tokens, b.output_tokens)
+
+
+def test_prefix_hit_bitwise_greedy(setup):
+    """Duplicated prompts under prefix sharing produce exactly the cold
+    serve's greedy tokens — while skipping their prefill launches,
+    sharing KV pages, and COWing at the decode boundary."""
+    get_engine = setup
+    base = dict(seq_buckets=(SEQ,), decode_sparse=True, paged=True)
+    off = _dup_requests()
+    get_engine(**base).serve(off, seed=0)
+    on = _dup_requests()
+    eng = get_engine(**base, prefix_sharing=True)
+    eng.serve(on, seed=0)
+
+    _assert_bitwise(off, on)
+    assert [r.prefix_hit for r in on] == [False, True, True, False]
+    ps = eng.prefix_stats
+    assert ps["prefix_hits"] == 2 and ps["prefix_pages_saved"] > 0
+    assert ps["prefix_cow_copies"] > 0          # shared tails were COWed
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
+    # a hit skips the launch entirely: its prefill time is ~nothing
+    # compared to the donor's real kernel launch
+    assert on[1].prefill_s < on[0].prefill_s
+    assert all(r.metrics()["prefix_hit"] == float(r.prefix_hit) for r in on)
+
+
+def test_prefix_hit_bitwise_sampled(setup):
+    """Same guarantee under temperature sampling: per-uid key chains make
+    a hit's sampled stream identical to its cold serve."""
+    get_engine = setup
+    base = dict(seq_buckets=(SEQ,), decode_sparse=True, paged=True)
+    sk = dict(sampling=SamplingConfig(temperature=0.8))
+    off = _dup_requests(**sk)
+    get_engine(**base).serve(off, seed=3)
+    on = _dup_requests(**sk)
+    eng = get_engine(**base, prefix_sharing=True)
+    eng.serve(on, seed=3)
+    _assert_bitwise(off, on)
+    assert eng.prefix_stats["prefix_hits"] == 2
+
+
+def test_prefix_hit_bitwise_chunked(setup):
+    """Chunked admission publishes solo runs too: hits skip the whole
+    quantum sequence and stay bitwise."""
+    get_engine = setup
+    base = dict(seq_buckets=(SEQ,), decode_sparse=True, paged=True,
+                prefill_chunk=64)
+    off = _dup_requests()
+    get_engine(**base).serve(off, seed=0)
+    on = _dup_requests()
+    eng = get_engine(**base, prefix_sharing=True)
+    eng.serve(on, seed=0)
+    _assert_bitwise(off, on)
+    assert eng.prefix_stats["prefix_hits"] >= 1
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
+
+
+def test_truncated_prompts_share_by_clipped_digest(setup):
+    """The stale-hash regression: prompts differing ONLY in the
+    clipped-away head are the same effective prompt — the second must
+    hit, and both must serve bitwise vs sharing-off."""
+    get_engine = setup
+    base = dict(seq_buckets=(SEQ,), decode_sparse=True, paged=True)
+    long = _prompt(SEQ + 50, 7)
+    other = long.copy()
+    other[:30] = 11                     # clipped away by _pad_prompt
+
+    def reqs():
+        return [Request(uid=0, prompt=long.copy(), max_new_tokens=6),
+                Request(uid=1, prompt=other.copy(), max_new_tokens=5)]
+
+    off = reqs()
+    get_engine(**base).serve(off, seed=0)
+    on = reqs()
+    eng = get_engine(**base, prefix_sharing=True)
+    eng.serve(on, seed=0)
+    assert all(r.truncated for r in on)
+    assert on[1].prefix_hit
+    _assert_bitwise(off, on)
+
+
+def test_cow_exhaustion_preempts_and_resumes_bitwise(setup):
+    """COW under a starved pool: with every allocatable page held by live
+    slots + the index, the second writer's copy-on-write cannot acquire a
+    page even after shedding index entries — it preempts ITSELF through
+    the ordinary carry/replay machinery and still finishes bitwise.  A
+    trailing DISTINCT request rides through the same churn: its stream
+    must be untouched by the eviction/preemption traffic around it."""
+    get_engine = setup
+    base = dict(seq_buckets=(S64,), decode_sparse=True, decode_extra=S64,
+                paged=True)
+    shared = _prompt(S64, 5)
+    distinct = _prompt(S64, 29)
+
+    def reqs():
+        return [Request(uid=0, prompt=shared.copy(), max_new_tokens=12),
+                Request(uid=1, prompt=shared.copy(), max_new_tokens=10),
+                Request(uid=2, prompt=distinct.copy(), max_new_tokens=6)]
+
+    off = reqs()
+    get_engine(**base).serve(off, seed=0)
+    on = reqs()
+    # 3 allocatable pages: the donor holds 2 (and the index pins them),
+    # its own COW takes the third — the hit's COW must preempt
+    eng = get_engine(**base, prefix_sharing=True, num_pages=4)
+    eng.serve(on, seed=0)
+    _assert_bitwise(off, on)
+    assert eng.preemptions >= 1
+    assert any(r.preempted_count > 0 for r in on)
+    assert eng.prefix_stats["prefix_cow_copies"] >= 1
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
+
+
+def test_truncated_preempt_resume_reenters_index(setup):
+    """Truncated + preempted + resumed: the resume re-prefills the
+    CLIPPED prompt and must re-enter the index under the clipped digest
+    (the raw-prompt hash would miss its own entry); streams stay bitwise
+    vs the ample-pool serve."""
+    get_engine = setup
+    base = dict(seq_buckets=(S64,), decode_sparse=True, decode_extra=S64,
+                paged=True)
+    long = _prompt(S64 + 40, 5)         # truncated to the 64 bucket
+
+    def reqs():
+        return [Request(uid=0, prompt=long.copy(), max_new_tokens=12),
+                Request(uid=1, prompt=long.copy(), max_new_tokens=10)]
+
+    off = reqs()
+    get_engine(**base).serve(off, seed=0)
+    on = reqs()
+    eng = get_engine(**base, prefix_sharing=True, num_pages=4)
+    eng.serve(on, seed=0)
+    assert all(r.truncated for r in on)
+    assert eng.preemptions >= 1
+    _assert_bitwise(off, on)
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
+
+
+def test_fault_release_paths_drop_shared_references(setup):
+    """Cancelling one hit slot and poisoning another exercises vacate /
+    quarantine release paths on SHARED pages: refcounts drop cleanly (the
+    conftest guard audits consistency), the pool drains, and untouched
+    requests still serve bitwise."""
+    get_engine = setup
+    base = dict(seq_buckets=(SEQ,), decode_sparse=True, paged=True)
+    off = _dup_requests(max_new=(8, 8, 8, 5))
+    get_engine(**base).serve(off, seed=0)
+
+    on = _dup_requests(max_new=(8, 8, 8, 5))
+    eng = get_engine(**base, prefix_sharing=True)
+    eng.serve(on, seed=0,
+              faults=FaultInjector(CancelAt(uid=1, step=6),
+                                   NaNLogits(uid=2, at_token=2)))
+    assert on[1].finish_reason == "cancelled"
+    assert on[2].finish_reason == "failed"
+    # the donor and the distinct request never saw the faults
+    _assert_bitwise([off[0], off[3]], [on[0], on[3]])
+    assert eng.page_pool_stats["pages_in_use_at_end"] == 0
