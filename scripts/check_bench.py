@@ -23,7 +23,14 @@ point regresses:
   * **plan traffic fraction** (decode): the fraction of kv blocks each
     decode step streams may not increase by more than ``--tol-traffic``
     (absolute) — a deterministic counter, an increase is real sparsity
-    loss.
+    loss;
+  * **adaptive refresh** (decode, when the baseline records the
+    ``long_decode`` section): at the longest decode point the refreshed
+    plan's traffic fraction must stay under
+    ``--max-refresh-traffic-ratio`` × the frozen plan's and the refreshed
+    serve's decode tokens/s must beat the frozen serve's by
+    ``--min-refresh-tps-gain``; the refresh-OFF serve must bit-match the
+    contiguous scheduler and both pools must drain.
 
   * **serving** (``BENCH_serving.json``): the continuous-batching
     invariants — greedy tokens must bit-match between the scheduler and
@@ -153,6 +160,17 @@ MIN_DEGRADED_TPS_RATIO = 0.5  # degraded/reference completed tokens/s floor
 # release paths are the PR's correctness sweep).
 MIN_PREFIX_HIT_RATE = 0.5     # hits / (hits + misses) floor (deterministic)
 MAX_PREFIX_TTFT_RATIO = 0.9   # hit TTFT / same-request cold TTFT ceiling
+# adaptive-refresh gates (the decode artifact's ``long_decode`` section):
+# at the longest decode point the refreshed plan's traffic fraction must
+# come in well under the frozen plan's (a deterministic plan counter, so
+# the 0.6x ceiling is tight) AND the refreshed serve must be faster in
+# wall-clock — refresh is gated on measured traffic reduction that pays
+# for its own re-estimation cost, not on bitwise equality (the refreshed
+# tokens legitimately diverge).  The refresh-OFF serve, by contrast, must
+# stay bitwise-identical to the contiguous scheduler, and both pools must
+# drain (refresh adds no page-lifecycle paths, so leaks are zero-tolerance).
+MAX_REFRESH_TRAFFIC_RATIO = 0.6  # refreshed/frozen traffic-fraction ceiling
+MIN_REFRESH_TPS_GAIN = 1.1       # refreshed/frozen decode tokens/s floor
 
 
 def _load(path: str) -> dict:
@@ -249,10 +267,71 @@ def _decode_ratio(p: dict) -> float:
     return sparse / dense if dense else 0.0
 
 
+def _compare_long_decode(base: dict, fresh: dict, errors: List[str], *,
+                         max_refresh_traffic_ratio: float,
+                         min_refresh_tps_gain: float) -> None:
+    """Adaptive-refresh gates on the ``long_decode`` artifact section.
+
+    Engage once the baseline records the section (pre-refresh baselines
+    are exempt; once present, losing it is a coverage regression).  The
+    traffic and throughput gates are absolute on the *fresh* artifact at
+    its longest decode point — refresh must keep earning its keep, not
+    merely match a baseline that earned it once."""
+    bld = base.get("long_decode") or {}
+    if not bld.get("points"):
+        return
+    fld = fresh.get("long_decode") or {}
+    if not fld.get("points"):
+        errors.append("decode long: long_decode section disappeared "
+                      "(baseline records the refresh trajectory)")
+        return
+    fresh_pts = _by_key(fld["points"], ("decode_tokens",))
+    for key, bp in _by_key(bld["points"], ("decode_tokens",)).items():
+        if key not in fresh_pts:
+            errors.append(f"decode long decode_tokens={key[0]}: point "
+                          f"missing from fresh artifact")
+    longest = max(fld["points"], key=lambda p: p.get("decode_tokens", 0))
+    where = f"decode long decode_tokens={longest.get('decode_tokens')}"
+    frozen_t = float(longest.get("traffic_fraction_frozen", 0.0))
+    fresh_t = float(longest.get("traffic_fraction_refreshed", 1.0))
+    if frozen_t <= 0:
+        errors.append(f"{where}: traffic_fraction_frozen missing or zero")
+    elif fresh_t > frozen_t * max_refresh_traffic_ratio:
+        errors.append(
+            f"{where}: refreshed traffic fraction {fresh_t:.3f} above "
+            f"{max_refresh_traffic_ratio:.2f} x frozen ({frozen_t:.3f}) "
+            f"— refresh no longer collapses the dense tail")
+    frozen_s = float(longest.get("tokens_per_s_frozen", 0.0))
+    fresh_s = float(longest.get("tokens_per_s_refreshed", 0.0))
+    if frozen_s <= 0:
+        errors.append(f"{where}: tokens_per_s_frozen missing or zero")
+    elif fresh_s < frozen_s * min_refresh_tps_gain:
+        errors.append(
+            f"{where}: refreshed decode tokens/s {fresh_s:.1f} below "
+            f"{min_refresh_tps_gain:.2f} x frozen ({frozen_s:.1f}) — the "
+            f"traffic win no longer pays for the re-estimation cost")
+    if int(longest.get("refreshes", 0)) < 1:
+        errors.append(f"{where}: refreshes = 0 — the refreshed serve "
+                      f"never re-estimated (the gates lost their subject)")
+    if not fld.get("refresh_off_tokens_match", False):
+        errors.append(
+            "decode long: refresh_off_tokens_match is false — the "
+            "refresh-OFF paged serve no longer bit-matches the contiguous "
+            "scheduler (refresh support perturbed the default path)")
+    leaked = int(fld.get("pages_leaked", 0))
+    if leaked != 0:
+        errors.append(f"decode long: pages_leaked = {leaked} — a refresh "
+                      f"path stopped draining the pool")
+
+
 def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
                    tol_blocks: float = TOL_BLOCKS,
                    tol_ratio: float = TOL_DECODE_RATIO,
-                   tol_traffic: float = TOL_TRAFFIC) -> List[str]:
+                   tol_traffic: float = TOL_TRAFFIC,
+                   max_refresh_traffic_ratio: float =
+                   MAX_REFRESH_TRAFFIC_RATIO,
+                   min_refresh_tps_gain: float =
+                   MIN_REFRESH_TPS_GAIN) -> List[str]:
     errors: List[str] = []
     keys = ("seq", "cache_len")
     fresh_pts = _by_key(fresh.get("points", []), keys)
@@ -292,6 +371,10 @@ def compare_decode(base: dict, fresh: dict, *, tol_tokens: float = TOL_TOKENS,
                     f"{float(bt):.3f} -> {float(ft):.3f} "
                     f"(allowed increase {tol_traffic:.2f})")
         _check_tokens(bp, fp, where, tol_tokens, errors)
+    _compare_long_decode(
+        base, fresh, errors,
+        max_refresh_traffic_ratio=max_refresh_traffic_ratio,
+        min_refresh_tps_gain=min_refresh_tps_gain)
     return errors
 
 
@@ -560,6 +643,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tol-decode-ratio", type=float,
                     default=TOL_DECODE_RATIO)
     ap.add_argument("--tol-traffic", type=float, default=TOL_TRAFFIC)
+    ap.add_argument("--max-refresh-traffic-ratio", type=float,
+                    default=MAX_REFRESH_TRAFFIC_RATIO)
+    ap.add_argument("--min-refresh-tps-gain", type=float,
+                    default=MIN_REFRESH_TPS_GAIN)
     ap.add_argument("--min-occupancy-gain", type=float,
                     default=MIN_OCCUPANCY_GAIN)
     ap.add_argument("--max-ttft-ratio", type=float, default=MAX_TTFT_RATIO)
@@ -612,7 +699,10 @@ def main(argv=None) -> int:
             extra = {"min_grid_ratio": args.min_grid_ratio}
         elif cmp_fn is compare_decode:
             extra = {"tol_ratio": args.tol_decode_ratio,
-                     "tol_traffic": args.tol_traffic}
+                     "tol_traffic": args.tol_traffic,
+                     "max_refresh_traffic_ratio":
+                         args.max_refresh_traffic_ratio,
+                     "min_refresh_tps_gain": args.min_refresh_tps_gain}
         else:
             extra = {"min_occupancy_gain": args.min_occupancy_gain,
                      "max_ttft_ratio": args.max_ttft_ratio,

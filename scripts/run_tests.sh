@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
 # Tiered test wrapper: the default in-process suite first, then the
-# ``chaos``-marked fault-injection tier (combined starvation + poison +
-# cancellation serves — slower multi-engine scenarios kept out of the
-# default tier's fast failure signal), then the ``subprocess``-marked
-# tier (forced multi-device CPU-mesh tests — each spawns its own
-# python/JAX process, so they are the slowest and run last).
+# ``slow``-marked tier (long-decode serve scenarios — hundreds of decode
+# steps per test, e.g. the adaptive pattern-refresh lifecycle — kept out
+# of the default tier's fast failure signal), then the ``chaos``-marked
+# fault-injection tier (combined starvation + poison + cancellation
+# serves), then the ``subprocess``-marked tier (forced multi-device
+# CPU-mesh tests — each spawns its own python/JAX process, so they are
+# the slowest and run last).
 #
 #   scripts/run_tests.sh              # all tiers
 #   scripts/run_tests.sh -k decode    # extra pytest args forwarded to all
@@ -14,12 +16,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # exit code 5 = no tests collected (e.g. a -k filter matching nothing in
 # a tier) — a green run, not a failure
-echo "== tier 1: default suite (chaos + subprocess tiers excluded) =="
-python -m pytest -x -q -m "not subprocess and not chaos" "$@"
+echo "== tier 1: default suite (slow + chaos + subprocess tiers excluded) =="
+python -m pytest -x -q -m "not subprocess and not chaos and not slow" "$@"
 
-echo "== tier 2: chaos tier (fault-injection scenarios) =="
+echo "== tier 2: slow tier (long-decode serve scenarios) =="
+python -m pytest -x -q -m "slow and not subprocess and not chaos" "$@" \
+    || { rc=$?; [ "$rc" -eq 5 ]; }
+
+echo "== tier 3: chaos tier (fault-injection scenarios) =="
 python -m pytest -x -q -m "chaos and not subprocess" "$@" \
     || { rc=$?; [ "$rc" -eq 5 ]; }
 
-echo "== tier 3: subprocess tier (forced multi-device CPU meshes) =="
+echo "== tier 4: subprocess tier (forced multi-device CPU meshes) =="
 python -m pytest -x -q -m subprocess "$@" || { rc=$?; [ "$rc" -eq 5 ]; }

@@ -444,6 +444,77 @@ def decode_plan_einsum(
     return jnp.asarray(out, q.dtype).reshape(b, h, dv)
 
 
+def _plan_einsum_sliced(
+    qg: jnp.ndarray,            # (B, Hkv, G, D)
+    kg: jnp.ndarray,            # (B, Hkv, W, bs, D) gathered table blocks
+    vg: jnp.ndarray,            # (B, Hkv, W, bs, Dv)
+    keep_g: jnp.ndarray,        # (B, Hkv, W, G) gathered keep bits
+    valid_g: jnp.ndarray,       # (B, Hkv, W, bs) gathered slot validity
+    counts: jnp.ndarray,        # (B, Hkv)
+    scale: float,
+    out_dtype,
+) -> jnp.ndarray:
+    """Shared masked-softmax core of the width-sliced einsum fallbacks.
+
+    Operates on *gathered* table blocks only — O(B·Hkv·W·bs) FLOPs and
+    bytes instead of the full-cache O(B·Hkv·S).  Table entries at ranks
+    ≥ ``counts`` are repeat-last padding (the kernel's ``w < counts``
+    guard); the ``live`` mask kills them here so the padded copies of the
+    last block are not double-counted.
+    """
+    b, hkv, w, bs, dv = vg.shape
+    live = (jnp.arange(w, dtype=jnp.int32)[None, None, :]
+            < counts[..., None])                       # (B, Hkv, W)
+    logits = jnp.einsum("bkgd,bkwsd->bkgws", qg, kg,
+                        preferred_element_type=jnp.float32) * scale
+    ok = (jnp.moveaxis(keep_g, -1, 2)[..., None]       # (B, Hkv, G, W, 1)
+          & valid_g[:, :, None]                        # (B, Hkv, 1, W, bs)
+          & live[:, :, None, :, None])
+    logits = jnp.where(ok, logits, NEG_INF)
+    flat = logits.reshape(b, hkv, -1, w * bs)
+    ok_f = ok.reshape(b, hkv, -1, w * bs)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(ok_f, jnp.exp(flat - m), 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    pv = jnp.asarray(p / denom, vg.dtype).reshape(b, hkv, -1, w, bs)
+    out = jnp.einsum("bkgws,bkwsd->bkgd", pv, vg,
+                     preferred_element_type=jnp.float32)
+    return jnp.asarray(out, out_dtype).reshape(b, hkv * out.shape[2], dv)
+
+
+def decode_plan_einsum_sliced(
+    q: jnp.ndarray,             # (B, H, D)
+    cache_k: jnp.ndarray,       # (B, Hkv, S, D)
+    cache_v: jnp.ndarray,       # (B, Hkv, S, Dv)
+    plan: DecodePlan,           # one layer's slice
+    valid: jnp.ndarray,         # (B, S) bool
+) -> jnp.ndarray:
+    """Width-sliced einsum fallback: gather only the plan's W table blocks
+    and contract those, so a narrow plan (W < NB, e.g. after a pattern
+    refresh) does proportionally less work on non-TPU backends — the
+    einsum analogue of the kernel's block skipping.  Padding-safe via the
+    ``counts`` guard; same masked-softmax math as :func:`decode_plan_
+    einsum` but a different reduction *order* (per-block gather), so it is
+    dispatched only for W < NB plans — full-width plans keep the bitwise
+    legacy path.
+    """
+    b, h, d = q.shape
+    _, hkv, s, dv = cache_v.shape
+    nb = plan.keep_heads.shape[2]
+    bs = s // nb
+    idx = plan.indices                                 # (B, Hkv, W)
+    exp = idx[..., None, None]
+    kg = jnp.take_along_axis(cache_k.reshape(b, hkv, nb, bs, d), exp, axis=2)
+    vg = jnp.take_along_axis(cache_v.reshape(b, hkv, nb, bs, dv), exp, axis=2)
+    keep_g = jnp.take_along_axis(plan.keep_heads, idx[..., None], axis=2)
+    valid_b = jnp.broadcast_to(valid.reshape(b, 1, nb, bs), (b, hkv, nb, bs))
+    valid_g = jnp.take_along_axis(valid_b, idx[..., None], axis=2)
+    return _plan_einsum_sliced(q.reshape(b, hkv, h // hkv, d), kg, vg,
+                               keep_g, valid_g, plan.counts,
+                               1.0 / (d ** 0.5), q.dtype)
+
+
 def flash_decode_plan(
     q: jnp.ndarray,             # (B, H, D)
     cache_k: jnp.ndarray,       # (B, Hkv, S, D)
@@ -455,12 +526,21 @@ def flash_decode_plan(
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Backend-auto sparse decode over a prebuilt plan (see
-    :func:`resolve_decode_impl`).  Returns (B, H, Dv)."""
+    :func:`resolve_decode_impl`).  Returns (B, H, Dv).
+
+    The einsum fallback dispatches on the plan's static width: W == NB
+    (every plan the scheduler builds without refresh) takes the legacy
+    full-cache contraction bitwise-unchanged; W < NB (refresh-narrowed
+    plans) takes :func:`decode_plan_einsum_sliced`, which only touches
+    the W gathered blocks.
+    """
     impl = resolve_decode_impl(impl)
     if impl == "kernel":
         return flash_decode_sparse_batched(
             q, cache_k, cache_v, plan.indices, plan.counts, plan.keep_heads,
             valid, interpret=interpret)
+    if plan.indices.shape[-1] < plan.keep_heads.shape[-2]:
+        return decode_plan_einsum_sliced(q, cache_k, cache_v, plan, valid)
     return decode_plan_einsum(q, cache_k, cache_v, plan.keep_heads, valid)
 
 
@@ -585,6 +665,42 @@ def decode_plan_einsum_paged(
                               keep_heads, valid)
 
 
+def decode_plan_einsum_sliced_paged(
+    q: jnp.ndarray,             # (B, H, D)
+    pool_k: jnp.ndarray,        # (P, Hkv, ps, D)
+    pool_v: jnp.ndarray,        # (P, Hkv, ps, Dv)
+    page_table: jnp.ndarray,    # (B, NB) int32
+    plan: DecodePlan,
+    valid: jnp.ndarray,         # (B, NB·ps) bool
+) -> jnp.ndarray:
+    """:func:`decode_plan_einsum_sliced` over the block-paged pool: the
+    logical block table is translated through the page table first
+    (``page = page_table[b, indices[b, h, w]]``), then only those W pages
+    are gathered from the pool — the full-cache ``gather_pages``
+    materialization is skipped entirely, which is where the paged
+    fallback's traffic actually goes.
+    """
+    b, h, d = q.shape
+    _, hkv, ps, dv = pool_v.shape
+    nb = page_table.shape[1]
+    idx = plan.indices                                 # (B, Hkv, W)
+    pages = jnp.take_along_axis(
+        jnp.broadcast_to(page_table[:, None, :], (b, hkv, nb)), idx, axis=-1)
+
+    def _per_head(pool_h, pages_h):                    # (P, ps, D), (B, W)
+        return jnp.take(pool_h, pages_h, axis=0)       # (B, W, ps, D)
+
+    gather = jax.vmap(_per_head, in_axes=(1, 1), out_axes=1)
+    kg = gather(pool_k, pages)                         # (B, Hkv, W, ps, D)
+    vg = gather(pool_v, pages)
+    keep_g = jnp.take_along_axis(plan.keep_heads, idx[..., None], axis=2)
+    valid_b = jnp.broadcast_to(valid.reshape(b, 1, nb, ps), (b, hkv, nb, ps))
+    valid_g = jnp.take_along_axis(valid_b, idx[..., None], axis=2)
+    return _plan_einsum_sliced(q.reshape(b, hkv, h // hkv, d), kg, vg,
+                               keep_g, valid_g, plan.counts,
+                               1.0 / (d ** 0.5), q.dtype)
+
+
 def flash_decode_plan_paged(
     q: jnp.ndarray,
     pool_k: jnp.ndarray,
@@ -596,11 +712,19 @@ def flash_decode_plan_paged(
     impl: str = "auto",
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Backend-auto sparse decode over a block-paged cache."""
+    """Backend-auto sparse decode over a block-paged cache.
+
+    Same width dispatch as :func:`flash_decode_plan`: full-width plans
+    (W == NB) keep the legacy gather-then-contract fallback bitwise;
+    refresh-narrowed plans (W < NB) gather only their table pages.
+    """
     impl = resolve_decode_impl(impl)
     if impl == "kernel":
         return flash_decode_sparse_batched_paged(
             q, pool_k, pool_v, page_table, plan.indices, plan.counts,
             plan.keep_heads, valid, interpret=interpret)
+    if plan.indices.shape[-1] < plan.keep_heads.shape[-2]:
+        return decode_plan_einsum_sliced_paged(q, pool_k, pool_v,
+                                               page_table, plan, valid)
     return decode_plan_einsum_paged(q, pool_k, pool_v, page_table,
                                     plan.keep_heads, valid)

@@ -83,6 +83,38 @@ def compact_block_mask(block_mask: jnp.ndarray,
     return indices, kept
 
 
+def ragged_top_mask(scores: jnp.ndarray,
+                    widths: jnp.ndarray) -> jnp.ndarray:
+    """(…, NB) scores + (…,) per-row budgets → bool mask keeping each
+    row's ``widths`` highest-scoring blocks.
+
+    The ragged-budget entry point for plan refresh: budgets come from
+    :func:`repro.serving.width_policy.score_mass_budgets`, so every row
+    (head) keeps a genuinely different number of blocks.  Ties break
+    toward the **higher block index** (the recent/local band), matching
+    the W-cap truncation rule below.  Feed the result through
+    :func:`compact_block_mask` (``width=None``) for ``(indices, counts)``
+    tables — the DecodePlan kernel's ``w < counts`` guard handles the
+    raggedness; no static shape depends on the budgets.
+    """
+    nb = scores.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32), scores.shape)
+    # primary key: score descending; secondary: block index descending
+    order = jnp.lexsort((-idx, -scores.astype(jnp.float32)), axis=-1)
+    rank_desc = jnp.argsort(order, axis=-1)      # inverse permutation
+    return rank_desc < widths[..., None]
+
+
+def ragged_cap_block_mask(block_mask: jnp.ndarray,
+                          widths: jnp.ndarray) -> jnp.ndarray:
+    """Ragged form of :func:`cap_block_mask`: keep each row's ``widths``
+    highest-index active blocks (per-row budgets instead of one scalar
+    W).  Rows with fewer actives than their budget are unchanged."""
+    counts = jnp.sum(block_mask, axis=-1, keepdims=True)
+    rank = jnp.cumsum(block_mask, axis=-1)       # 1-based rank among actives
+    return block_mask & (rank > counts - widths[..., None])
+
+
 def cap_block_mask(block_mask: jnp.ndarray, width: int) -> jnp.ndarray:
     """Boolean form of the W cap: keep each row's ``width`` highest-index
     active blocks — exactly the truncation :func:`compact_block_mask`

@@ -115,13 +115,19 @@ def strip_scores_pallas(
     block_size: int,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Fused last-query-block strips for all heads; (H, block_size, N) f32."""
-    h, n, d = q.shape
-    h_kv = k.shape[0]
+    """Fused last-query-block strips for all heads; (H, block_size, N) f32.
+
+    ``q`` may be shorter than ``k`` along the sequence axis (e.g. just the
+    captured last-block query window during a decode-time refresh) — the
+    key length ``N``, and with it the causal row offsets, always come from
+    ``k``; only ``q``'s last ``block_size`` rows are read.
+    """
+    h, _, d = q.shape
+    h_kv, n = k.shape[:2]
     group = h // h_kv
     nb = n // block_size
     scale = 1.0 / (d ** 0.5)
-    q_hat = q[:, n - block_size:, :]
+    q_hat = q[:, q.shape[1] - block_size:, :]
 
     q_spec = pl.BlockSpec((1, block_size, d), lambda hh, jj: (hh, 0, 0))
     k_spec = pl.BlockSpec((1, block_size, d),
@@ -187,7 +193,8 @@ def compute_strips(
     on_tpu = jax.default_backend() == "tpu"
     if impl == "auto":
         impl = "pallas" if on_tpu else "jnp"
-    if impl == "pallas" and q.shape[1] % block_size:
+    if impl == "pallas" and (k.shape[1] % block_size
+                             or q.shape[1] < block_size):
         # the kernel grid covers whole kv tiles only — a ragged tail would
         # silently drop keys from the softmax denominator
         impl = "jnp"
@@ -199,3 +206,35 @@ def compute_strips(
     from repro.kernels.ops import gqa_head_vmap
     return gqa_head_vmap(
         lambda qh, kh: strip_scores(qh, kh, block_size), q, k)
+
+
+def compute_strips_paged(
+    q_hat: jnp.ndarray,         # (H, block_size, D) recent-query window
+    pool_k: jnp.ndarray,        # (P, Hkv, ps, D) shared page pool
+    page_table: jnp.ndarray,    # (NB,) int32 one slot's logical→page map
+    *,
+    block_size: int,
+    num_blocks: int,            # static: live (block-aligned) block count
+    impl: str = "auto",
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """:func:`compute_strips` over one slot's live paged KV.
+
+    The decode-time re-estimation entry point (``serving/refresh.py``):
+    ``q_hat`` is the slot's captured last-``block_size`` decode queries
+    (positions ``[n − block_size, n)`` for ``n = num_blocks ·
+    block_size``), and K is gathered from the page pool through the
+    slot's page-table prefix — a pure gather (bitwise page contents, same
+    argument as :func:`repro.kernels.decode_attn.gather_pages`), so the
+    strip equals running the contiguous kernel on the slot's cache.  The
+    strip rows being the globally-last queries is exactly the kernels'
+    causal assumption, which is why refresh only fires at block-aligned
+    positions.
+
+    Returns (H, block_size, num_blocks · ps) f32.
+    """
+    _, hkv, ps, d = pool_k.shape
+    kg = jnp.take(pool_k, page_table[:num_blocks], axis=0)
+    k = jnp.moveaxis(kg, 0, 1).reshape(hkv, num_blocks * ps, d)
+    return compute_strips(q_hat, k, block_size=block_size, impl=impl,
+                          interpret=interpret)

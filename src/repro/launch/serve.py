@@ -32,6 +32,14 @@ combine with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get
 N placeholder devices; outputs are bitwise-identical to the unsharded
 serve.  ``--decode-sparse`` additionally reuses the prefill pattern
 dictionary for decode via the build-once DecodePlan.
+
+``--refresh-every N`` (paged + ``--decode-sparse``) turns on adaptive
+pattern refresh during long decodes: every N generated tokens a slot's
+plan row is re-estimated from the strip scores of its recent-query
+window, collapsing the grown dense tail to a bounded horizon under
+per-head score-mass budgets (``--refresh-mass``).  Refresh trades the
+frozen-plan bitwise guarantee for measured decode-traffic reduction;
+with the default 0 the serve is bitwise-identical to the frozen path.
 """
 from __future__ import annotations
 
@@ -112,6 +120,17 @@ def main():
     ap.add_argument("--decode-sparse", action="store_true",
                     help="decode-phase pattern sharing via the build-once "
                     "DecodePlan (needs --method share)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="adaptive pattern refresh: re-estimate a slot's "
+                    "decode plan from the strip scores of its recent-query "
+                    "window every N decode steps (paged + --decode-sparse "
+                    "only; 0 = frozen plans, the bitwise default)")
+    ap.add_argument("--refresh-mass", type=float, default=0.95,
+                    help="per-head cumulative score-mass budget a refreshed "
+                    "row must cover (higher = wider keep-sets)")
+    ap.add_argument("--refresh-tail-threshold", type=float, default=0.0,
+                    help="also refresh early when a slot's dense-tail "
+                    "fraction crosses this value (0 = cadence only)")
     ap.add_argument("--model-parallel", type=int, default=0,
                     help="model-axis size of the serving mesh; > 1 runs "
                     "prefill and decode heads-sharded under shard_map")
@@ -149,6 +168,9 @@ def main():
                      num_pages=args.num_pages,
                      preempt_after_steps=args.preempt_after,
                      prefix_sharing=args.prefix_sharing,
+                     refresh_every=args.refresh_every,
+                     refresh_mass=args.refresh_mass,
+                     refresh_tail_threshold=args.refresh_tail_threshold,
                      seq_buckets=(args.prompt_len,)))
 
     # one mesh for the whole serve: prefill and decode trace under the same
@@ -173,11 +195,20 @@ def main():
                          or m["preempted_count"]) else "")
         if r.prefix_hit:
             lifecycle += " prefix-hit"
+        if r.refreshes:
+            lifecycle += f" refreshes={r.refreshes}"
         err = f" error={r.error}" if r.error is not None else ""
+        # plan-shape telemetry: how dense the slot's decode tail is and what
+        # fraction of its allocated KV the plan row actually touches — the
+        # signals the adaptive refresh acts on (reported with refresh off
+        # too, so a frozen serve shows the tail growth refresh would collapse)
+        plan_shape = (f" tail={r.tail_fraction:.3f}"
+                      f" traffic={r.plan_traffic_fraction:.3f}"
+                      if r.plan_traffic_fraction > 0 else "")
         print(f"req {r.uid}: queue={r.queue_s:.3f}s ttft={r.ttft_s:.3f}s "
               f"prefill={r.prefill_s:.3f}s decode={r.decode_s:.3f}s "
               f"({r.decode_tokens_per_s:.1f} tok/s, "
-              f"{r.finish_reason}/{r.state}){lifecycle}{err} "
+              f"{r.finish_reason}/{r.state}){lifecycle}{plan_shape}{err} "
               f"out={r.output_tokens[:8].tolist()} "
               f"stats={r.pattern_stats}")
     # the engine silently falls back to batch-at-a-time for MLA / the
@@ -201,6 +232,8 @@ def main():
         if args.prefix_sharing and engine.prefix_stats:
             pfx = {k: round(v, 3) for k, v in engine.prefix_stats.items()}
             print(f"prefix sharing: {pfx}")
+        if args.refresh_every > 0:
+            print(f"pattern refresh: { {k: int(v) for k, v in engine.refresh_stats.items()} }")
     elif args.prefill_chunk > 0 and args.scheduler:
         print("note: --prefill-chunk requested but this config cannot be "
               "chunk-admitted (see ServingEngine._chunk_tokens); served "

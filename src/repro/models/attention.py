@@ -275,7 +275,9 @@ def attention_decode(
     plan: Optional[DecodePlan] = None,  # one layer's sparse-decode tables
     decode_impl: str = "auto",          # auto | kernel | einsum
     page_table: Optional[jnp.ndarray] = None,   # (B, NB) block-paged cache
-) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    return_q: bool = False,             # also return this step's (B, H, hd)
+                                        # post-rope query vectors
+) -> Tuple[jnp.ndarray, ...]:
     """One decode step against the KV cache.
 
     ``pos`` is the cache write index — a scalar for the batch-at-a-time
@@ -297,16 +299,24 @@ def attention_decode(
     scatter through the table (no whole-row copies), and attention walks
     the pool via the page-aware kernel twins.  Paged decode is a
     continuous-batching contract: ``pos`` must be the per-slot vector.
+
+    ``return_q`` appends this step's post-rope query vectors ``(B, H,
+    hd)`` to the return tuple — the observable the decode-time pattern
+    refresh accumulates into its recent-query window (the strip kernel
+    re-scores the cache against exactly these vectors).  Default off: the
+    2-tuple contract and its compiled programs are untouched.
     """
     b, _, _ = x.shape
     q, k, v = common.gqa_qkv(params, x)
     q, k = rope_qk(q, k, positions, cfg)
+    ret = ((lambda o, c: (o, c, q[:, :, 0, :])) if return_q
+           else (lambda o, c: (o, c)))
 
     if page_table is not None:
-        return _attention_decode_paged(
+        return ret(*_attention_decode_paged(
             params, cfg, q, k, v, cache_k, cache_v, pos, page_table,
             window=window, sink=sink, valid_mask=valid_mask, plan=plan,
-            decode_impl=decode_impl)
+            decode_impl=decode_impl))
 
     s = cache_k.shape[2]
     if jnp.ndim(pos):                   # per-slot positions: per-row writes
@@ -363,7 +373,7 @@ def attention_decode(
             out = flash_decode_plan(q.squeeze(2), cache_k, cache_v, plan,
                                     mask, impl=decode_impl)
         out = out[:, :, None, :]                  # (B, H, 1, hd)
-        return common.gqa_out(params, out), (cache_k, cache_v)
+        return ret(common.gqa_out(params, out), (cache_k, cache_v))
 
     # Dense decode WITHOUT materializing the expanded cache (§Perf iter 3):
     # fold query heads into (kv_head, group) and contract against the
@@ -379,7 +389,7 @@ def attention_decode(
     out = jnp.einsum("bkgs,bksd->bkgd", jnp.asarray(p, cache_v.dtype),
                      cache_v, preferred_element_type=jnp.float32)
     out = jnp.asarray(out, x.dtype).reshape(b, hkv * g, 1, hd)
-    return common.gqa_out(params, out), (cache_k, cache_v)
+    return ret(common.gqa_out(params, out), (cache_k, cache_v))
 
 
 def _attention_decode_paged(params, cfg, q, k, v, pool_k, pool_v, pos,

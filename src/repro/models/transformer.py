@@ -144,21 +144,30 @@ def layer_prefill(layer, x, cfg: ModelConfig, positions, sp: SharePrefill,
 
 def layer_decode(layer, x, cfg: ModelConfig, cache, pos, positions, *,
                  moe_ffn: bool, window: int = 0, plan=None, valid=None,
-                 decode_impl: str = "auto", page_table=None):
+                 decode_impl: str = "auto", page_table=None,
+                 return_q: bool = False):
     window = window or cfg.sliding_window      # native SWA (Mixtral)
     h = common.rmsnorm(layer["ln1"], x, cfg.rms_norm_eps)
     if _uses_mla(cfg):
+        if return_q:
+            raise ValueError("return_q is a GQA decode contract (the "
+                             "refresh query window); MLA layers never "
+                             "carry a DecodePlan")
         a, cache = mla.mla_decode(layer["attn"], h, cfg, cache[0], cache[1],
                                   pos, positions)
         a = a[:, None, :] if a.ndim == 2 else a
     else:
-        a, cache = attn.attention_decode(
+        res = attn.attention_decode(
             layer["attn"], h, cfg, cache[0], cache[1], pos, positions,
             window=window, valid_mask=valid, plan=plan,
-            decode_impl=decode_impl, page_table=page_table)
+            decode_impl=decode_impl, page_table=page_table,
+            return_q=return_q)
+        a, cache = res[0], res[1]
     x = x + a
     h = common.rmsnorm(layer["ln2"], x, cfg.rms_norm_eps)
     f, _ = _ffn_apply(layer, h, cfg, moe_ffn)
+    if return_q:
+        return x + f, cache, res[2]
     return x + f, cache
 
 
@@ -271,6 +280,7 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                 prefill_len=0,              # int, or (B,) per-slot lengths
                 decode_impl: str = "auto",
                 page_table: Optional[jnp.ndarray] = None,    # (B, NB) int32
+                collect_queries: bool = False,
                 ):
     """One decode step. token (B, 1) → logits (B, V), updated cache.
 
@@ -302,7 +312,13 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
     ``cache["stack"]`` leaves are then the shared ``(L, P, Hkv, ps, hd)``
     page pools (prefix layers unsupported — the pool covers the scanned
     stack) and each attention layer appends/reads through the table; the
-    virtual cache length is ``page_table.shape[1] · page_size``."""
+    virtual cache length is ``page_table.shape[1] · page_size``.
+
+    ``collect_queries`` additionally returns the step's per-layer
+    post-rope query vectors ``(L_stack, B, H, hd)`` as a third output
+    (the scan's ys) — the refresh query-window capture.  Plan-carrying
+    stack-only decode only (the refresh path is paged + sparse); the
+    default-off 2-tuple contract is unchanged."""
     b = (embeds.shape[0] if embeds is not None else token.shape[0])
     pos = jnp.asarray(pos)
     if jnp.ndim(pos) and _uses_mla(cfg):
@@ -344,20 +360,43 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
                             valid=valid, decode_impl=decode_impl)
         new_prefix.append(c)
 
+    qs = None
     if plan is not None:
         plan_xs = jax.tree.map(lambda a: a[n_prefix:], plan)
 
-        def body(x, xs):
-            layer, c, lp = xs
-            x, c = layer_decode(layer, x, cfg, c, pos, positions,
-                                moe_ffn=moe_ffn, window=window, plan=lp,
-                                valid=valid, decode_impl=decode_impl,
-                                page_table=page_table)
-            return x, c
+        if collect_queries:
+            if new_prefix:
+                raise ValueError("collect_queries covers the scanned stack "
+                                 "only (no prefix layers)")
 
-        x, new_caches = jax.lax.scan(
-            body, x, (params["stack"], cache["stack"], plan_xs))
+            def body(x, xs):
+                layer, c, lp = xs
+                x, c, qv = layer_decode(layer, x, cfg, c, pos, positions,
+                                        moe_ffn=moe_ffn, window=window,
+                                        plan=lp, valid=valid,
+                                        decode_impl=decode_impl,
+                                        page_table=page_table,
+                                        return_q=True)
+                return x, (c, qv)
+
+            x, (new_caches, qs) = jax.lax.scan(
+                body, x, (params["stack"], cache["stack"], plan_xs))
+        else:
+            def body(x, xs):
+                layer, c, lp = xs
+                x, c = layer_decode(layer, x, cfg, c, pos, positions,
+                                    moe_ffn=moe_ffn, window=window, plan=lp,
+                                    valid=valid, decode_impl=decode_impl,
+                                    page_table=page_table)
+                return x, c
+
+            x, new_caches = jax.lax.scan(
+                body, x, (params["stack"], cache["stack"], plan_xs))
     else:
+        if collect_queries:
+            raise ValueError("collect_queries requires a DecodePlan (the "
+                             "refresh path is sparse paged decode)")
+
         def body(x, xs):
             layer, c = xs
             x, c = layer_decode(layer, x, cfg, c, pos, positions,
@@ -368,7 +407,10 @@ def decode_step(params, cfg: ModelConfig, token: jnp.ndarray,
         x, new_caches = jax.lax.scan(body, x,
                                      (params["stack"], cache["stack"]))
     logits = logits_from_hidden(params, cfg, x[:, -1, :])
-    return logits, {"prefix": new_prefix, "stack": new_caches}
+    new_cache = {"prefix": new_prefix, "stack": new_caches}
+    if collect_queries:
+        return logits, new_cache, qs
+    return logits, new_cache
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int,

@@ -41,6 +41,16 @@ carries a typed :class:`~repro.serving.errors.RequestError`:
   double-free, an unallocated-page free, or the null page anywhere in a
   release list raises the typed error and leaves the pool untouched, so
   a buggy release path can never alias one KV page into two slots.
+* **Stale refreshed plans** (``EngineConfig.refresh_every`` > 0): a
+  re-estimated DecodePlan row keeps only a bounded dense horizon ahead of
+  the append position, so a slot that decodes past its horizon while a
+  full refresh is deferred (COW-shared pages, cadence not reached) would
+  silently drop its newest KV blocks from attention — the scheduler's
+  pre-step horizon guard extends the row dense-forward
+  (``decode_plan.extend_plan_row_horizon``,
+  ``refresh_stats["horizon_extensions"]``) so appended blocks are always
+  visible; refresh is opt-in and the default-off serve is bitwise the
+  frozen-plan path.
 * **Prefix sharing** (``EngineConfig.prefix_sharing``): published page
   runs are pinned by one index-held reference each and are read-only —
   a copy-on-write fence before every decode step moves writers onto

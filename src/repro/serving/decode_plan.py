@@ -19,8 +19,8 @@ sharded, so each device holds only its local O(local heads) tables and
 shard-locally.  :func:`build_decode_plan_auto` picks between the global and
 sharded builders; both yield semantically identical plans.
 
-Plan lifetime vs cache growth
------------------------------
+Plan lifetime vs cache growth: frozen rows vs refreshed rows
+------------------------------------------------------------
 The tables are built over the *grown* cache length (prefill bucket +
 decode headroom).  Blocks past the prefill region — the "recent tail" that
 :meth:`ServingEngine.grow_cache` appends and decode steps write into — are
@@ -29,6 +29,25 @@ the plan survives cache growth without rebuilds: advancing ``pos`` only
 changes the per-step slot-validity vector, never the tables.  A plan is
 invalidated only by a new prefill (new pattern dictionary) or by growing
 the cache beyond the headroom it was built for.
+
+A row built this way is **frozen**: its sparse region is the prefill-time
+pattern forever, and every generated block lands in the dense tail — after
+thousands of decode steps the tail dominates the row's traffic
+(:func:`plan_row_tail_stats` surfaces this as ``tail_fraction``) and
+decode degenerates toward dense attention.  With
+``EngineConfig(refresh_every=K)`` the scheduler periodically makes rows
+**live** again: the strip kernel re-scores the slot's resident paged KV
+against its captured recent-query window, per-head cumulative-score-mass
+budgets (:func:`repro.serving.width_policy.score_mass_budgets`) pick
+genuinely ragged per-head keep-sets, and :func:`build_refresh_plan_row`
+assembles a replacement row whose dense region collapses to a bounded
+*horizon* of upcoming blocks — spliced through the same
+:func:`update_plan_slot` machinery as admissions.  Refreshed plans may
+carry a **narrowed table width** ``W < NB`` (:func:`set_plan_width`) so
+the kernels' sequential grid — and the einsum fallback's gathered
+traffic — shrinks with the real budgets; admission splices re-widen on
+demand.  Refresh never changes the default-off path: without it every
+plan keeps ``W == NB`` and every row stays frozen, bitwise as before.
 
 In-flight slot splicing (continuous batching)
 ---------------------------------------------
@@ -334,6 +353,165 @@ def plan_block_counts(plan: DecodePlan) -> Tuple[int, int]:
     total = int(plan.counts.size) * nb
     streamed = int(jnp.sum(plan.counts))
     return total, streamed
+
+def plan_row_tail_stats(row: DecodePlan, *, prefill_blocks: int,
+                        num_blocks: Optional[int] = None
+                        ) -> Tuple[float, float]:
+    """Per-slot staleness observables: ``(tail_fraction,
+    traffic_fraction)`` for one slot's plan row (leaves ``(L, 1, Hkv,
+    …)`` or ``(L, Hkv, …)``).
+
+    ``traffic_fraction`` is the row's streamed-block fraction
+    (:func:`plan_traffic_fraction` on this row alone); ``tail_fraction``
+    is the share of those streamed blocks lying at or past
+    ``prefill_blocks`` — the dense recent tail a frozen row accretes.  A
+    frozen row's tail_fraction climbs monotonically with generation
+    length; a refresh collapses it back to the horizon blocks.  Pure
+    accounting — reads the tables, never mutates them.  ``num_blocks``
+    overrides the traffic denominator (the row's own allocation) when the
+    row has been padded out to a wider shared table
+    (:func:`pad_plan_row`) — without it a padded row would under-report
+    its traffic against blocks it can never stream.
+    """
+    w = row.indices.shape[-1]
+    live = (jnp.arange(w, dtype=jnp.int32) < row.counts[..., None])
+    in_tail = live & (row.indices >= prefill_blocks)
+    streamed = jnp.maximum(jnp.sum(row.counts), 1)
+    nb = num_blocks if num_blocks else row.keep_heads.shape[-2]
+    traffic = float(jnp.mean(row.counts.astype(jnp.float32)) / nb)
+    return float(jnp.sum(in_tail) / streamed), traffic
+
+
+def set_plan_width(plan: DecodePlan, width: int) -> DecodePlan:
+    """Re-bucket a plan's static table width W (the kernels' sequential
+    grid extent) without changing what it streams.
+
+    Widening pads ``indices`` by repeating each row's last entry — the
+    standard elided-DMA padding, always lossless.  Narrowing truncates
+    ``indices[…, :width]``, which is lossless **iff** every row's kept
+    count fits (positions ``[count, W)`` are padding); the guard below
+    enforces that with one host sync, so this is only called on the
+    (infrequent) refresh/admission control path, never per decode step.
+    ``counts`` and ``keep_heads`` are untouched — W is presentation,
+    the keep-set is the content.
+    """
+    w = plan.indices.shape[-1]
+    if width == w:
+        return plan
+    if width < w:
+        mx = int(jnp.max(plan.counts))
+        if width < mx:
+            raise ValueError(
+                f"cannot narrow plan to W={width}: a row keeps {mx} blocks")
+        idx = plan.indices[..., :width]
+    else:
+        idx = jnp.concatenate(
+            [plan.indices,
+             jnp.repeat(plan.indices[..., -1:], width - w, axis=-1)],
+            axis=-1)
+    return DecodePlan(idx, plan.counts, plan.keep_heads)
+
+
+def bucket_plan_width(need: int, nb: int, *, slack: int = 0) -> int:
+    """Power-of-two width bucket covering ``need + slack`` blocks, clamped
+    to ``[1, nb]`` — bounds refresh-driven recompiles to O(log NB) widths
+    per geometry instead of one program per observed budget."""
+    want = max(1, min(need + slack, nb))
+    w = 1
+    while w < want:
+        w <<= 1
+    return min(w, nb)
+
+
+def build_refresh_plan_row(
+    q_hat: jnp.ndarray,         # (L, H, bs, D) captured recent queries
+    pool_k: jnp.ndarray,        # (L, P, Hkv, ps, D) stacked page pools
+    page_table_row: jnp.ndarray,  # (NB,) int32 the slot's page map
+    cfg: ModelConfig,
+    *,
+    block_size: int,
+    num_blocks: int,            # live (block-aligned) blocks to re-score
+    table_blocks: int,          # NB of the live batch plan
+    horizon_blocks: int,        # dense lookahead for upcoming appends
+    mass: float,
+    min_width: int = 1,
+    max_width: Optional[int] = None,
+    strip_impl: str = "auto",
+) -> DecodePlan:
+    """Re-estimate one slot's pattern from its live paged KV — the
+    decode-time analogue of the prefill-time pattern build.
+
+    Per layer: :func:`repro.kernels.strip.compute_strips_paged` scores the
+    slot's first ``num_blocks`` resident pages against the captured
+    last-block query window (rows are the globally-last queries, matching
+    the kernel's causal form), the strip is pooled to per-(query-head,
+    block) attention mass, and :func:`score_mass_budgets` +
+    :func:`repro.kernels.indices.ragged_top_mask` turn it into ragged
+    per-head keep-sets — heads get genuinely different widths.  Blocks
+    ``[num_blocks − 1, num_blocks + horizon_blocks)`` are force-kept for
+    every head: the local band plus the bounded dense *horizon* the next
+    ``horizon_blocks · block_size`` appended tokens will land in, which
+    replaces the frozen row's unbounded dense tail.  Blocks past the
+    horizon stay unkept until a later refresh (or a horizon extension)
+    re-admits them.
+
+    Returns a single-row DecodePlan at ``(L, 1, Hkv, table_blocks)``
+    geometry — full table width; the caller re-buckets W afterwards
+    (:func:`set_plan_width`).
+    """
+    num_layers, h = q_hat.shape[:2]
+    hkv = max(cfg.num_kv_heads, 1)
+    g = h // hkv
+    lo = max(0, num_blocks - 1)
+    hi = min(num_blocks + horizon_blocks, table_blocks)
+    forced = (jnp.arange(table_blocks, dtype=jnp.int32) >= lo) \
+        & (jnp.arange(table_blocks, dtype=jnp.int32) < hi)
+
+    from repro.kernels.strip import compute_strips_paged
+    from repro.kernels.indices import ragged_top_mask
+    from repro.serving.width_policy import score_mass_budgets
+
+    per_layer = []
+    for layer in range(num_layers):
+        strips = compute_strips_paged(
+            q_hat[layer], pool_k[layer], page_table_row,
+            block_size=block_size, num_blocks=num_blocks, impl=strip_impl)
+        # strip rows are softmax-normalized, so summing within blocks (and
+        # over the window's rows) gives non-negative attention mass per
+        # (query head, kv block) — the input score_mass_budgets expects
+        scores = jnp.sum(
+            strips.reshape(h, -1, num_blocks, block_size), axis=(1, 3))
+        budgets = score_mass_budgets(scores, mass=mass,
+                                     min_width=min_width,
+                                     max_width=max_width)
+        kh = ragged_top_mask(scores, budgets)         # (H, num_blocks)
+        kh = jnp.pad(kh, [(0, 0), (0, table_blocks - num_blocks)])
+        kh = kh | forced[None, :]
+        per_layer.append(kh.reshape(hkv, g, table_blocks))
+    kh = jnp.stack(per_layer)[:, None]                # (L, 1, Hkv, G, NB)
+    union = jnp.any(kh, axis=3)
+    indices, counts = compact_block_mask(union, width=None)
+    return DecodePlan(indices=indices, counts=counts,
+                      keep_heads=jnp.moveaxis(kh, 3, -1))
+
+
+def extend_plan_row_horizon(row: DecodePlan, lo: int, hi: int) -> DecodePlan:
+    """Cheap horizon extension: force-keep blocks ``[lo, hi)`` for every
+    head of one (full-width) plan row — no strip pass.
+
+    The escape hatch for a refreshed row whose next append would land past
+    its horizon while a full refresh is deferred (e.g. the slot's write
+    page is still COW-shared): appended blocks stay visible at the cost of
+    a few extra dense blocks, and the next real refresh re-sparsifies
+    them.  Returns a row at the same ``NB``-wide geometry (``W == NB``)."""
+    nb = row.keep_heads.shape[-2]
+    cols = jnp.arange(nb, dtype=jnp.int32)
+    forced = (cols >= lo) & (cols < hi)
+    kh = row.keep_heads | forced[:, None]
+    union = jnp.any(kh, axis=-1)
+    indices, counts = compact_block_mask(union, width=None)
+    return DecodePlan(indices=indices, counts=counts, keep_heads=kh)
+
 
 def pad_plan_row(plan: DecodePlan, nb_target: int) -> DecodePlan:
     """Widen a plan built at a shorter cache geometry to ``nb_target``

@@ -214,6 +214,17 @@ class Request:
                                         # a donor's published run, prefill
                                         # launch skipped (bitwise the cold
                                         # serve; COW at the decode boundary)
+    tail_fraction: float = 0.0          # share of this request's plan-row
+                                        # streamed blocks lying in the dense
+                                        # decode tail (past the prefill
+                                        # region) — the staleness signal a
+                                        # frozen row accretes and a refresh
+                                        # collapses; last spliced row's value
+    plan_traffic_fraction: float = 0.0  # this request's own plan-row
+                                        # streamed-block fraction vs dense
+                                        # (last spliced row's value)
+    refreshes: int = 0                  # pattern refreshes this request's
+                                        # slot received during decode
     # preemption carry (scheduler-internal): tokens generated before the
     # eviction, replayed through decode as forced tokens after the resume
     # re-prefills the original prompt
@@ -234,6 +245,9 @@ class Request:
             "waiting_deferred_steps": self.waiting_deferred_steps,
             "preempted_count": self.preempted_count,
             "prefix_hit": float(self.prefix_hit),
+            "tail_fraction": self.tail_fraction,
+            "plan_traffic_fraction": self.plan_traffic_fraction,
+            "refreshes": float(self.refreshes),
         }
 
 
@@ -326,6 +340,34 @@ class EngineConfig:
     # LRU capacity of the prefix index (entries; each pins its page run
     # until evicted — under pool pressure the index sheds entries first)
     prefix_max_entries: int = 32
+    # adaptive pattern refresh during long decode (paged + decode_sparse
+    # only): every ``refresh_every`` decode steps — or sooner, when a
+    # slot's plan-row dense-tail fraction crosses
+    # ``refresh_tail_threshold`` — the scheduler re-estimates that slot's
+    # pattern from its live paged KV (the Pallas strip kernel over the
+    # page pool against the slot's captured recent-query window), converts
+    # the scores to genuinely ragged per-head keep-sets via cumulative
+    # score-mass budgets (``refresh_mass``), and splices the refreshed row
+    # in-flight, collapsing the frozen row's unbounded dense tail to a
+    # bounded horizon of upcoming blocks.  0 disables refresh entirely:
+    # the default-off serve is bitwise-identical to the pre-refresh
+    # engine (same compiled programs, same plan widths, same tokens).
+    refresh_every: int = 0
+    # cumulative attention-mass coverage each head's keep-set must reach
+    # (per-head budget = smallest k whose top-k strip mass ≥ this)
+    refresh_mass: float = 0.95
+    # early-refresh trigger: refresh a slot once its row's dense-tail
+    # fraction (share of streamed blocks past the prefill region) crosses
+    # this, even before the cadence is due.  0 disables the trigger.
+    refresh_tail_threshold: float = 0.0
+    # floor on every head's refreshed keep-set width (blocks)
+    refresh_min_width: int = 1
+    # dense lookahead blocks a refreshed row force-keeps for upcoming
+    # appends; 0 = auto (refresh_every // block_size + 1, so appends
+    # between refreshes always land in kept blocks)
+    refresh_horizon_blocks: int = 0
+    # strip-kernel impl for re-estimation ("auto" | "pallas" | "jnp")
+    refresh_strip_impl: str = "auto"
 
 
 class ServingEngine:
@@ -351,7 +393,7 @@ class ServingEngine:
         # steps vs idle sleeps) — the observable that makes admission
         # interference measurable instead of inferred
         self.phase_s: Dict[str, float] = {"prefill": 0.0, "decode": 0.0,
-                                          "idle": 0.0}
+                                          "idle": 0.0, "refresh": 0.0}
         # paged-cache accounting, reset per serve(): admissions deferred on
         # pool headroom, and the pool's capacity/peak/utilization summary
         # (filled by the paged scheduler)
@@ -366,6 +408,11 @@ class ServingEngine:
         self.handle = None
         self.faults = None
         self.preemptions = 0
+        # adaptive pattern refresh accounting, reset per serve(): rows
+        # re-estimated, refreshes deferred on shared (COW-pending) pages,
+        # and cheap horizon extensions spliced without a strip pass
+        self.refresh_stats: Dict[str, float] = {
+            "refreshes": 0, "deferred_cow": 0, "horizon_extensions": 0}
 
     def slot_occupancy(self) -> float:
         """Mean fraction of decode slot capacity doing useful work during
@@ -496,17 +543,35 @@ class ServingEngine:
         return self._decode_cache[key]
 
     def _decode_fn_paged(self, batch: int, table_blocks: int,
-                         sparse: bool = False):
+                         sparse: bool = False, *,
+                         collect_queries: bool = False):
         """Jitted decode step over the block-paged pool.
 
         The cache operand is the shared ``(L, P, Hkv, ps, hd)`` pool; batch
         geometry lives entirely in the ``(batch, table_blocks)`` page table
         and the per-slot ``pos``/``prompt_lens``/``prefill_lens`` vectors,
         so ONE compiled program serves every bucket mix — the paged
-        scheduler never recompiles on cross-bucket churn."""
-        key = ("paged", batch, table_blocks, sparse, current_rules())
+        scheduler never recompiles on cross-bucket churn.
+
+        ``collect_queries`` compiles the refresh-mode twin (sparse only):
+        the same step additionally returns the per-layer post-rope decode
+        queries ``(L, B, H, hd)`` the scheduler rings up into each slot's
+        recent-query window for strip re-estimation.  It is a separate
+        cache entry — the default-off serve keeps replaying the exact
+        2-output program it always compiled."""
+        key = ("paged_q" if collect_queries else "paged", batch,
+               table_blocks, sparse, current_rules())
         if key not in self._decode_cache:
-            if sparse:
+            if sparse and collect_queries:
+                def fn(params, token, cache, page_table, pos, plens,
+                       pflens, plan):
+                    return self.model.decode(
+                        params, token, cache, pos, plan=plan,
+                        prompt_lens=plens, prefill_len=pflens,
+                        page_table=page_table,
+                        decode_impl=self.ecfg.decode_impl,
+                        collect_queries=True)
+            elif sparse:
                 def fn(params, token, cache, page_table, pos, plens,
                        pflens, plan):
                     return self.model.decode(
@@ -515,6 +580,10 @@ class ServingEngine:
                         page_table=page_table,
                         decode_impl=self.ecfg.decode_impl)
             else:
+                if collect_queries:
+                    raise ValueError(
+                        "collect_queries needs the sparse paged step "
+                        "(refresh implies decode_sparse)")
                 def fn(params, token, cache, page_table, pos, plens,
                        pflens):
                     return self.model.decode(
@@ -699,11 +768,14 @@ class ServingEngine:
         t0 = time.time()
         self.slot_steps = 0
         self.active_slot_steps = 0
-        self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0}
+        self.phase_s = {"prefill": 0.0, "decode": 0.0, "idle": 0.0,
+                        "refresh": 0.0}
         self.pages_exhausted_steps = 0
         self.page_pool_stats = {}
         self.prefix_stats = {}
         self.preemptions = 0
+        self.refresh_stats = {"refreshes": 0, "deferred_cow": 0,
+                              "horizon_extensions": 0}
         self.handle = handle
         self.faults = faults
         if faults is not None:

@@ -1,0 +1,70 @@
+"""Per-slot decode-time pattern-refresh state.
+
+The scheduler's adaptive refresh (``EngineConfig.refresh_every``) needs,
+per occupied slot, the *recent-query window* the strip kernel re-scores
+the slot's resident KV against: the last ``block_size`` post-rope decode
+queries, per layer.  This module owns that bookkeeping as a small
+host-side ring buffer plus the refresh-lifecycle counters the scheduler
+reads and the end-of-serve stats aggregate.
+
+The ring is indexed by ``pos % block_size``, so when a refresh fires at a
+block-aligned position ``n`` the rows ``0 .. block_size-1`` hold exactly
+the queries of positions ``[n - block_size, n)`` **in order** — the
+globally-last queries, which is the strip kernels' causal assumption
+(:mod:`repro.kernels.strip`) and why refresh only ever fires at block
+boundaries.  ``filled`` guards the first window after (re)admission: a
+refresh is only eligible once a full block of consecutive queries has
+been captured, so a preempt → resume cycle (which discards this state
+with the slot) re-warms its window before re-estimating.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RefreshState:
+    """One slot's refresh bookkeeping (host-side, discarded on vacate)."""
+    qring: np.ndarray       # (block_size, L, H, hd) recent post-rope queries
+    last_refresh_pos: int   # pos of the last refresh (admission pos before
+                            # the first one) — the cadence baseline
+    filled: int = 0         # consecutive captured steps, saturating at
+                            # block_size (window warm-up guard)
+    horizon_end: int = 0    # exclusive logical-block bound of the last
+                            # refresh's forced dense horizon; 0 = row still
+                            # frozen (whole tail kept, no horizon to guard)
+    deferred_cow: int = 0   # refreshes deferred on a COW-shared write page
+    extensions: int = 0     # cheap horizon extensions spliced for this slot
+
+    @property
+    def block_size(self) -> int:
+        return self.qring.shape[0]
+
+    def record(self, pos: int, q_step: np.ndarray) -> None:
+        """Capture one decode step's queries (``(L, H, hd)``, position
+        ``pos``) into the ring."""
+        self.qring[pos % self.block_size] = q_step
+        self.filled = min(self.filled + 1, self.block_size)
+
+    def window_ready(self, pos: int) -> bool:
+        """A strip window is usable only at a block-aligned ``pos`` with a
+        full block of consecutive queries behind it."""
+        return pos % self.block_size == 0 and self.filled >= self.block_size
+
+    def window(self) -> np.ndarray:
+        """The (L, H, block_size, hd) query window, oldest row first —
+        valid only when :meth:`window_ready` holds (ring rows are then
+        already position-ordered)."""
+        return np.moveaxis(self.qring, 0, 2)
+
+
+def make_refresh_state(num_layers: int, num_heads: int, head_dim: int,
+                       block_size: int, pos: int,
+                       dtype=np.float32) -> RefreshState:
+    """Fresh state for a just-admitted (or resumed) slot at ``pos``."""
+    return RefreshState(
+        qring=np.zeros((block_size, num_layers, num_heads, head_dim),
+                       dtype),
+        last_refresh_pos=int(pos))

@@ -180,6 +180,35 @@ published — the pack-fusion delta is greedy-exact but not bitwise — and
 the index is cleared (all references released) before the end-of-serve
 pool summary, so the zero-leak invariant is unchanged.
 
+**Adaptive pattern refresh** (``EngineConfig.refresh_every``, paged +
+``decode_sparse``): a frozen DecodePlan row keeps the sparse prefill
+pattern but accretes a *dense* recent tail — every appended block is
+force-kept, so a long decode's traffic fraction climbs back toward 1.
+With refresh on, each occupied slot records its last ``block_size``
+decode queries into a host-side ring (:class:`~repro.serving.refresh.
+RefreshState`; the decode step runs a ``collect_queries`` twin that also
+returns the per-slot query vectors), and every ``refresh_every`` steps —
+or earlier when the slot's tail fraction crosses
+``refresh_tail_threshold`` — the scheduler re-estimates the row from the
+live paged KV: ``decode_plan.build_refresh_plan_row`` scores the slot's
+resident pages against the query window (the strip kernel's paged twin),
+converts per-head attention mass into ragged budgets
+(``width_policy.score_mass_budgets`` → ``indices.ragged_top_mask``), and
+force-keeps only a bounded dense *horizon* of upcoming append blocks in
+place of the unbounded tail.  The refreshed row is spliced like any
+admission row, with the plan width re-bucketed to the global max need
+(``set_plan_width`` / ``bucket_plan_width``, power-of-two widths so
+recompiles stay O(log NB)).  Lifecycle rules: refresh state is created at
+admission (cold or prefix-hit), dropped on vacate AND on preemption (a
+resume re-warms a cold window); a slot any of whose pages are still
+COW-shared (refcount > 1 — donor or hit) defers its refresh untouched
+(``refresh_stats["deferred_cow"]``) and relies on
+``extend_plan_row_horizon`` if an append would outrun its horizon; a
+mid-prefill chunked admission is structurally unreachable (only occupied
+slots tick).  Refresh trades the frozen-plan bitwise guarantee for
+measured traffic reduction; ``refresh_every=0`` (default) never records
+queries, runs the original decode program, and stays bitwise-identical.
+
 MLA latent caches and the non-transformer families never reach this module
 — ``ServingEngine.serve`` routes them through the legacy batch path (the
 dense carve-out; their caches have no per-slot write layout).  Configs a
@@ -203,6 +232,7 @@ import numpy as np
 from repro.serving import decode_plan as dplan
 from repro.serving import paged_cache
 from repro.serving import prefix_cache
+from repro.serving import refresh as refresh_mod
 from repro.serving import sparse_decode
 from repro.serving.chunked_prefill import ChunkedPrefillRun
 from repro.serving.errors import RequestError
@@ -379,6 +409,24 @@ class SlotScheduler:
             self._empty_row = dplan.empty_decode_plan(
                 engine.model.cfg, batch=1, cache_len=self.cache_len,
                 block_size=blk)
+
+        # adaptive pattern refresh (EngineConfig.refresh_every, paged +
+        # sparse only): per-slot recent-query rings, the host-side copy of
+        # each slot's last spliced plan row (tail accounting + cheap
+        # horizon extensions), and the per-slot max kept count behind the
+        # live plan's narrowed table width.  refresh_on=False keeps every
+        # splice on the exact pre-refresh path (full-width plans, same
+        # compiled programs) — the default-off serve is bitwise-unchanged.
+        self.refresh_on = bool(self.paged and self.use_sparse
+                               and ecfg.refresh_every > 0)
+        self.refresh: dict = {}         # slot → refresh_mod.RefreshState
+        self._slot_rows: dict = {}      # slot → last spliced full-width row
+        self._row_need: dict = {}       # slot → host max kept count (width
+                                        # bucketing input)
+        self.horizon_blocks = 0
+        if self.refresh_on:
+            self.horizon_blocks = (ecfg.refresh_horizon_blocks
+                                   or ecfg.refresh_every // blk + 1)
 
         # step-cadence chunked admission (0 = one-shot path)
         self.chunk = engine._chunk_tokens(seq)
@@ -565,9 +613,43 @@ class SlotScheduler:
         one splice, not two; only a slot that actually stays inert for a
         decode step gets the empty row spliced in."""
         for slot in sorted(self._stale_slots):
-            self.plan = dplan.update_plan_slot_auto(
-                self.plan, self._empty_row, slot, self.eng.model.cfg)
+            self._splice_row(slot, self._empty_row)
         self._stale_slots.clear()
+
+    def _splice_row(self, slot: int, row) -> None:
+        """Splice one slot's plan row into the live batch plan — the ONE
+        path every row replacement takes (admission, prefix hit, chunked
+        completion, stale-slot flush, refresh, horizon extension).
+
+        With refresh off this is exactly the historical splice:
+        ``update_plan_slot_auto`` on full-width rows, nothing else — the
+        bitwise default path.  With refresh on it additionally manages the
+        live plan's *narrowed table width*: the plan is widened (power-of-
+        two buckets, :func:`decode_plan.bucket_plan_width`) when an
+        incoming row keeps more blocks than the current W holds, the row
+        is re-bucketed to the plan's W (lossless both ways —
+        :func:`decode_plan.set_plan_width` guards narrowing), and once
+        every live row fits a smaller bucket the whole plan narrows so the
+        kernels' sequential grid — and the einsum fallback's gathered
+        traffic — tracks the real refreshed budgets."""
+        eng = self.eng
+        if not self.refresh_on:
+            self.plan = dplan.update_plan_slot_auto(self.plan, row, slot,
+                                                    eng.model.cfg)
+            return
+        need = int(jnp.max(row.counts))
+        self._row_need[slot] = need
+        cur = self.plan.indices.shape[-1]
+        if need > cur:
+            self.plan = dplan.set_plan_width(
+                self.plan, dplan.bucket_plan_width(need, self.table_blocks))
+            cur = self.plan.indices.shape[-1]
+        self.plan = dplan.update_plan_slot_auto(
+            self.plan, dplan.set_plan_width(row, cur), slot, eng.model.cfg)
+        target = dplan.bucket_plan_width(
+            max(self._row_need.values(), default=1), self.table_blocks)
+        if target < cur:
+            self.plan = dplan.set_plan_width(self.plan, target)
 
     # -- paged-pool bookkeeping -----------------------------------------
     def _bucket_of(self, r) -> int:
@@ -687,6 +769,7 @@ class SlotScheduler:
         npages = len(self.slot_pages.get(victim, ()))
         self.slots[victim] = None
         self._release_pages(victim)
+        self._drop_refresh_slot(victim)
         if self.use_sparse:
             self._stale_slots.add(victim)
         # the full stream generated so far: earlier carry (if this is a
@@ -773,6 +856,153 @@ class SlotScheduler:
         pages[pages == old] = new
         self.alloc.release([old])
         self._cow_copies += 1
+
+    # -- adaptive pattern refresh ---------------------------------------
+    def _init_refresh_slot(self, slot: int, row, pos: int) -> None:
+        """Arm refresh bookkeeping for a just-admitted slot: a fresh
+        recent-query ring (warm-up starts now — a preempt → resume cycle
+        re-warms from scratch) and the host-side reference to the slot's
+        spliced full-width row (tail accounting + horizon extensions)."""
+        cfg = self.eng.model.cfg
+        self.refresh[slot] = refresh_mod.make_refresh_state(
+            cfg.num_layers, cfg.num_heads, cfg.resolved_head_dim,
+            self.page_size, pos)
+        self._slot_rows[slot] = row
+
+    def _drop_refresh_slot(self, slot: int) -> None:
+        """Discard a vacated/preempted slot's refresh state — the next
+        occupant (or a resume of the same request) starts frozen with a
+        cold query window."""
+        self.refresh.pop(slot, None)
+        self._slot_rows.pop(slot, None)
+
+    def _slot_tail_stats(self, slot: int):
+        """(tail_fraction, traffic_fraction) of the slot's current row,
+        against its own page allocation."""
+        row = self._slot_rows.get(slot)
+        if row is None:
+            return 0.0, 0.0
+        return dplan.plan_row_tail_stats(
+            row, prefill_blocks=int(self.pflens[slot]) // self.page_size,
+            num_blocks=len(self.slot_pages.get(slot, ())) or None)
+
+    def _refresh_fenced(self, slot: int) -> bool:
+        """COW fence: refresh defers while any of the slot's pages is
+        still shared (refcount > 1 — the slot is a prefix donor whose run
+        the index pins, or a hit still riding mapped pages).
+
+        A shared row's canonical pattern is the donor's published frozen
+        row; re-estimating it mid-share would fork the keep-set away from
+        what later hits replay while the physical pages are still being
+        COW-remapped underneath.  Deferral ends once sharing does: written
+        tail pages go private at their first COW, and the rest unpin when
+        the index entry is evicted/shed.  Deferred refreshes are counted
+        (``engine.refresh_stats["deferred_cow"]``), never dropped — the
+        cadence check re-fires every block boundary."""
+        for pg in self.slot_pages.get(slot, ()):
+            if (int(pg) != paged_cache.NULL_PAGE
+                    and self.alloc.refcount(int(pg)) > 1):
+                return True
+        return False
+
+    def _horizon_guard(self) -> None:
+        """Keep every refreshed row's dense horizon ahead of its append
+        position — runs before each decode step's kernels.
+
+        A refreshed row keeps only ``horizon_blocks`` of lookahead; if the
+        slot is about to append past it (a refresh was deferred, or the
+        cadence outlived the horizon), splice a cheap horizon *extension*
+        (:func:`decode_plan.extend_plan_row_horizon` — no strip pass) so
+        the appended block is visible to this step's attention.  Frozen
+        rows (``horizon_end == 0``) keep their whole tail and never need
+        this."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            st = self.refresh.get(i)
+            if st is None or st.horizon_end <= 0:
+                continue
+            blk = int(self.pos[i]) // self.page_size
+            if blk < st.horizon_end:
+                continue
+            alloc_blocks = (len(self.slot_pages.get(i, ()))
+                            or self.table_blocks)
+            hi = min(blk + 1 + self.horizon_blocks, alloc_blocks)
+            row = dplan.extend_plan_row_horizon(
+                self._slot_rows[i], st.horizon_end, hi)
+            self._slot_rows[i] = row
+            self._splice_row(i, row)
+            st.horizon_end = hi
+            st.extensions += 1
+            self.eng.refresh_stats["horizon_extensions"] += 1
+
+    def _refresh_tick(self) -> None:
+        """Post-step refresh pass: re-estimate any occupied slot whose
+        cadence is due (or whose row's dense-tail fraction crossed the
+        early-refresh threshold) at a block-aligned position with a warm
+        query window.  Mid-prefill chunked admissions never appear here —
+        a slot is only occupied (``self.slots[i]``) once its final quantum
+        completed and its row was spliced."""
+        ecfg = self.eng.ecfg
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            st = self.refresh.get(i)
+            if st is None:
+                continue
+            pos = int(self.pos[i])
+            if not st.window_ready(pos):
+                continue
+            due = pos - st.last_refresh_pos >= ecfg.refresh_every
+            if not due and ecfg.refresh_tail_threshold > 0:
+                tf, _ = self._slot_tail_stats(i)
+                due = tf >= ecfg.refresh_tail_threshold
+            if not due:
+                continue
+            if self._refresh_fenced(i):
+                st.deferred_cow += 1
+                self.eng.refresh_stats["deferred_cow"] += 1
+                continue
+            self._refresh_slot(i, s, st, pos)
+
+    def _refresh_slot(self, slot: int, s: _Slot, st, pos: int) -> None:
+        """Re-estimate one slot's pattern from its live paged KV: strip
+        kernel over the page-table prefix against the captured query
+        window → per-head score-mass budgets → ragged keep-sets → a
+        replacement row whose dense tail collapses to the bounded horizon
+        — spliced through the same :meth:`_splice_row` path as
+        admissions."""
+        eng = self.eng
+        ecfg = eng.ecfg
+        bs = self.page_size
+        nblk = pos // bs
+        alloc_blocks = len(self.slot_pages.get(slot, ()))
+        if nblk <= 0 or not alloc_blocks:
+            return
+        t0 = time.time()
+        horizon = max(min(self.horizon_blocks, alloc_blocks - nblk), 0)
+        row = dplan.build_refresh_plan_row(
+            jnp.asarray(st.window()), self.cache["stack"][0],
+            jnp.asarray(self.page_table[slot]), eng.model.cfg,
+            block_size=bs, num_blocks=nblk,
+            table_blocks=self.table_blocks, horizon_blocks=horizon,
+            mass=ecfg.refresh_mass, min_width=ecfg.refresh_min_width,
+            strip_impl=ecfg.refresh_strip_impl)
+        self._slot_rows[slot] = row
+        self._splice_row(slot, row)
+        st.last_refresh_pos = pos
+        st.horizon_end = nblk + horizon
+        r = s.req
+        r.refreshes += 1
+        eng.refresh_stats["refreshes"] += 1
+        r.tail_fraction, r.plan_traffic_fraction = \
+            dplan.plan_row_tail_stats(
+                row, prefill_blocks=int(self.pflens[slot]) // bs,
+                num_blocks=alloc_blocks)
+        if r.pattern_stats is not None:
+            r.pattern_stats["decode_traffic_fraction"] = \
+                r.plan_traffic_fraction
+        eng.phase_s["refresh"] += time.time() - t0
 
     def _admit(self) -> None:
         """WAITING → PREFILL: fill free slots from the arrival queue."""
@@ -926,10 +1156,12 @@ class SlotScheduler:
                     eng.model.cfg, cache_len=alloc_len,
                     block_size=max(eng.sp.cfg.block_size, 1))
             stats.update(eng._plan_stats(rplan, alloc_len))
+            r.tail_fraction, r.plan_traffic_fraction = \
+                dplan.plan_row_tail_stats(
+                    rplan, prefill_blocks=seq // self.page_size)
             if self.paged:
                 rplan = dplan.pad_plan_row(rplan, self.table_blocks)
-            self.plan = dplan.update_plan_slot_auto(self.plan, rplan, slot,
-                                                    eng.model.cfg)
+            self._splice_row(slot, rplan)
             self._stale_slots.discard(slot)    # refill replaced the row
             prow = rplan
         self.pos[slot] = seq
@@ -937,6 +1169,8 @@ class SlotScheduler:
         self.pflens[slot] = seq
         self.slots[slot] = s
         r.state = "decode"
+        if self.refresh_on:
+            self._init_refresh_slot(slot, prow, seq)
         self._publish_prefix(r, slot, result.last_logits, prow, stats,
                              plen, seq, width)
 
@@ -1020,14 +1254,19 @@ class SlotScheduler:
         self.slot_pages[slot] = np.array(entry.pages, np.int32)
         self.page_table[slot, : len(entry.pages)] = entry.pages
         if self.use_sparse:
-            self.plan = dplan.update_plan_slot_auto(
-                self.plan, entry.plan_row, slot, eng.model.cfg)
+            r.tail_fraction, r.plan_traffic_fraction = \
+                dplan.plan_row_tail_stats(
+                    entry.plan_row, prefill_blocks=seq // self.page_size,
+                    num_blocks=(seq + self.extra_len) // self.page_size)
+            self._splice_row(slot, entry.plan_row)
             self._stale_slots.discard(slot)
         self.pos[slot] = seq
         self.plens[slot] = entry.plen
         self.pflens[slot] = seq
         self.slots[slot] = s
         r.state = "decode"
+        if self.refresh_on:
+            self._init_refresh_slot(slot, entry.plan_row, seq)
 
     # -- chunked admission ----------------------------------------------
     def _pack_limit(self, seq: int) -> int:
@@ -1291,10 +1530,12 @@ class SlotScheduler:
             if self.use_sparse:
                 rplan = self._plan_row(run, j)
                 rstats.update(eng._plan_stats(rplan, seq + self.extra_len))
+                r.tail_fraction, r.plan_traffic_fraction = \
+                    dplan.plan_row_tail_stats(
+                        rplan, prefill_blocks=seq // self.page_size)
                 if self.paged:
                     rplan = dplan.pad_plan_row(rplan, self.table_blocks)
-                self.plan = dplan.update_plan_slot_auto(
-                    self.plan, rplan, slot, eng.model.cfg)
+                self._splice_row(slot, rplan)
                 self._stale_slots.discard(slot)
                 prow = rplan
             self.pos[slot] = seq
@@ -1302,6 +1543,8 @@ class SlotScheduler:
             self.pflens[slot] = seq
             self.slots[slot] = s
             r.state = "decode"
+            if self.refresh_on:
+                self._init_refresh_slot(slot, prow, seq)
             if run.P == 1:
                 # packed (P > 1) segments are never published: their
                 # logits/KV carry the pack-composition fusion delta
@@ -1326,6 +1569,11 @@ class SlotScheduler:
             for i, s in enumerate(self.slots):
                 if s is not None:
                     self._cow_append_page(i)
+        if self.refresh_on:
+            # a refreshed row's bounded horizon must always cover this
+            # step's append block — extend it (cheaply, no strip pass)
+            # before the kernels run
+            self._horizon_guard()
         occ = [i for i, s in enumerate(self.slots) if s is not None]
         eng.slot_steps += self.nslots
         eng.active_slot_steps += len(occ)
@@ -1335,7 +1583,8 @@ class SlotScheduler:
             toks[i] = self.slots[i].last_tok
         if self.paged:
             decode = eng._decode_fn_paged(self.nslots, self.table_blocks,
-                                          self.use_sparse)
+                                          self.use_sparse,
+                                          collect_queries=self.refresh_on)
             args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
                     jnp.asarray(self.page_table), jnp.asarray(self.pos),
                     jnp.asarray(self.plens), jnp.asarray(self.pflens))
@@ -1344,7 +1593,10 @@ class SlotScheduler:
                                     self.use_sparse)
             args = (eng.params, jnp.asarray(toks)[:, None], self.cache,
                     jnp.asarray(self.pos), jnp.asarray(self.plens))
-        if self.use_sparse:
+        qs = None
+        if self.refresh_on:
+            logits, self.cache, qs = decode(*args, self.plan)
+        elif self.use_sparse:
             logits, self.cache = decode(*args, self.plan)
         else:
             logits, self.cache = decode(*args)
@@ -1355,6 +1607,14 @@ class SlotScheduler:
         # bitwise equal to the legacy path — and only temperature-sampled
         # rows pay a per-slot device dispatch
         logits_h = np.asarray(logits)
+        if qs is not None:
+            # ring up this step's post-rope queries (positions == current
+            # self.pos, pre-increment) into each occupied slot's window
+            qs_h = np.asarray(qs)
+            for i in occ:
+                st = self.refresh.get(i)
+                if st is not None:
+                    st.record(int(self.pos[i]), qs_h[:, i])
         for i in occ:
             self.pos[i] += 1            # this step wrote at the old pos
             s = self.slots[i]
@@ -1391,6 +1651,8 @@ class SlotScheduler:
             elif len(s.outs) >= s.req.max_new_tokens:
                 self._vacate(i, s, "length")
         eng.phase_s["decode"] += time.time() - td
+        if self.refresh_on:
+            self._refresh_tick()
 
     def _vacate(self, slot: int, s: _Slot, reason: str) -> None:
         """Free a slot mid-decode: the request finalizes and the slot's
@@ -1402,6 +1664,7 @@ class SlotScheduler:
         self.slots[slot] = None
         if self.paged:
             self._release_pages(slot)
+        self._drop_refresh_slot(slot)
         if self.use_sparse:
             self._stale_slots.add(slot)
         self._finish(s, reason)

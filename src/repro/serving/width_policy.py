@@ -20,14 +20,25 @@ policies resolve it from observations:
 Both caps always keep each row's most-recent blocks (see
 :mod:`repro.kernels.indices`), preserving the causal local band.
 
+A third policy is **ragged**: :func:`score_mass_budgets` resolves a
+*per-row* budget from block scores instead of one scalar W — each
+(head, row) keeps the smallest top-score prefix holding ``mass`` of its
+total score mass, so heads with concentrated attention get narrow
+budgets and diffuse heads keep wide ones.  This feeds the decode-plan
+refresh path (``serving/refresh.py``): the DecodePlan kernel's
+``w < counts`` guard supports ragged per-row counts natively, so ragged
+budgets need no kernel change — only the table builder
+(:func:`repro.kernels.indices.ragged_top_mask`).
+
 Wired into serving via ``EngineConfig(width_policy=...)``: the engine
 records the observable of every prefill it runs (mean density, max row
 population) and resolves W once per bucket before the next batch compiles.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -81,3 +92,34 @@ def population_width_cap(row_populations: Sequence[float], nb: int, *,
                             percentile))
     w = int(np.ceil(p * safety))
     return max(1, min(w, nb))
+
+
+def score_mass_budgets(scores: jnp.ndarray, *, mass: float,
+                       min_width: int = 1,
+                       max_width: Optional[int] = None) -> jnp.ndarray:
+    """Per-row ragged block budgets from cumulative score mass.
+
+    Args:
+      scores: ``(…, NB)`` **non-negative** per-block scores (e.g.
+        softmax-pooled strip scores, so a row's scores are its attention
+        mass per kv block).
+      mass: fraction of each row's total score mass the kept blocks must
+        cover (e.g. 0.95).
+      min_width: floor on every row's budget (≥ 1 keeps each row's plan
+        non-empty).
+      max_width: optional ceiling; ``None`` allows up to NB.
+
+    Returns ``(…,)`` int32 budgets: per row, the smallest k such that the
+    row's k highest-scoring blocks hold ≥ ``mass`` of its total score
+    mass, clamped to ``[min_width, max_width]``.  All-zero rows resolve to
+    ``min_width``.  The ragged counterpart of the scalar W caps above —
+    consumed by :func:`repro.kernels.indices.ragged_top_mask`.
+    """
+    nb = scores.shape[-1]
+    hi = nb if max_width is None else max(1, min(int(max_width), nb))
+    lo = max(1, min(int(min_width), hi))
+    desc = jnp.sort(scores.astype(jnp.float32), axis=-1)[..., ::-1]
+    cum = jnp.cumsum(desc, axis=-1)
+    target = jnp.float32(mass) * cum[..., -1:]
+    k = 1 + jnp.sum(cum < target, axis=-1).astype(jnp.int32)
+    return jnp.clip(k, lo, hi)

@@ -37,6 +37,20 @@ DECODE = {
          "tokens_per_s_sparse": 150.0, "decode_blocks_total": 180,
          "decode_blocks_skipped": 80, "decode_traffic_fraction": 0.55},
     ],
+    "long_decode": {
+        "points": [
+            {"seq": 256, "decode_tokens": 256,
+             "tokens_per_s_frozen": 60.0, "tokens_per_s_refreshed": 62.0,
+             "traffic_fraction_frozen": 0.8,
+             "traffic_fraction_refreshed": 0.6, "refreshes": 2},
+            {"seq": 256, "decode_tokens": 1024,
+             "tokens_per_s_frozen": 40.0, "tokens_per_s_refreshed": 55.0,
+             "traffic_fraction_frozen": 0.9,
+             "traffic_fraction_refreshed": 0.4, "refreshes": 14},
+        ],
+        "refresh_off_tokens_match": True,
+        "pages_leaked": 0,
+    },
 }
 SERVING = {
     "bench": "serving",
@@ -187,6 +201,63 @@ def test_decode_traffic_fraction_gate():
     base = copy.deepcopy(DECODE)
     base["points"][0].pop("decode_traffic_fraction")
     assert check_bench.compare_decode(base, fresh) == []
+
+
+def test_long_decode_refresh_gates():
+    """Adaptive-refresh gates: the refreshed/frozen traffic ceiling and
+    tokens/s floor are absolute at the longest decode point; the
+    refresh-OFF bitwise match and drained pool have zero tolerance."""
+    # refreshed traffic no longer under 0.6x frozen at the long point
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["points"][1]["traffic_fraction_refreshed"] = 0.7
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("no longer collapses the dense tail" in e for e in errs)
+    # ...but the short point is not gated (the tail is still small there)
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["points"][0]["traffic_fraction_refreshed"] = 0.7
+    assert check_bench.compare_decode(DECODE, fresh) == []
+
+    # the traffic win stopped paying for the re-estimation cost
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["points"][1]["tokens_per_s_refreshed"] = 41.0
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("no longer pays for the re-estimation cost" in e
+               for e in errs)
+    # a loosened gain floor admits the same run
+    assert check_bench.compare_decode(DECODE, fresh,
+                                      min_refresh_tps_gain=1.0) == []
+
+    # the refreshed serve never actually re-estimated
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["points"][1]["refreshes"] = 0
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("refreshes = 0" in e for e in errs)
+
+    # refresh-off must stay bitwise; leaks have zero tolerance
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["refresh_off_tokens_match"] = False
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("refresh_off_tokens_match" in e for e in errs)
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["pages_leaked"] = 3
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("pages_leaked = 3" in e for e in errs)
+
+    # losing the section or a trajectory point is a coverage regression
+    fresh = copy.deepcopy(DECODE)
+    del fresh["long_decode"]
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("long_decode section disappeared" in e for e in errs)
+    fresh = copy.deepcopy(DECODE)
+    fresh["long_decode"]["points"] = fresh["long_decode"]["points"][1:]
+    errs = check_bench.compare_decode(DECODE, fresh)
+    assert any("decode long decode_tokens=256" in e and "missing" in e
+               for e in errs)
+
+    # a pre-refresh baseline gates nothing (transition path)
+    old = copy.deepcopy(DECODE)
+    del old["long_decode"]
+    assert check_bench.compare_decode(old, DECODE) == []
 
 
 def test_baseline_points_gated_only_when_fresh_records_them():
